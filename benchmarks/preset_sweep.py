@@ -1,0 +1,46 @@
+"""Beyond-the-3-cells: apply the winning presets across the train cells.
+
+zero2 (replicated bf16 params + f32 master) where the bf16 copy fits a chip
+(<~12 GB); fsdp (ZeRO-3) otherwise. Records artifacts with labels
+zero2_opt / fsdp_opt; prints before/after roofline fractions.
+"""
+import json
+from pathlib import Path
+
+from benchmarks.roofline import analyse_cell, render_table
+from repro.models import lm
+
+PLAN = [
+    # (arch, preset)  --  zero2 if bf16 params fit per chip, else fsdp
+    ("musicgen-large", "zero2"),
+    ("paligemma-3b", "zero2"),
+    ("mamba2-130m", "zero2"),
+    ("qwen1.5-4b", "zero2"),          # 3.1B -> 6.2GB bf16: fits
+    ("qwen3-8b", "fsdp"),             # 8B -> 16GB: does not fit, ZeRO-3
+    ("recurrentgemma-9b", "fsdp"),
+    ("mistral-large-123b", "fsdp"),
+    ("kimi-k2-1t-a32b", "fsdp"),
+]
+
+
+def main():
+    recs = []
+    for arch, preset in PLAN:
+        cfg = lm.get_config(arch).replace(
+            remat=False, param_dtype="bfloat16", opt_master_weights=True)
+        try:
+            rec = analyse_cell(arch, "train_4k", preset=preset,
+                               cfg_override=cfg, label=f"{preset}_opt")
+            base = json.loads((Path("artifacts/roofline") /
+                               f"{arch}__train_4k.json").read_text())
+            rec["baseline_frac"] = base["roofline_fraction"]
+            print(f"{arch:24s} {preset:6s} "
+                  f"{base['roofline_fraction']:.2%} -> {rec['roofline_fraction']:.2%}")
+            recs.append(rec)
+        except Exception as e:
+            print(f"{arch:24s} {preset:6s} FAIL {type(e).__name__}: {str(e)[:120]}")
+    print(render_table(recs))
+
+
+if __name__ == "__main__":
+    main()

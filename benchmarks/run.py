@@ -1,0 +1,50 @@
+"""Benchmark driver: one entry per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract, then
+each benchmark's own detailed report.
+
+  table1  -- IAND vs ADD residual training proxy (paper Table I)
+  table2  -- serial vs parallel tick-batching weight traffic (Table II /
+             the -43.2% weight-access claim)
+  kernels -- Pallas kernel microbench at paper layer shapes
+  linear  -- beyond-paper linear-ordering scaling (500k-context spiking)
+
+The roofline table (EXPERIMENTS.md S Roofline) is produced separately by
+``python -m benchmarks.roofline --all`` (it compiles against the 256-chip
+production mesh and takes ~1h on this CPU).
+"""
+
+from __future__ import annotations
+
+import time
+
+
+def _run(name, fn):
+    t0 = time.perf_counter()
+    out = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    print(f"CSV,{name},{us:.0f},ok")
+    return out
+
+
+def main() -> None:
+    from benchmarks import (int8_decode, kernel_bench,
+                            linear_attention_scaling, perf_spiking,
+                            table1_iand_vs_add, table2_weight_traffic)
+
+    print("name,us_per_call,derived")
+    _run("table2_weight_traffic", table2_weight_traffic.main)
+    print()
+    _run("kernel_bench", kernel_bench.main)
+    print()
+    _run("linear_attention_scaling", linear_attention_scaling.main)
+    print()
+    _run("perf_spiking_schedule_ladder", perf_spiking.main)
+    print()
+    _run("int8_decode", int8_decode.main)
+    print()
+    _run("table1_iand_vs_add", table1_iand_vs_add.main)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,38 @@
+"""Aggregate dry-run artifacts into the EXPERIMENTS.md S Dry-run table."""
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def main():
+    rows = []
+    for p in sorted(ART.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r["status"] == "OK":
+            mem = r.get("memory", {})
+            args_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+            temp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+            coll = sum(r.get("collective_bytes_per_device", {}).values())
+            rows.append((r["arch"], r["cell"], r["mesh"], "OK",
+                         f"{r['flops']:.2e}", f"{r['bytes_accessed']:.2e}",
+                         f"{coll:.2e}", f"{args_gb:.2f}", f"{temp_gb:.2f}",
+                         f"{r.get('compile_s',0):.0f}s"))
+        else:
+            rows.append((r["arch"], r["cell"], r["mesh"], r["status"],
+                         "-", "-", "-", "-", "-", "-"))
+    hdr = ("| arch | cell | mesh | status | HLO flops/dev* | HLO bytes/dev* | "
+           "coll B/dev* | args GiB/dev | temps GiB/dev** | compile |")
+    sep = "|" + "---|" * 10
+    print(hdr); print(sep)
+    for row in rows:
+        print("| " + " | ".join(row) + " |")
+    print()
+    ok = sum(1 for r in rows if r[3] == "OK")
+    skip = sum(1 for r in rows if r[3] == "SKIP")
+    fail = sum(1 for r in rows if r[3] == "FAIL")
+    print(f"TOTAL: {ok} OK, {skip} SKIP, {fail} FAIL over {len(rows)} cells")
+
+
+if __name__ == "__main__":
+    main()

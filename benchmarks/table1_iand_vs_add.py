@@ -1,0 +1,85 @@
+"""Table-I proxy: IAND residuals match ADD residuals at equal budget.
+
+The paper's Table I shows Spike-IAND-Former matching/beating Spikformer on
+ImageNet (70.32 vs 70.24 @ 8-384, T=4).  ImageNet training is out of scope on
+CPU; the reproducible claim is *IAND does not hurt optimization*: train the
+same tiny architecture with residual=iand vs residual=add on a synthetic
+oriented-grating classification task and compare losses/accuracy.  Also
+verifies the all-spike property holds for IAND (and not for ADD) and reports
+spike sparsity (paper: 73.88% zeros).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import spikformer as sf
+from repro.core.iand import is_binary
+from repro.data.pipeline import DataConfig, make_batch
+
+STEPS = 120
+BATCH = 16
+
+
+def train_variant(residual: str, steps: int = STEPS, seed: int = 0):
+    cfg = sf.SpikformerConfig(embed_dim=48, num_layers=2, num_heads=4, t=4,
+                              img_size=16, num_classes=4, residual=residual,
+                              tokenizer_pools=(False, False, True, True))
+    params, state = sf.init(jax.random.PRNGKey(seed), cfg)
+    dcfg = DataConfig(kind="images", global_batch=BATCH, img_size=16, num_classes=4,
+                      seed=seed)
+
+    def loss_fn(p, s, img, lab):
+        logits, s2 = sf.apply(p, s, img, cfg, train=True)
+        ce = -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(lab.shape[0]), lab])
+        acc = jnp.mean((jnp.argmax(logits, -1) == lab).astype(jnp.float32))
+        return ce, (s2, acc)
+
+    @jax.jit
+    def step(p, s, img, lab):
+        (l, (s2, acc)), g = jax.value_and_grad(loss_fn, has_aux=True)(p, s, img, lab)
+        p = jax.tree_util.tree_map(lambda w, gw: w - 0.05 * gw, p, g)
+        return p, s2, l, acc
+
+    losses, accs = [], []
+    for i in range(steps):
+        b = make_batch(dcfg, i)
+        params, state, l, acc = step(params, state, jnp.asarray(b["image"]),
+                                     jnp.asarray(b["label"]))
+        losses.append(float(l))
+        accs.append(float(acc))
+
+    # all-spike property + sparsity on a held-out batch
+    b = make_batch(dcfg, 10_000)
+    _, _, spikes = sf.apply(params, state, jnp.asarray(b["image"]), cfg,
+                            train=False, return_spikes=True)
+    return {
+        "residual": residual,
+        "final_loss": sum(losses[-10:]) / 10,
+        "final_acc": sum(accs[-10:]) / 10,
+        "all_spike": all(bool(is_binary(s)) for s in spikes),
+        "sparsity": float(sf.spike_sparsity(spikes)),
+    }
+
+
+def main():
+    t0 = time.time()
+    rows = [train_variant("iand"), train_variant("add")]
+    print("table1_iand_vs_add: synthetic Table-I proxy "
+          f"({STEPS} steps, {time.time()-t0:.0f}s)")
+    print(f"{'residual':10s} {'final_loss':>10s} {'final_acc':>9s} "
+          f"{'all_spike':>9s} {'sparsity':>8s}")
+    for r in rows:
+        print(f"{r['residual']:10s} {r['final_loss']:10.4f} {r['final_acc']:9.3f} "
+              f"{str(r['all_spike']):>9s} {r['sparsity']:8.3f}")
+    gap = rows[0]["final_loss"] - rows[1]["final_loss"]
+    print(f"loss gap (iand - add) = {gap:+.4f}  "
+          f"(paper: IAND matches ADD accuracy; |gap| small => claim holds)")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

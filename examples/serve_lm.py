@@ -1,0 +1,10 @@
+"""Batched serving example: continuous-batching greedy decode on a smoke LM.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch.serve import serve
+
+if __name__ == "__main__":
+    serve("llama3.2-1b_smoke", num_requests=8, prompt_len=32, max_new=16,
+          slots=4)

@@ -1,0 +1,14 @@
+"""repro: Spike-IAND-Former -- reconfigurable parallel time-step spiking
+transformer on TPU (JAX + Pallas), with a multi-pod training/serving
+framework covering the 10 assigned LM architectures.
+
+Subpackages:
+    core         the paper's contribution (LIF, IAND, SSA, Spikformer)
+    kernels      Pallas TPU kernels (+ ops wrappers + jnp oracles)
+    models       LM substrate (dense/moe/ssm/hybrid/stubs, spiking mode)
+    data/optim/checkpoint/distributed   production substrate
+    configs      assigned architecture configs (+ paper's own models)
+    launch       mesh, multi-pod dry-run, train/serve launchers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,20 @@
+"""Core spiking-transformer library: the paper's contribution.
+
+Public API:
+    lif, lif_serial, lif_parallel           -- repro.core.lif
+    iand, residual_add, is_binary           -- repro.core.iand
+    ssa, ssa_linear_decode_step             -- repro.core.spiking_attention
+    SpikformerConfig, init, apply           -- repro.core.spikformer
+    TokenizerConfig                         -- repro.core.tokenizer
+    direct_encode, to_bitplanes             -- repro.core.encoding
+"""
+
+from repro.core.iand import iand, is_binary, residual_add
+from repro.core.lif import lif, lif_parallel, lif_serial, surrogate_spike
+from repro.core.spiking_attention import ssa, ssa_linear_decode_step, ssa_linear_state_init
+from repro.core.spikformer import (
+    SPIKFORMER_8_384,
+    SPIKFORMER_8_512,
+    SPIKFORMER_8_768,
+    SpikformerConfig,
+)

@@ -1,0 +1,49 @@
+"""Input encoding: 8-bit images -> spike trains.
+
+The paper's encoding layer (Sec. II, after [Wu et al. 2019]) lets the *first
+convolution* convert 8-bit pixels into spikes across time steps ("direct"
+encoding: the analog image is applied as the drive at every time step and the
+LIF after the first ConvBN produces the spike train).
+
+The accelerator additionally splits the 8-bit input into bitplanes so the
+binary-input PE blocks can be reused for the first layer (Sec. III-A): the
+image x = sum_k 2^k * b_k with b_k binary, so ConvBN(x) = sum_k 2^k Conv(b_k)
+-- eight spike-GEMM passes with power-of-two recombination.  Both paths are
+implemented; they are numerically identical (tested), and on TPU the direct
+bf16 conv is the fast path (DESIGN.md S8.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def direct_encode(image: jax.Array, t: int) -> jax.Array:
+    """(B, H, W, C) in [0, 1] -> (T, B, H, W, C): constant drive repeated over T."""
+    return jnp.broadcast_to(image[None], (t,) + image.shape)
+
+
+def to_bitplanes(image_u8: jax.Array) -> jax.Array:
+    """(..., C) uint8 -> (8, ..., C) binary planes, LSB first."""
+    planes = [(image_u8 >> k) & 1 for k in range(8)]
+    return jnp.stack(planes, axis=0).astype(jnp.float32)
+
+
+def from_bitplanes(planes: jax.Array) -> jax.Array:
+    """Inverse of :func:`to_bitplanes`, recombining with 2^k weights."""
+    weights = (2.0 ** jnp.arange(planes.shape[0])).reshape(
+        (-1,) + (1,) * (planes.ndim - 1)
+    )
+    return jnp.sum(planes * weights, axis=0)
+
+
+def bitplane_conv(conv_apply_fn, conv_params, image_u8: jax.Array) -> jax.Array:
+    """Run a convolution on an 8-bit image via 8 binary-plane passes.
+
+    Equivalent to ``conv(image_u8.astype(f32))`` by linearity; reuses the spike
+    conv path exactly as the accelerator reuses its spike PE blocks.
+    """
+    planes = to_bitplanes(image_u8)  # (8, B, H, W, C)
+    outs = jax.vmap(lambda p: conv_apply_fn(conv_params, p))(planes)
+    return from_bitplanes(outs)

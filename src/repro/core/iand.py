@@ -1,0 +1,39 @@
+"""Spike residual connectives.
+
+The paper replaces Spikformer's residual *addition* (which produces non-spike
+values 0/1/2) with the element-wise IAND of SEW-ResNet [Fang et al. 2021]:
+
+    IAND(x, y) = x AND (NOT y) = x * (1 - y)
+
+With both operands binary the output stays binary, so every downstream multiply
+remains a logical AND -- the "all-spike computation" property.  ``residual_add``
+is kept as the Spikformer baseline (needed for the Table-I comparison).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def iand(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Element-wise IAND: ``x * (1 - y)``. Binary in -> binary out."""
+    return x * (1.0 - y)
+
+
+def residual_add(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Spikformer baseline residual (non-spike output: values may reach 2)."""
+    return x + y
+
+
+def connective(kind: str):
+    if kind == "iand":
+        return iand
+    if kind == "add":
+        return residual_add
+    raise ValueError(f"unknown residual connective: {kind}")
+
+
+def is_binary(x: jax.Array, atol: float = 0.0) -> jax.Array:
+    """Boolean scalar: every element of ``x`` is 0 or 1 (the spike invariant)."""
+    return jnp.all((jnp.abs(x) <= atol) | (jnp.abs(x - 1.0) <= atol))

@@ -1,0 +1,203 @@
+"""Leaky integrate-and-fire neurons with parallel tick-batching.
+
+Paper semantics (Sec. II): a neuron integrates incoming drive, fires a spike if
+(leaked membrane + integrated input) exceeds the threshold, otherwise keeps the
+membrane.  Threshold theta = 0.5, leak lambda = 0.25 (power of two -> a shift in
+the ASIC).  Hard reset to zero on fire:
+
+    u_t = lam * v_{t-1} + I_t
+    s_t = H(u_t - theta)
+    v_t = u_t * (1 - s_t)          (hard reset; soft reset: v_t = u_t - theta*s_t)
+
+Two execution schedules are provided:
+
+* ``lif_serial``   -- ``lax.scan`` over T; the SpinalFlow-style serial
+  tick-batching baseline.  Membrane state is carried through the scan (on real
+  hardware: round-trips through HBM every time step).
+* ``lif_parallel`` -- the paper's fully parallel tick-batching: the T-step
+  membrane chain is *unrolled*, so all T outputs are produced in one fused
+  region and membrane values never materialise outside registers/VMEM.  The
+  reconfigurable-chain semantics of the unrolled neuron (mux settings
+  111/101/000 for T=4/2/1) are exposed via ``chain_len``: the T slots are
+  treated as ``T // chain_len`` independent chains whose membranes reset at
+  chain boundaries.
+
+Training uses a surrogate gradient for the Heaviside (boxcar by default, as in
+SpikingJelly's ATan/rect family); the paper trains the model with standard SNN
+BPTT in PyTorch -- the math here is identical.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+THETA_DEFAULT = 0.5
+LAM_DEFAULT = 0.25
+
+ResetMode = Literal["hard", "soft"]
+
+
+# ---------------------------------------------------------------------------
+# Surrogate-gradient spike function
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_jvp, nondiff_argnums=(1, 2))
+def surrogate_spike(x: jax.Array, width: float = 1.0, kind: str = "boxcar") -> jax.Array:
+    """Heaviside step with a surrogate derivative.
+
+    Forward: ``(x >= 0)`` in ``x.dtype``.
+    Backward (surrogate): boxcar ``1/width * [|x| < width/2]`` or the ATan
+    derivative ``1 / (1 + (pi*x)^2)``.
+    """
+    return (x >= 0.0).astype(x.dtype)
+
+
+@surrogate_spike.defjvp
+def _surrogate_spike_jvp(width, kind, primals, tangents):
+    (x,) = primals
+    (dx,) = tangents
+    y = (x >= 0.0).astype(x.dtype)
+    if kind == "boxcar":
+        g = (jnp.abs(x) < (width / 2.0)).astype(x.dtype) / width
+    elif kind == "atan":
+        g = 1.0 / (1.0 + (jnp.pi * x) ** 2)
+    else:
+        raise ValueError(f"unknown surrogate kind: {kind}")
+    return y, g * dx
+
+
+# ---------------------------------------------------------------------------
+# Serial reference (scan over time steps)
+# ---------------------------------------------------------------------------
+
+def lif_serial(
+    drive: jax.Array,
+    *,
+    theta: float = THETA_DEFAULT,
+    lam: float = LAM_DEFAULT,
+    reset: ResetMode = "hard",
+    v0: jax.Array | None = None,
+    surrogate: str = "boxcar",
+) -> jax.Array:
+    """Serial tick-batching LIF. ``drive``: (T, ...). Returns spikes (T, ...)."""
+    if v0 is None:
+        v0 = jnp.zeros(drive.shape[1:], drive.dtype)
+
+    def step(v, i_t):
+        u = lam * v + i_t
+        s = surrogate_spike(u - theta, kind=surrogate)
+        if reset == "hard":
+            v_new = u * (1.0 - s)
+        else:
+            v_new = u - theta * s
+        return v_new, s
+
+    _, spikes = jax.lax.scan(step, v0, drive)
+    return spikes
+
+
+def lif_serial_with_state(
+    drive: jax.Array,
+    v0: jax.Array,
+    *,
+    theta: float = THETA_DEFAULT,
+    lam: float = LAM_DEFAULT,
+    reset: ResetMode = "hard",
+) -> tuple[jax.Array, jax.Array]:
+    """Like :func:`lif_serial` but also returns the final membrane (for serving)."""
+
+    def step(v, i_t):
+        u = lam * v + i_t
+        s = (u >= theta).astype(drive.dtype)
+        v_new = u * (1.0 - s) if reset == "hard" else u - theta * s
+        return v_new, s
+
+    v_final, spikes = jax.lax.scan(step, v0, drive)
+    return spikes, v_final
+
+
+# ---------------------------------------------------------------------------
+# Parallel tick-batching (unrolled, reconfigurable chains)
+# ---------------------------------------------------------------------------
+
+def lif_parallel(
+    drive: jax.Array,
+    *,
+    theta: float = THETA_DEFAULT,
+    lam: float = LAM_DEFAULT,
+    reset: ResetMode = "hard",
+    chain_len: int | None = None,
+    surrogate: str = "boxcar",
+    iand_skip: jax.Array | None = None,
+) -> jax.Array:
+    """Fully parallel tick-batching LIF with an unrolled membrane chain.
+
+    ``drive``: (T, ...).  ``chain_len`` (default T) configures the
+    reconfigurable unrolled neuron: T slots form ``T // chain_len`` independent
+    chains, each starting from a zero membrane (hardware mux at chain
+    boundaries).  ``chain_len`` in {1, 2, 4} mirrors the paper's three mux
+    settings; any divisor of T is accepted.
+
+    ``iand_skip``: optional spike tensor of the same shape; if given, the IAND
+    residual ``skip * (1 - s)`` is fused into the epilogue (the paper's
+    AND-NOT gate replacing the residual adder).
+
+    The unrolled chain is algebraically identical to :func:`lif_serial`; tests
+    assert bit-exact agreement.  This pure-jnp version is the oracle for the
+    Pallas kernel in ``repro.kernels.lif_parallel``.
+    """
+    t_total = drive.shape[0]
+    if chain_len is None:
+        chain_len = t_total
+    if t_total % chain_len != 0:
+        raise ValueError(f"T={t_total} not divisible by chain_len={chain_len}")
+
+    spikes = []
+    v = jnp.zeros(drive.shape[1:], drive.dtype)
+    for t in range(t_total):
+        if t % chain_len == 0:  # mux: chain boundary -> fresh membrane
+            v = jnp.zeros(drive.shape[1:], drive.dtype)
+        u = lam * v + drive[t]
+        s = surrogate_spike(u - theta, kind=surrogate)
+        v = u * (1.0 - s) if reset == "hard" else u - theta * s
+        spikes.append(s)
+    out = jnp.stack(spikes, axis=0)
+    if iand_skip is not None:
+        out = iand_skip * (1.0 - out)
+    return out
+
+
+def lif(
+    drive: jax.Array,
+    *,
+    theta: float = THETA_DEFAULT,
+    lam: float = LAM_DEFAULT,
+    reset: ResetMode = "hard",
+    schedule: str = "parallel",
+    chain_len: int | None = None,
+    surrogate: str = "boxcar",
+    use_kernel: bool = False,
+) -> jax.Array:
+    """Schedule-dispatching LIF entry point used by the model code.
+
+    ``use_kernel=True`` routes through the Pallas ``lif_parallel`` kernel
+    (interpret mode on CPU); otherwise the pure-jnp unrolled version is used.
+    Both are bit-equivalent to :func:`lif_serial`.
+    """
+    if schedule == "serial":
+        return lif_serial(drive, theta=theta, lam=lam, reset=reset, surrogate=surrogate)
+    if schedule == "parallel":
+        if use_kernel:
+            from repro.kernels.lif_parallel import ops as lif_ops
+
+            return lif_ops.lif_parallel_op(
+                drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len
+            )
+        return lif_parallel(
+            drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len, surrogate=surrogate
+        )
+    raise ValueError(f"unknown schedule: {schedule}")

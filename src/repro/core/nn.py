@@ -1,0 +1,124 @@
+"""Minimal stateful NN primitives for the spiking models (pure JAX, no flax).
+
+Convention: every layer is a pair of functions
+    ``init(key, ...) -> params``            (and optionally a state dict)
+    ``apply(params, x, ...) -> y``
+Parameters are plain dicts of arrays; BatchNorm carries running statistics in a
+separate ``state`` dict threaded through training (the ASIC folds ConvBN at
+deploy time -- ``fold_conv_bn`` reproduces that deploy-time view).
+
+Layers operate on tick-batched tensors: the leading time axis T is folded into
+the batch dimension before any conv/linear (the paper's parallel tick-batching:
+one weight read serves all T time steps) and unfolded afterwards only where the
+LIF chain needs it.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+# -- Linear -----------------------------------------------------------------
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = True, dtype=jnp.float32):
+    k1, _ = jax.random.split(key)
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.uniform(k1, (d_in, d_out), dtype, -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p, x):
+    y = jnp.dot(x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- Conv2d (NHWC) ------------------------------------------------------------
+
+def conv_init(key, c_in: int, c_out: int, ksize: int, *, bias: bool = False, dtype=jnp.float32):
+    fan_in = c_in * ksize * ksize
+    scale = 1.0 / math.sqrt(fan_in)
+    p = {"w": jax.random.uniform(key, (ksize, ksize, c_in, c_out), dtype, -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((c_out,), dtype)
+    return p
+
+
+def conv_apply(p, x, *, stride: int = 1, padding: str = "SAME"):
+    """x: (N, H, W, C). HWIO kernel layout."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        p["w"],
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def maxpool(x, *, window: int = 2, stride: int | None = None):
+    stride = stride or window
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, window, window, 1),
+        window_strides=(1, stride, stride, 1),
+        padding="VALID",
+    )
+
+
+# -- BatchNorm ----------------------------------------------------------------
+
+def bn_init(c: int, dtype=jnp.float32):
+    params = {"scale": jnp.ones((c,), dtype), "bias": jnp.zeros((c,), dtype)}
+    state = {"mean": jnp.zeros((c,), dtype), "var": jnp.ones((c,), dtype)}
+    return params, state
+
+
+def bn_apply(p, state, x, *, train: bool, momentum: float = 0.9, eps: float = 1e-5):
+    """BatchNorm over all leading axes (time folded into batch, as the paper's
+    shared-BN-across-timesteps). Returns (y, new_state)."""
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mean = jnp.mean(x, axes)
+        var = jnp.var(x, axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mean,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+        }
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    y = (x - mean) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_state
+
+
+def fold_conv_bn(conv_p, bn_p, bn_state, eps: float = 1e-5):
+    """Deploy-time ConvBN folding (the accelerator's view of the weights)."""
+    g = bn_p["scale"] * jax.lax.rsqrt(bn_state["var"] + eps)
+    w = conv_p["w"] * g  # broadcast over output-channel (last) axis
+    b = bn_p["bias"] - bn_state["mean"] * g
+    if "b" in conv_p:
+        b = b + conv_p["b"] * g
+    return {"w": w, "b": b}
+
+
+# -- tick-batch reshaping helpers ---------------------------------------------
+
+def fold_time(x):
+    """(T, B, ...) -> (T*B, ...): the parallel tick-batching fold."""
+    return x.reshape((x.shape[0] * x.shape[1],) + x.shape[2:])
+
+
+def unfold_time(x, t: int):
+    """(T*B, ...) -> (T, B, ...)."""
+    return x.reshape((t, x.shape[0] // t) + x.shape[1:])

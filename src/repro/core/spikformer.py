@@ -1,0 +1,215 @@
+"""Spikformer and Spike-IAND-Former (the paper's model, Fig. 2).
+
+Structure: Spiking Tokenizer -> L x {SSA block, MLP block} -> classification
+head.  The paper's variant replaces both residual additions per block with
+element-wise IAND, making every inter-layer tensor binary ("all-spike").
+
+All ConvBN / Linear+BN compute is tick-batched: T folds into the batch so each
+weight is read once per step for all time steps (the parallel tick-batching
+dataflow); only the LIF chains see the unfolded time axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn as cnn
+from repro.core import tokenizer as tok
+from repro.core.iand import connective
+from repro.core.lif import lif
+from repro.core.spiking_attention import ssa
+
+
+@dataclass(frozen=True)
+class SpikformerConfig:
+    """Paper notation A-B = num_layers-embed_dim (e.g. 8-384)."""
+
+    img_size: int = 32
+    in_channels: int = 3
+    num_classes: int = 10
+    embed_dim: int = 384
+    num_layers: int = 8
+    num_heads: int = 12
+    mlp_ratio: float = 4.0
+    t: int = 4                      # time steps (paper supports up to 4)
+    chain_len: int | None = None    # reconfigurable unrolled-LIF chains
+    residual: str = "iand"          # "iand" (paper) | "add" (Spikformer baseline)
+    attn_scale: float = 0.125
+    attn_ordering: str = "quadratic"
+    theta: float = 0.5
+    lam: float = 0.25
+    lif_schedule: str = "parallel"  # "parallel" (paper) | "serial" (SpinalFlow-style)
+    use_kernel: bool = False
+    # tick_fold=False reproduces the SERIAL tick-batching dataflow end to end:
+    # every Linear/BN is applied once PER TIME STEP (T weight reads, membrane
+    # carried across steps) instead of once on the T-folded batch.  This is
+    # the SpinalFlow-style baseline the paper's parallel dataflow replaces.
+    tick_fold: bool = True
+    tokenizer_channels: tuple[int, ...] | None = None
+    tokenizer_pools: tuple[bool, ...] = (False, False, True, True)
+
+    @property
+    def head_dim(self) -> int:
+        return self.embed_dim // self.num_heads
+
+    def tokenizer_config(self) -> tok.TokenizerConfig:
+        chans = self.tokenizer_channels or (
+            self.embed_dim // 8, self.embed_dim // 4, self.embed_dim // 2, self.embed_dim,
+        )
+        return tok.TokenizerConfig(
+            in_channels=self.in_channels,
+            embed_dim=self.embed_dim,
+            stage_channels=chans,
+            pool_stages=self.tokenizer_pools,
+            t=self.t,
+            chain_len=self.chain_len,
+            theta=self.theta,
+            lam=self.lam,
+            lif_schedule=self.lif_schedule,
+            use_kernel=self.use_kernel,
+            tick_fold=self.tick_fold,
+        )
+
+
+# Paper configurations (Table I).
+SPIKFORMER_8_384 = SpikformerConfig(embed_dim=384, num_layers=8, num_heads=12)
+SPIKFORMER_8_512 = SpikformerConfig(embed_dim=512, num_layers=8, num_heads=8)
+SPIKFORMER_8_768 = SpikformerConfig(embed_dim=768, num_layers=8, num_heads=12)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _linear_bn_init(key, d_in, d_out):
+    p = {"lin": cnn.linear_init(key, d_in, d_out)}
+    p["bn"], s = cnn.bn_init(d_out)
+    return p, {"bn": s}
+
+
+def init(key, cfg: SpikformerConfig):
+    keys = jax.random.split(key, 2 + cfg.num_layers)
+    params, state = {}, {}
+    params["tokenizer"], state["tokenizer"] = tok.init(keys[0], cfg.tokenizer_config())
+
+    d, hidden = cfg.embed_dim, int(cfg.embed_dim * cfg.mlp_ratio)
+    for i in range(cfg.num_layers):
+        bk = jax.random.split(keys[1 + i], 6)
+        bp, bs = {}, {}
+        for j, name in enumerate(("q", "k", "v", "proj")):
+            bp[name], bs[name] = _linear_bn_init(bk[j], d, d)
+        bp["fc1"], bs["fc1"] = _linear_bn_init(bk[4], d, hidden)
+        bp["fc2"], bs["fc2"] = _linear_bn_init(bk[5], hidden, d)
+        params[f"block{i}"], state[f"block{i}"] = bp, bs
+
+    params["head"] = cnn.linear_init(keys[-1], d, cfg.num_classes)
+    return params, state
+
+
+# ---------------------------------------------------------------------------
+# apply
+# ---------------------------------------------------------------------------
+
+def _lif(cfg, drive, iand_skip=None):
+    out = lif(
+        drive,
+        theta=cfg.theta,
+        lam=cfg.lam,
+        schedule=cfg.lif_schedule,
+        chain_len=cfg.chain_len,
+        use_kernel=cfg.use_kernel,
+    )
+    if iand_skip is not None:  # fused IAND epilogue (paper's AND-NOT residual)
+        out = iand_skip * (1.0 - out)
+    return out
+
+
+def _linear_bn_lif(cfg, p, s, x, *, train, iand_skip=None):
+    """Tick-batched Linear -> BN -> (unfolded) LIF. x: (T, B, N, Din) spikes.
+
+    With ``tick_fold=False`` the linear+BN run once per time step (the serial
+    dataflow: T weight reads); results are bit-identical, only the schedule
+    differs."""
+    t = x.shape[0]
+    if cfg.tick_fold:
+        y = cnn.linear_apply(p["lin"], cnn.fold_time(x))
+        y, s_new = cnn.bn_apply(p["bn"], s["bn"], y, train=train)
+        drive = cnn.unfold_time(y, t)
+    else:
+        ys = [cnn.linear_apply(p["lin"], x[i]) for i in range(t)]
+        y, s_new = cnn.bn_apply(p["bn"], s["bn"], jnp.stack(ys), train=train)
+        drive = y
+    return _lif(cfg, drive, iand_skip=iand_skip), {"bn": s_new}
+
+
+def _split_heads(x, h):
+    t, b, n, d = x.shape
+    return x.reshape(t, b, n, h, d // h).transpose(0, 1, 3, 2, 4)
+
+
+def _merge_heads(x):
+    t, b, h, n, dh = x.shape
+    return x.transpose(0, 1, 3, 2, 4).reshape(t, b, n, h * dh)
+
+
+def block_apply(bp, bs, x, cfg: SpikformerConfig, *, train: bool):
+    """One Spike-(IAND-)Former block. x: (T, B, N, D) spikes."""
+    res = connective(cfg.residual)
+    ns = {}
+
+    # --- spiking self-attention ---
+    q, ns["q"] = _linear_bn_lif(cfg, bp["q"], bs["q"], x, train=train)
+    k, ns["k"] = _linear_bn_lif(cfg, bp["k"], bs["k"], x, train=train)
+    v, ns["v"] = _linear_bn_lif(cfg, bp["v"], bs["v"], x, train=train)
+    attn = ssa(
+        _split_heads(q, cfg.num_heads),
+        _split_heads(k, cfg.num_heads),
+        _split_heads(v, cfg.num_heads),
+        scale=cfg.attn_scale,
+        ordering=cfg.attn_ordering,
+    )
+    attn = _lif(cfg, _merge_heads(attn))  # attn spikes
+    branch, ns["proj"] = _linear_bn_lif(cfg, bp["proj"], bs["proj"], attn, train=train)
+    x = res(x, branch)
+
+    # --- spiking MLP ---
+    h, ns["fc1"] = _linear_bn_lif(cfg, bp["fc1"], bs["fc1"], x, train=train)
+    branch, ns["fc2"] = _linear_bn_lif(cfg, bp["fc2"], bs["fc2"], h, train=train)
+    x = res(x, branch)
+    return x, ns
+
+
+def apply(params, state, image, cfg: SpikformerConfig, *, train: bool = False,
+          return_spikes: bool = False):
+    """image: (B, H, W, C) in [0,1]. Returns (logits (B, classes), new_state[, spikes])."""
+    new_state = {}
+    x, new_state["tokenizer"] = tok.apply(
+        params["tokenizer"], state["tokenizer"], image, cfg.tokenizer_config(), train=train
+    )
+    spikes_per_block = [x]
+    for i in range(cfg.num_layers):
+        x, new_state[f"block{i}"] = block_apply(
+            params[f"block{i}"], state[f"block{i}"], x, cfg, train=train
+        )
+        spikes_per_block.append(x)
+
+    # Classification head (kept full-precision, as in the paper): rate decoding.
+    feats = x.mean(axis=(0, 2))  # average over time steps and tokens
+    logits = cnn.linear_apply(params["head"], feats)
+    if return_spikes:
+        return logits, new_state, spikes_per_block
+    return logits, new_state
+
+
+def spike_sparsity(spikes_per_block) -> jax.Array:
+    """Fraction of zeros across all spike maps (paper reports 73.88% on CIFAR-10)."""
+    total = sum(s.size for s in spikes_per_block)
+    zeros = sum(jnp.sum(s == 0) for s in spikes_per_block)
+    return zeros / total
+
+
+def num_params(params) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,65 @@
+"""Spiking self-attention (SSA): softmax-free attention over binary Q, K, V.
+
+Spikformer's key observation: with binary (non-negative) Q, K, V the attention
+matrix QK^T is already non-negative, so the softmax can be dropped entirely:
+
+    SSA(Q, K, V) = (Q K^T) V * scale            (then BN + LIF -> spikes)
+
+Two algebraically identical orderings:
+
+* ``quadratic``: (Q K^T) V   -- O(N^2 d); matches the ASIC dataflow (the PE
+  array streams the N x N spike score matrix).
+* ``linear``:    Q (K^T V)   -- O(N d^2); LEGAL ONLY BECAUSE THERE IS NO
+  SOFTMAX.  This is the beyond-paper win on TPU: a spiking transformer scales
+  to 500k-token sequences with an O(d^2) decode state, which the paper's ASIC
+  (vision, N=64) never needed.
+
+All T time steps are tick-batched: T folds into the contraction batch, so the
+MXU reads each weight/score tile once for all time steps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssa(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    scale: float = 0.125,
+    ordering: str = "quadratic",
+) -> jax.Array:
+    """Softmax-free spiking attention.
+
+    q, k, v: (T, B, H, N, Dh) binary spikes. Returns (T, B, H, N, Dh) real-valued
+    attention drive (fed to BN+LIF by the caller to re-spike).
+    """
+    if ordering == "quadratic":
+        scores = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
+        out = jnp.einsum("tbhnm,tbhmd->tbhnd", scores, v)
+    elif ordering == "linear":
+        kv = jnp.einsum("tbhmd,tbhme->tbhde", k, v)
+        out = jnp.einsum("tbhnd,tbhde->tbhne", q, kv)
+    else:
+        raise ValueError(f"unknown ordering: {ordering}")
+    return out * scale
+
+
+def ssa_linear_state_init(b: int, h: int, dh: int, dtype=jnp.float32):
+    """O(d^2) running state for linear-ordering spiking decode: sum_m k_m v_m^T."""
+    return jnp.zeros((b, h, dh, dh), dtype)
+
+
+def ssa_linear_decode_step(state, q_t, k_t, v_t, *, scale: float = 0.125):
+    """One decode step of linear SSA. q_t/k_t/v_t: (B, H, 1, Dh).
+
+    state' = state + k^T v ; out = q state' * scale. O(d^2) per token,
+    independent of context length -- the sub-quadratic serving mode enabled by
+    softmax elimination.
+    """
+    state = state + jnp.einsum("bhmd,bhme->bhde", k_t, v_t)
+    out = jnp.einsum("bhnd,bhde->bhne", q_t, state) * scale
+    return state, out

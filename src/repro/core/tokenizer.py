@@ -1,0 +1,91 @@
+"""Spiking Tokenizer: convolutional spiking patch embedding + downsampling.
+
+Paper Sec. II: the tokenizer generates spiking patch embeddings; its first
+convolution is the *encoding layer* [Wu et al. 2019], converting 8-bit image
+inputs into spike signals across the time steps (direct encoding: the analog
+frame drives the first LIF at every tick).  Subsequent stages are
+ConvBN + LIF (+ MaxPool) operating purely on spikes, tick-batched.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn as cnn
+from repro.core.lif import lif
+
+
+@dataclass(frozen=True)
+class TokenizerConfig:
+    in_channels: int = 3
+    embed_dim: int = 384
+    stage_channels: tuple[int, ...] = (48, 96, 192, 384)
+    pool_stages: tuple[bool, ...] = (False, False, True, True)  # CIFAR: 32 -> 8
+    t: int = 4
+    chain_len: int | None = None
+    theta: float = 0.5
+    lam: float = 0.25
+    lif_schedule: str = "parallel"
+    use_kernel: bool = False
+    tick_fold: bool = True   # False: conv applied once per tick (serial dataflow)
+
+
+def init(key, cfg: TokenizerConfig):
+    params, state = {}, {}
+    c_in = cfg.in_channels
+    keys = jax.random.split(key, len(cfg.stage_channels))
+    for i, c_out in enumerate(cfg.stage_channels):
+        params[f"conv{i}"] = cnn.conv_init(keys[i], c_in, c_out, 3)
+        params[f"bn{i}"], state[f"bn{i}"] = cnn.bn_init(c_out)
+        c_in = c_out
+    assert cfg.stage_channels[-1] == cfg.embed_dim
+    return params, state
+
+
+def _lif(cfg: TokenizerConfig, drive):
+    return lif(
+        drive,
+        theta=cfg.theta,
+        lam=cfg.lam,
+        schedule=cfg.lif_schedule,
+        chain_len=cfg.chain_len,
+        use_kernel=cfg.use_kernel,
+    )
+
+
+def apply(params, state, image, cfg: TokenizerConfig, *, train: bool):
+    """image: (B, H, W, C) in [0, 1]. Returns (spikes (T, B, N, D), new_state)."""
+    new_state = {}
+    # Stage 0 -- encoding layer: conv once (drive identical across ticks), then
+    # broadcast over T and let the LIF temporal dynamics produce the spike train.
+    y = cnn.conv_apply(params["conv0"], image)
+    y, new_state["bn0"] = cnn.bn_apply(params["bn0"], state["bn0"], y, train=train)
+    if cfg.pool_stages[0]:
+        y = cnn.maxpool(y)
+    drive = jnp.broadcast_to(y[None], (cfg.t,) + y.shape)
+    x = _lif(cfg, drive)  # (T, B, H, W, C0) spikes
+
+    # Remaining stages: tick-batched ConvBN on spikes, LIF unfolded over T
+    # (tick_fold=False: conv per time step = T weight reads, serial dataflow).
+    for i in range(1, len(cfg.stage_channels)):
+        if cfg.tick_fold:
+            flat = cnn.fold_time(x)  # (T*B, H, W, C): one weight read for all T
+            y = cnn.conv_apply(params[f"conv{i}"], flat)
+            y, new_state[f"bn{i}"] = cnn.bn_apply(params[f"bn{i}"], state[f"bn{i}"], y, train=train)
+            if cfg.pool_stages[i]:
+                y = cnn.maxpool(y)
+            x = _lif(cfg, cnn.unfold_time(y, cfg.t))
+        else:
+            ys = jnp.stack([cnn.conv_apply(params[f"conv{i}"], x[j])
+                            for j in range(cfg.t)])
+            y, new_state[f"bn{i}"] = cnn.bn_apply(params[f"bn{i}"], state[f"bn{i}"],
+                                                  cnn.fold_time(ys), train=train)
+            if cfg.pool_stages[i]:
+                y = cnn.maxpool(y)
+            x = _lif(cfg, cnn.unfold_time(y, cfg.t))
+
+    t, b, h, w, d = x.shape
+    return x.reshape(t, b, h * w, d), new_state

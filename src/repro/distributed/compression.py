@@ -1,0 +1,84 @@
+"""Error-feedback int8 gradient compression for the cross-pod all-reduce.
+
+At 1000+-node scale the slowest link is the pod-to-pod (DCN) gradient
+all-reduce.  Standard mitigation: quantize gradients to int8 with a per-block
+scale before the wire, keep the quantization residual in an error-feedback
+buffer added to the next step's gradient (Seide et al.; 1-bit Adam family).
+Convergence-neutral in expectation because the error is re-injected.
+
+Pure-jnp building blocks (shardable, differentiation not needed -- applied to
+grads):
+
+    compressed, scales = compress(g)
+    g_hat              = decompress(compressed, scales)
+    g_out, new_residual = error_feedback_step(g, residual)
+
+The launcher applies this around the ``pod``-axis reduction: within-pod
+reduction stays full-precision (ICI is fast), only the pod-crossing summand
+is quantized -- see ``repro.launch.train``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = x.reshape(-1)
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), x.dtype)])
+    return flat, n
+
+
+def compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """float grad -> (int8 blocks, f32 per-block scales)."""
+    flat, _ = _pad_to_block(g.astype(jnp.float32))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def decompress(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def roundtrip(g: jax.Array) -> jax.Array:
+    """Quantize-dequantize (what the wire sees)."""
+    q, s = compress(g)
+    return decompress(q, s, g.shape, g.dtype)
+
+
+def error_feedback_step(g: jax.Array, residual: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Returns (wire-ready grad estimate, new residual).
+
+    g_corrected = g + residual; g_hat = Q(g_corrected);
+    residual' = g_corrected - g_hat.
+    """
+    corrected = g.astype(jnp.float32) + residual
+    g_hat = roundtrip(corrected)
+    return g_hat.astype(g.dtype), corrected - g_hat
+
+
+def tree_error_feedback(grads, residuals):
+    """Apply error-feedback compression leaf-wise over a grad pytree."""
+    pairs = jax.tree_util.tree_map(error_feedback_step, grads, residuals)
+    g_hat = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                   is_leaf=lambda x: isinstance(x, tuple))
+    new_res = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+    return g_hat, new_res
+
+
+def init_residuals(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

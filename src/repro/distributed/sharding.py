@@ -1,0 +1,144 @@
+"""Logical-axis sharding rules and activation constraints.
+
+Mesh axes: ``(data, model)`` single-pod, ``(pod, data, model)`` multi-pod
+(DESIGN.md S4).  Parameters are 2-D sharded (FSDP over ``data`` x TP over
+``model``) and replicated over ``pod``; the batch is sharded over
+``(pod, data)``.  Model code references LOGICAL axes; the active rule set
+(installed by the launcher / dry-run) maps them to mesh axes, so hillclimbing
+a sharding change = swapping a rules dict, not editing model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# logical axis -> mesh axes (None = replicated)
+BASE_RULES: dict[str, Any] = {
+    "batch": ("data",),
+    "seq": None,              # sequence parallelism off by default
+    "embed": None,            # activation d_model dim
+    "heads": "model",
+    "kv_heads": "model",
+    "ffn": "model",
+    "vocab": "model",
+    "expert": "data",
+    "expert_group": "data",   # MoE dispatch groups (aligned with the DP axis)
+    "moe_dispatch": "model",  # E dim of the (G, E, C, D) dispatch buffer
+    "moe_slots": None,        # slot dim of expert-major (E, G*C, D) tensors
+    "cache_seq": "model",     # decode KV cache sharded along sequence
+    "fsdp": "data",           # parameter FSDP axis
+    "tp": "model",            # parameter tensor-parallel axis
+}
+
+MULTI_POD_OVERRIDES: dict[str, Any] = {
+    "batch": ("pod", "data"),  # pod axis is pure DP
+}
+
+
+# Named rule presets -- the sharding hillclimb lever (EXPERIMENTS.md S Perf).
+#   base     : 2-D FSDPxTP -- batch over data, heads/ffn/vocab over model
+#              (Megatron-style: 2 activation all-reduces per block-half).
+#   fsdp     : pure ZeRO-3 -- batch over (data x model) = 1 seq/chip, weights
+#              gathered per layer, NO tensor parallelism: activation
+#              all-reduces vanish; collective = weight AG + grad RS.
+#   fsdp_tp4 : hybrid -- batch over (data, model/4)... expressed as batch over
+#              data only with heads/ffn over model (= base) but sequence-
+#              sharded activations between blocks (Megatron-SP).
+PRESET_OVERRIDES: dict[str, dict[str, Any]] = {
+    "base": {},
+    "fsdp": {
+        "batch": ("data", "model"),
+        "heads": None,
+        "kv_heads": None,
+        "ffn": None,
+        "vocab": None,
+        "expert_group": ("data", "model"),
+        "moe_dispatch": None,
+        "expert": None,                 # experts gathered per layer (ZeRO-3)
+        "moe_slots": ("data", "model"),
+        "cache_seq": None,
+    },
+    "sp": {  # sequence-parallel residual stream (Megatron-SP style)
+        "seq": "model",
+    },
+    # ZeRO-2: replicate the (bf16) params -- no weight all-gathers in
+    # fwd/bwd; shard optimizer states; collective = grad all-reduce +
+    # updated-param all-gather. Right answer for models whose bf16 copy
+    # fits per-chip (e.g. llama3.2-1b: 2.5 GB).
+    "zero2": {
+        "batch": ("data", "model"),
+        "heads": None,
+        "kv_heads": None,
+        "ffn": None,
+        "vocab": None,
+        "expert_group": ("data", "model"),
+        "moe_dispatch": None,
+        # experts replicated for compute; dispatch slots stay token-sharded
+        # (no G<->E resharding: the whole MoE block is device-local)
+        "expert": None,
+        "moe_slots": ("data", "model"),
+        "cache_seq": None,
+        "params": "replicated",
+    },
+}
+
+
+def make_rules(*, multi_pod: bool = False, preset: str = "base",
+               **overrides) -> dict[str, Any]:
+    rules = dict(BASE_RULES)
+    rules.update(PRESET_OVERRIDES[preset])
+    if multi_pod:
+        rules.update(MULTI_POD_OVERRIDES)
+        if preset == "fsdp":
+            rules["batch"] = ("pod", "data", "model")
+    rules.update(overrides)
+    return rules
+
+
+_ACTIVE_RULES: dict[str, Any] | None = None
+
+
+@contextlib.contextmanager
+def use_rules(rules: dict[str, Any] | None):
+    """Install sharding rules for the duration of a trace/lowering."""
+    global _ACTIVE_RULES
+    prev = _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+    try:
+        yield
+    finally:
+        _ACTIVE_RULES = prev
+
+
+def active_rules() -> dict[str, Any] | None:
+    return _ACTIVE_RULES
+
+
+def spec(*logical_names: str | None, rules: dict[str, Any] | None = None) -> P:
+    """Build a PartitionSpec from logical axis names (None = replicated dim)."""
+    r = rules if rules is not None else (_ACTIVE_RULES or {})
+    axes = []
+    for name in logical_names:
+        if name is None:
+            axes.append(None)
+        else:
+            axes.append(r.get(name))
+    return P(*axes)
+
+
+def constrain(x: jax.Array, *logical_names: str | None) -> jax.Array:
+    """Apply with_sharding_constraint if rules are active; no-op otherwise.
+
+    No-op keeps single-device tests/examples mesh-free.
+    """
+    if _ACTIVE_RULES is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec(*logical_names))
+
+
+def param_spec(*logical_names: str | None, rules: dict[str, Any] | None = None) -> P:
+    return spec(*logical_names, rules=rules)

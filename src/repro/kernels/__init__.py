@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the compute hot-spots (validated via interpret mode).
+
+lif_parallel      -- unrolled reconfigurable multi-timestep LIF (+fused IAND)
+spiking_attention -- tick-batched softmax-free binary QK^T V
+spike_matmul      -- T-folded spike x weight GEMM (im2col 3x3 / 1x1 / matmul)
+"""

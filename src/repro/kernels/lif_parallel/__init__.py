@@ -1,0 +1,1 @@
+from repro.kernels.lif_parallel.ops import lif_iand_op, lif_parallel_op

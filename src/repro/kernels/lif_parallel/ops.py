@@ -1,0 +1,95 @@
+"""Jitted wrapper for the lif_parallel Pallas kernel with custom VJP.
+
+Accepts arbitrary (T, ...) shapes: features are flattened to (T, N), padded to
+lane alignment, and restored. The custom VJP routes the backward pass through
+the backward Pallas kernel (chain recompute in VMEM), matching JAX autodiff of
+the jnp oracle with the boxcar surrogate.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lif_parallel import kernel as K
+
+_INTERPRET = jax.default_backend() != "tpu"
+_SURR_WIDTH = 1.0
+
+
+def _flatten(drive):
+    t = drive.shape[0]
+    return drive.reshape(t, -1), drive.shape
+
+
+def _pad_lanes(x):
+    n = x.shape[1]
+    pad = (-n) % 128
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x, n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _lif_op(drive2d, chain_len, lam, theta, reset):
+    out = K.lif_parallel_fwd(
+        drive2d, chain_len=chain_len, lam=lam, theta=theta, reset=reset,
+        skip=None, interpret=_INTERPRET)
+    return out
+
+
+def _lif_op_fwd(drive2d, chain_len, lam, theta, reset):
+    return _lif_op(drive2d, chain_len, lam, theta, reset), drive2d
+
+
+def _lif_op_bwd(chain_len, lam, theta, reset, drive2d, g):
+    dx = K.lif_parallel_bwd(
+        drive2d, g, chain_len=chain_len, lam=lam, theta=theta, reset=reset,
+        width=_SURR_WIDTH, interpret=_INTERPRET)
+    return (dx,)
+
+
+_lif_op.defvjp(_lif_op_fwd, _lif_op_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("chain_len", "lam", "theta", "reset"))
+def lif_parallel_op(
+    drive: jax.Array,
+    *,
+    chain_len: int | None = None,
+    lam: float = 0.25,
+    theta: float = 0.5,
+    reset: str = "hard",
+) -> jax.Array:
+    """Unrolled parallel tick-batching LIF. drive: (T, ...) -> spikes (T, ...)."""
+    t = drive.shape[0]
+    chain_len = chain_len or t
+    flat, shape = _flatten(drive)
+    padded, n = _pad_lanes(flat)
+    out = _lif_op(padded, chain_len, float(lam), float(theta), reset)
+    return out[:, :n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chain_len", "lam", "theta", "reset"))
+def lif_iand_op(
+    drive: jax.Array,
+    skip: jax.Array,
+    *,
+    chain_len: int | None = None,
+    lam: float = 0.25,
+    theta: float = 0.5,
+    reset: str = "hard",
+) -> jax.Array:
+    """LIF with fused IAND epilogue: ``skip * (1 - LIF(drive))`` (inference path)."""
+    t = drive.shape[0]
+    chain_len = chain_len or t
+    flat, shape = _flatten(drive)
+    skip_flat, _ = _flatten(skip)
+    padded, n = _pad_lanes(flat)
+    skip_p, _ = _pad_lanes(skip_flat)
+    out = K.lif_parallel_fwd(
+        padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
+        reset=reset, skip=skip_p, interpret=_INTERPRET)
+    return out[:, :n].reshape(shape)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the lif_parallel kernel (delegates to repro.core.lif)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lif import lif_parallel as _core_lif_parallel
+
+
+def lif_parallel_ref(
+    drive: jax.Array,
+    *,
+    chain_len: int | None = None,
+    lam: float = 0.25,
+    theta: float = 0.5,
+    reset: str = "hard",
+    skip: jax.Array | None = None,
+) -> jax.Array:
+    """(T, N) drive -> (T, N) spikes; optional fused IAND with ``skip``."""
+    return _core_lif_parallel(
+        drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
+        iand_skip=skip,
+    )
+
+
+def lif_parallel_ref_grad(drive, g, **kw):
+    """VJP of the oracle w.r.t. drive (for backward-kernel validation)."""
+    _, vjp = jax.vjp(lambda d: lif_parallel_ref(d, **kw), drive)
+    (dx,) = vjp(g)
+    return dx

@@ -1,0 +1,1 @@
+from repro.kernels.spike_matmul.ops import conv1x1_op, conv3x3_op, spike_matmul_op

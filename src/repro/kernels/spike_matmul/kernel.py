@@ -1,0 +1,66 @@
+"""Pallas TPU kernel: T-folded spike x weight GEMM.
+
+The accelerator's 8x9 PE array supports 3x3 conv, 1x1 conv and matmul through
+one vectorized dataflow with two accumulation directions (Fig. 4/6).  The TPU
+analogue is ONE tiled GEMM schedule feeding the MXU: 3x3 conv arrives as an
+im2col GEMM, 1x1 conv and matmul arrive directly (ops.py does the folding).
+Time steps are folded into the M dimension, so every weight tile is read from
+HBM once for all T time steps -- the paper's single-weight-read property
+(measured in benchmarks/table2_weight_traffic.py).
+
+Grid (M/bm, C/bc, K/bk); K is the innermost (arbitrary-order) axis with a VMEM
+f32 accumulator, written back on the last K step. Tiles are 128-aligned for
+the MXU. Spike operands are {0,1} in the input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def matmul_kernel(x_ref, w_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _tile(dim: int, prefs: tuple[int, ...]) -> int:
+    for cand in prefs:
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def spike_matmul_fwd(x: jax.Array, w: jax.Array, *, interpret: bool) -> jax.Array:
+    """x: (M, K) spikes, w: (K, C) weights -> (M, C) f32 accumulated."""
+    m, k = x.shape
+    _, c = w.shape
+    bm = _tile(m, (512, 256, 128, 64, 32, 16, 8))
+    bc = _tile(c, (512, 256, 128))
+    bk = _tile(k, (512, 256, 128))
+    grid = (m // bm, c // bc, k // bk)
+    return pl.pallas_call(
+        matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bc), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bc), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bc), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,73 @@
+"""Jitted wrappers mapping the model's three layer types onto ONE GEMM kernel.
+
+Mirrors the accelerator's reconfigurable PE dataflow (Fig. 4): the same array
+serves 3x3 conv (im2col -> GEMM, the "diagonal accumulation" direction), 1x1
+conv and matmul (direct GEMM, the "horizontal accumulation" direction).
+Inputs are spike tensors with T already folded into the leading dim, so each
+weight tile is fetched once for all time steps.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spike_matmul import kernel as K
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_to(x, axis, mult):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, size
+
+
+@jax.jit
+def spike_matmul_op(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, K) spikes x (K, C) -> (M, C) f32. Pads all dims to 128 alignment."""
+    xp, m = _pad_to(x, 0, 128)
+    xp, k = _pad_to(xp, 1, 128)
+    wp, _ = _pad_to(w, 0, 128)
+    wp, c = _pad_to(wp, 1, 128)
+    out = K.spike_matmul_fwd(xp, wp, interpret=_INTERPRET)
+    return out[:m, :c]
+
+
+@jax.jit
+def conv1x1_op(x: jax.Array, w: jax.Array) -> jax.Array:
+    """1x1 conv as direct GEMM. x: (N, H, W, Cin), w: (Cin, Cout)."""
+    n, h, wd, c = x.shape
+    out = spike_matmul_op(x.reshape(n * h * wd, c), w)
+    return out.reshape(n, h, wd, w.shape[1])
+
+
+def _im2col(x: jax.Array, ksize: int = 3) -> jax.Array:
+    """(N, H, W, C) -> (N*H*W, ksize*ksize*C) patches, SAME padding."""
+    n, h, w, c = x.shape
+    p = ksize // 2
+    xp = jnp.pad(x, ((0, 0), (p, p), (p, p), (0, 0)))
+    cols = [
+        xp[:, i : i + h, j : j + w, :]
+        for i in range(ksize)
+        for j in range(ksize)
+    ]
+    patches = jnp.concatenate(cols, axis=-1)  # (N, H, W, k*k*C)
+    return patches.reshape(n * h * w, ksize * ksize * c)
+
+
+@jax.jit
+def conv3x3_op(x: jax.Array, w: jax.Array) -> jax.Array:
+    """3x3 conv as im2col GEMM. x: (N, H, W, Cin), w: (3, 3, Cin, Cout)."""
+    n, h, wd, c = x.shape
+    cout = w.shape[-1]
+    cols = _im2col(x, 3)                       # (N*H*W, 9*Cin)
+    wmat = w.reshape(9 * c, cout)              # HWIO row-major matches im2col order
+    out = spike_matmul_op(cols, wmat)
+    return out.reshape(n, h, wd, cout)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracles for the spike_matmul kernel (GEMM / 1x1 conv / 3x3 conv)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spike_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, K) x (K, C) -> (M, C) in f32 accumulation."""
+    return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def conv1x1_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (N, H, W, Cin), w: (Cin, Cout)."""
+    return jnp.einsum("nhwc,cd->nhwd", x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def conv3x3_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (N, H, W, Cin), w: (3, 3, Cin, Cout), SAME padding, stride 1."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )

@@ -1,0 +1,1 @@
+from repro.kernels.spiking_attention.ops import ssa_op

@@ -1,0 +1,60 @@
+"""Pallas TPU kernel: tick-batched softmax-free spiking self-attention.
+
+Computes SSA(Q,K,V) = (Q K^T) V * scale for binary spike Q, K, V with NO
+softmax (Spikformer's key simplification -- the score matrix is already
+non-negative).  The leading grid axis folds (time x batch x heads), so all T
+time steps' attention products ride the same kernel launch: the parallel
+tick-batching dataflow.  On the MXU the binary operands ride bf16/f32 lanes;
+the ASIC's AND-gate datapath does not transfer (DESIGN.md S8.1), softmax
+elimination and single-pass weight reads do.
+
+Layout: q (G, N, D), k (G, M, D), v (G, M, D) -> out (G, N, D), G = T*B*H.
+Query rows are blocked (block_q x D tiles); K/V for one g live in VMEM whole
+(vision-scale N; the long-sequence path uses the LINEAR ordering Q(K^T V) in
+``repro.core.spiking_attention`` -- legal only because there is no softmax).
+VMEM per program ~= block_q*D + 2*M*D + block_q*M floats.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def ssa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+    q = q_ref[0]            # (block_q, D)
+    k = k_ref[0]            # (M, D)
+    v = v_ref[0]            # (M, D)
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (block_q, M)
+    out = jnp.dot(scores, v, preferred_element_type=jnp.float32) * scale
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def _block_q(n: int) -> int:
+    for cand in (512, 256, 128, 64, 32, 16, 8):
+        if n % cand == 0:
+            return cand
+    return n
+
+
+def ssa_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
+            interpret: bool) -> jax.Array:
+    g, n, d = q.shape
+    m = k.shape[1]
+    bq = _block_q(n)
+    grid = (g, n // bq)
+    return pl.pallas_call(
+        functools.partial(ssa_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda gi, qi: (gi, qi, 0)),
+            pl.BlockSpec((1, m, d), lambda gi, qi: (gi, 0, 0)),
+            pl.BlockSpec((1, m, d), lambda gi, qi: (gi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda gi, qi: (gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, n, d), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,61 @@
+"""Jitted wrapper for the spiking_attention Pallas kernel.
+
+Folds (T, B, H, N, Dh) -> (G, N, Dh), pads Dh to lane alignment (zero padding
+is exact for SSA: padded lanes contribute 0 to both contractions), and calls
+the kernel. Backward: SSA is bilinear with no softmax, so the VJP is two more
+SSA-shaped contractions -- we let JAX differentiate the kernel-free oracle via
+a custom VJP to keep training correct while the forward uses the kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spiking_attention import kernel as K
+from repro.kernels.spiking_attention.ref import ssa_ref
+
+_INTERPRET = jax.default_backend() != "tpu"
+
+
+def _pad_d(x):
+    d = x.shape[-1]
+    pad = (-d) % 128
+    if pad:
+        x = jnp.pad(x, ((0, 0),) * (x.ndim - 1) + ((0, pad),))
+    return x, d
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _ssa(q, k, v, scale):
+    qp, d = _pad_d(q)
+    kp, _ = _pad_d(k)
+    vp, _ = _pad_d(v)
+    out = K.ssa_fwd(qp, kp, vp, scale=scale, interpret=_INTERPRET)
+    return out[..., :d]
+
+
+def _ssa_fwd(q, k, v, scale):
+    return _ssa(q, k, v, scale), (q, k, v)
+
+
+def _ssa_bwd(scale, res, g):
+    q, k, v = res
+    # d/dq [(qk^T)v s] = (g v^T) k s ; d/dk = (g^T q)^T ... all bilinear:
+    _, vjp = jax.vjp(lambda a, b, c: ssa_ref(a, b, c, scale=scale), q, k, v)
+    return vjp(g)
+
+
+_ssa.defvjp(_ssa_fwd, _ssa_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("scale",))
+def ssa_op(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125) -> jax.Array:
+    """Tick-batched spiking attention. q,k,v: (T, B, H, N, Dh) -> same shape."""
+    t, b, h, n, dh = q.shape
+    m = k.shape[3]
+    fold = lambda x: x.reshape(t * b * h, x.shape[3], dh)
+    out = _ssa(fold(q), fold(k), fold(v), float(scale))
+    return out.reshape(t, b, h, n, dh)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the spiking_attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssa_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125) -> jax.Array:
+    """(G, N, D), (G, M, D), (G, M, D) -> (G, N, D); no softmax."""
+    scores = jnp.einsum("gnd,gmd->gnm", q, k)
+    return jnp.einsum("gnm,gmd->gnd", scores, v) * scale
+
+
+def ssa_linear_ref(q, k, v, *, scale: float = 0.125):
+    """Linear ordering Q (K^T V): identical result, O(N d^2) cost."""
+    kv = jnp.einsum("gmd,gme->gde", k, v)
+    return jnp.einsum("gnd,gde->gne", q, kv) * scale

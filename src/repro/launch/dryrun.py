@@ -1,0 +1,341 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without hardware: for each
+cell the right step function (train_4k -> train_step, prefill_32k ->
+prefill_step, decode_* -> serve_step) is jitted with explicit in_shardings on
+the production mesh, ``.lower().compile()`` must succeed, and the compiled
+artifact yields:
+
+  * ``memory_analysis()``  -- per-device bytes (proves it fits),
+  * ``cost_analysis()``    -- HLO FLOPs / bytes for the roofline,
+  * the optimized HLO text -- collective operand bytes (all-gather,
+    all-reduce, reduce-scatter, all-to-all, collective-permute) for the
+    roofline collective term.
+
+Artifacts land in artifacts/dryrun/<arch>__<cell>__<mesh>.json; the roofline
+benchmark (benchmarks/roofline.py) consumes them.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --cell train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod|--both-meshes]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import make_rules, use_rules
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.models import lm, transformer as T
+from repro.models.config import SHAPE_CELLS, cell_by_name, cell_supported
+from repro.optim.optimizer import OptimizerConfig, make_optimizer
+
+ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"%?([\w.\-]+)\s*=\s*(\([^)]*\)|[\w\[\],{}:()\s]*?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)\(([^)]*)\)"
+)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*[\w\-]+\(")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device operand bytes of each collective kind, from optimized HLO.
+
+    Operand sizes are resolved through a symbol table of every defined value
+    (shapes in the partitioned module are per-device shards).
+    """
+    defs: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.match(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+)$", line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        tm = re.match(r"^(\([^=]*?\)|[\w\[\],{}:\s()]*?)\s[\w\-]+(\(|\.)", rest)
+        type_str = tm.group(1) if tm else rest.split(" ")[0]
+        defs[name] = _type_bytes(type_str)
+
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s*(.*?)\s(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start|-done)?\(([^)]*)\)", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if "-done" in line.split("=", 1)[1].split("(")[0]:
+            continue  # count the -start only
+        args = m.group(3)
+        nbytes = 0
+        for arg in args.split(","):
+            arg = arg.strip().lstrip("%")
+            arg = arg.split(" ")[0]
+            nbytes += defs.get(arg, 0)
+        if nbytes == 0:  # fallback: use result type
+            nbytes = _type_bytes(m.group(1))
+        out[kind] = out.get(kind, 0) + nbytes
+    return out
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_spec(mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop spec axes whose size does not divide the dimension (jit argument
+    shardings require exact divisibility; dropping = replication along that
+    axis, e.g. vocab 49155 or 40 experts on a 16-wide axis -- DESIGN.md S4)."""
+    axes = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, ax in zip(shape, axes):
+        out.append(ax if ax is not None and dim % _axis_size(mesh, ax) == 0 else None)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def _named(mesh, tree_specs, tree_structs=None):
+    """NamedShardings from PartitionSpecs; sanitized against arg shapes."""
+    if tree_structs is None:
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree_specs,
+            is_leaf=lambda x: isinstance(x, P))
+    return jax.tree_util.tree_map(
+        lambda s, t: NamedSharding(mesh, sanitize_spec(mesh, s, t.shape)),
+        tree_specs, tree_structs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def _opt_specs(cfg, opt_struct, param_specs, params_struct):
+    """Optimizer-state PartitionSpecs mirroring the parameter shardings
+    (adamw: m/v match params; adafactor: factored row/col specs)."""
+    specs: dict = {"grad_norm": P()}
+    if cfg.opt_kind == "adafactor":
+        def vspec(s, p):
+            axes = tuple(s) + (None,) * (len(p.shape) - len(tuple(s)))
+            if len(p.shape) >= 2:
+                return {"row": P(*axes[:-1]), "col": P(*(axes[:-2] + axes[-1:]))}
+            return {"full": P(*axes)}
+
+        specs["v"] = jax.tree_util.tree_map(
+            vspec, param_specs, params_struct,
+            is_leaf=lambda x: isinstance(x, P))
+    else:
+        specs["v"] = param_specs
+    if "m" in opt_struct:
+        specs["m"] = param_specs
+    if "master" in opt_struct:
+        specs["master"] = param_specs
+    return specs
+
+
+def _batch_pspec_tree(cfg, cell, baxes):
+    struct = lm.batch_struct(cfg, cell)
+    return {
+        k: P(baxes, *([None] * (len(v.shape) - 1))) for k, v in struct.items()
+    }
+
+
+def build_cell(arch: str, cell_name: str, *, multi_pod: bool, cfg_override=None,
+               preset: str = "base"):
+    """Returns (jitted_fn, example_args_structs, shardings-metadata)."""
+    cfg = cfg_override if cfg_override is not None else lm.get_config(arch)
+    cell = cell_by_name(cell_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_rules(multi_pod=multi_pod, preset=preset)
+    baxes = rules["batch"]
+
+    param_specs = T.param_pspecs(cfg)
+    opt_param_specs = param_specs  # optimizer states always sharded
+    if rules.get("params") == "replicated":  # ZeRO-2: replicate model params
+        param_specs = jax.tree_util.tree_map(
+            lambda s: P(), param_specs, is_leaf=lambda x: isinstance(x, P))
+    params_struct = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    batch_specs = _batch_pspec_tree(cfg, cell, baxes)
+    batch_structs = lm.batch_struct(cfg, cell)
+
+    if cell.kind == "train":
+        opt = make_optimizer(OptimizerConfig(
+            kind=cfg.opt_kind, b1=cfg.opt_b1,
+            state_dtype=cfg.opt_state_dtype,
+            master_weights=cfg.opt_master_weights))
+        opt_struct = jax.eval_shape(opt.init, params_struct)
+        opt_specs = _opt_specs(cfg, opt_struct, opt_param_specs, params_struct)
+        state_struct = {"params": params_struct, "opt_state": opt_struct,
+                        "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        state_specs = {"params": param_specs, "opt_state": opt_specs, "step": P()}
+        step_fn = lm.make_train_step(cfg, opt)
+        state_shardings = _named(mesh, state_specs, state_struct)
+        in_shardings = (state_shardings,
+                        _named(mesh, batch_specs, batch_structs))
+        # pin the output state to the same shardings: keeps the optimizer
+        # update computed on the m/v shards instead of gathered-replicated
+        out_shardings = (state_shardings, None)
+        args = (state_struct, batch_structs)
+    elif cell.kind == "prefill":
+        step_fn = lm.make_prefill_step(cfg)
+        in_shardings = (_named(mesh, param_specs, params_struct),
+                        _named(mesh, batch_specs, batch_structs))
+        args = (params_struct, batch_structs)
+    elif cell.kind == "decode":
+        cache_struct = lm.cache_struct(cfg, cell)
+        cache_specs = T.cache_pspecs(cfg)
+        step_fn = lm.make_serve_step(cfg)
+        in_shardings = (
+            _named(mesh, param_specs, params_struct),
+            _named(mesh, cache_specs, cache_struct),
+            _named(mesh, batch_specs, batch_structs),
+            NamedSharding(mesh, P()))
+        args = (params_struct, cache_struct, batch_structs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+    else:
+        raise ValueError(cell.kind)
+
+    if cell.kind == "train":
+        jitted = jax.jit(step_fn, in_shardings=in_shardings,
+                         out_shardings=out_shardings)
+    else:
+        jitted = jax.jit(step_fn, in_shardings=in_shardings)
+    return jitted, args, mesh, rules
+
+
+def dryrun_cell(arch: str, cell_name: str, *, multi_pod: bool,
+                save: bool = True, verbose: bool = True) -> dict:
+    mesh_tag = "pod2x16x16" if multi_pod else "pod16x16"
+    cfg = lm.get_config(arch)
+    cell = cell_by_name(cell_name)
+    ok, reason = cell_supported(cfg, cell)
+    record: dict = {
+        "arch": arch, "cell": cell_name, "mesh": mesh_tag,
+        "kind": cell.kind, "seq_len": cell.seq_len,
+        "global_batch": cell.global_batch,
+    }
+    if not ok:
+        record.update(status="SKIP", reason=reason)
+        if verbose:
+            print(f"[dryrun] {arch} x {cell_name} x {mesh_tag}: SKIP ({reason})")
+        if save:
+            _save(record)
+        return record
+
+    t0 = time.time()
+    try:
+        jitted, args, mesh, rules = build_cell(arch, cell_name, multi_pod=multi_pod)
+        with use_rules(rules), mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        record.update(
+            status="OK",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops=float(cost.get("flops", -1.0)),
+            bytes_accessed=float(cost.get("bytes accessed", -1.0)),
+            collective_bytes_per_device=coll,
+            memory={
+                k: int(getattr(mem, k))
+                for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                          "temp_size_in_bytes", "generated_code_size_in_bytes")
+                if hasattr(mem, k)
+            },
+            num_devices=mesh.devices.size,
+        )
+        if verbose:
+            tot_coll = sum(coll.values())
+            mem_gb = (record["memory"].get("argument_size_in_bytes", 0)
+                      + record["memory"].get("temp_size_in_bytes", 0)) / 2**30
+            print(f"[dryrun] {arch} x {cell_name} x {mesh_tag}: OK "
+                  f"flops={record['flops']:.3e} bytes={record['bytes_accessed']:.3e} "
+                  f"coll={tot_coll:.3e}B/dev mem~{mem_gb:.2f}GiB/dev "
+                  f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    except Exception as e:  # noqa: BLE001 -- record the failure, keep sweeping
+        record.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[dryrun] {arch} x {cell_name} x {mesh_tag}: FAIL {type(e).__name__}: {e}")
+    if save:
+        _save(record)
+    return record
+
+
+def _save(record: dict):
+    ARTIFACT_DIR.mkdir(parents=True, exist_ok=True)
+    name = f"{record['arch']}__{record['cell']}__{record['mesh']}.json"
+    (ARTIFACT_DIR / name).write_text(json.dumps(record, indent=2))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    args = ap.parse_args()
+
+    from repro.configs import ASSIGNED_ARCHS
+
+    archs = ASSIGNED_ARCHS if (args.all or not args.arch) else (args.arch,)
+    cells = [c.name for c in SHAPE_CELLS] if (args.all or not args.cell) else [args.cell]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_ok = n_fail = n_skip = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            for cell in cells:
+                rec = dryrun_cell(arch, cell, multi_pod=multi_pod)
+                n_ok += rec["status"] == "OK"
+                n_fail += rec["status"] == "FAIL"
+                n_skip += rec["status"] == "SKIP"
+    print(f"[dryrun] done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 256 chips as (data=16, model=16).
+Multi-pod: 2 pods x 256 chips as (pod=2, data=16, model=16); the ``pod`` axis
+is pure data parallelism (DCI-crossing collectives are one grad all-reduce
+per step).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (tests/examples)."""
+    n = len(jax.devices())
+    import numpy as np
+
+    total = int(np.prod(shape))
+    if total > n:
+        shape = (1,) * len(shape)
+    return jax.make_mesh(shape, axes)
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else ("data",)

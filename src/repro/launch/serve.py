@@ -1,0 +1,90 @@
+"""Batched serving launcher: continuous-batching decode loop.
+
+Prefill incoming requests (batched), then decode with a shared step function;
+finished sequences are retired and their slots refilled -- the standard
+continuous-batching pattern (vLLM-style, simplified to synchronous slots).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b_smoke \
+        --requests 8 --prompt-len 32 --max-new 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, make_batch
+from repro.models import lm, transformer as T
+
+
+def greedy_sample(logits):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
+          slots: int = 4, seed: int = 0, verbose: bool = True):
+    cfg = lm.get_config(arch)
+    assert cfg.modality == "text", "serving demo targets text archs"
+    params = T.init_lm(jax.random.PRNGKey(seed), cfg)
+    prefill = jax.jit(lm.make_prefill_step(cfg))
+    serve_step = jax.jit(lm.make_serve_step(cfg))
+
+    cap = prompt_len + max_new
+    dcfg = DataConfig(seed=seed, vocab_size=cfg.vocab_size, seq_len=prompt_len,
+                      global_batch=num_requests)
+    prompts = make_batch(dcfg, 0)["tokens"]
+
+    done, t0 = [], time.perf_counter()
+    for start in range(0, num_requests, slots):
+        batch_prompts = jnp.asarray(prompts[start : start + slots])
+        b = batch_prompts.shape[0]
+        # prefill into a decode cache of full capacity
+        logits_last, _ = prefill(params, {"tokens": batch_prompts})
+        cache = T.cache_init(cfg, b, cap)
+        # replay prompt through serve_step to fill the cache (keeps one code
+        # path; production would reshard the prefill cache instead)
+        for t in range(prompt_len):
+            logits, cache = serve_step(
+                params, cache, {"token": batch_prompts[:, t : t + 1]},
+                jnp.asarray(t))
+        tok = greedy_sample(logits[:, -1])
+        outs = [tok]
+        for i in range(max_new - 1):
+            logits, cache = serve_step(
+                params, cache, {"token": tok[:, None]},
+                jnp.asarray(prompt_len + i))
+            tok = greedy_sample(logits[:, -1])
+            outs.append(tok)
+        gen = jnp.stack(outs, axis=1)
+        for j in range(b):
+            done.append((start + j, np.asarray(gen[j])))
+        if verbose:
+            print(f"[serve] slot batch {start//slots}: generated "
+                  f"{b}x{max_new} tokens")
+    dt = time.perf_counter() - t0
+    tot = num_requests * max_new
+    if verbose:
+        print(f"[serve] {num_requests} requests, {tot} new tokens in {dt:.2f}s "
+              f"({tot/dt:.1f} tok/s on CPU)")
+    return done
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b_smoke")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+    serve(args.arch, num_requests=args.requests, prompt_len=args.prompt_len,
+          max_new=args.max_new, slots=args.slots)
+
+
+if __name__ == "__main__":
+    main()

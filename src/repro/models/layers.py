@@ -1,0 +1,440 @@
+"""Transformer building blocks shared by the assigned architectures.
+
+Everything is pure-functional: ``*_init(key, ...) -> params`` and
+``*_apply(params, x, ...) -> y``.  Attention is implemented as a
+memory-bounded chunked (flash-style) computation: queries are processed in
+blocks with an online-softmax scan over KV blocks, so the N x N score matrix
+is never materialised -- required for the prefill_32k cells at 123B scale.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float) -> jax.Array:
+    """x: (..., S, n, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                      # (Dh/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, Dh/2)
+    cos = jnp.cos(angles)[..., None, :]                # (..., S, 1, Dh/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# dense / MLP
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.float32):
+    w = jax.random.normal(key, (d_in, d_out), dtype) * (1.0 / math.sqrt(d_in))
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x, *, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        x = x.astype(compute_dtype)
+        w = w.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+def mlp_init(key, d: int, d_ff: int, *, act: str, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"down": dense_init(k2, d_ff, d, dtype=dtype)}
+    if act in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, d, d_ff, dtype=dtype)
+        p["up"] = dense_init(k3, d, d_ff, dtype=dtype)
+    else:  # gelu (musicgen-style plain MLP)
+        p["up"] = dense_init(k1, d, d_ff, dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, *, act: str, compute_dtype=None):
+    if act == "swiglu":
+        h = jax.nn.silu(dense_apply(p["gate"], x, compute_dtype=compute_dtype))
+        h = h * dense_apply(p["up"], x, compute_dtype=compute_dtype)
+    elif act == "geglu":
+        h = jax.nn.gelu(dense_apply(p["gate"], x, compute_dtype=compute_dtype), approximate=True)
+        h = h * dense_apply(p["up"], x, compute_dtype=compute_dtype)
+    elif act == "gelu":
+        h = jax.nn.gelu(dense_apply(p["up"], x, compute_dtype=compute_dtype), approximate=True)
+    else:
+        raise ValueError(act)
+    return dense_apply(p["down"], h, compute_dtype=compute_dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked (flash-style) attention
+# ---------------------------------------------------------------------------
+
+_NEG_INF = -1e30
+
+
+def _mask_block(qpos_i, kpos_j, prefix_len, window):
+    """(bq, bk) attention mask for one tile."""
+    mask = kpos_j[None, :] <= qpos_i[:, None]  # causal
+    if prefix_len > 0:
+        mask = mask | (kpos_j[None, :] < prefix_len)
+    if window is not None:
+        mask = mask & (kpos_j[None, :] > qpos_i[:, None] - window)
+    return mask
+
+
+UNROLL_ATTN = False  # probe mode: python loops instead of scan (see roofline)
+
+
+def _flash_fwd(q, k, v, q_positions, kv_positions, prefix_len, window,
+               block_q, block_k, scale):
+    """Forward online-softmax over KV blocks. Returns (out, lse).
+
+    q: (B, Sq, KV, G, Dh); k, v: (B, Skv, KV, Dh). out: same as q;
+    lse: (B, Sq, KV, G) log-sum-exp rows (saved for the flash backward).
+
+    With ``UNROLL_ATTN`` the block loops are Python loops (identical math and
+    FLOPs) so the HLO contains every tile explicitly -- used by the roofline
+    probes, where scan bodies would be counted once.
+    """
+    b, sq, kv, g, dh = q.shape
+    skv = k.shape[1]
+    nq, nk = sq // block_q, skv // block_k
+    qb = q.reshape(b, nq, block_q, kv, g, dh)
+    kb = k.reshape(b, nk, block_k, kv, dh)
+    vb = v.reshape(b, nk, block_k, kv, dh)
+    qpos = q_positions.reshape(nq, block_q)
+    kpos = kv_positions.reshape(nk, block_k)
+
+    def tile(q_i, qpos_i, k_j, v_j, kpos_j, carry):
+        acc, m, l = carry
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", q_i, k_j, preferred_element_type=jnp.float32
+        ) * scale
+        mask = _mask_block(qpos_i, kpos_j, prefix_len, window)
+        s = jnp.where(mask[None, :, None, None, :], s, _NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bqhgk,bkhd->bqhgd", p.astype(v_j.dtype), v_j,
+            preferred_element_type=jnp.float32,
+        )
+        return acc_new, m_new, l_new
+
+    def init_carry():
+        return (jnp.zeros((b, block_q, kv, g, dh), jnp.float32),
+                jnp.full((b, block_q, kv, g), _NEG_INF, jnp.float32),
+                jnp.zeros((b, block_q, kv, g), jnp.float32))
+
+    def finalize(acc, m, l):
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        lse = m + jnp.log(jnp.maximum(l, 1e-37))
+        return out.astype(q.dtype), lse
+
+    if UNROLL_ATTN:
+        outs, lses = [], []
+        for qi in range(nq):
+            carry = init_carry()
+            for kj in range(nk):
+                carry = tile(qb[:, qi], qpos[qi], kb[:, kj], vb[:, kj],
+                             kpos[kj], carry)
+            o, s_ = finalize(*carry)
+            outs.append(o)
+            lses.append(s_)
+        out = jnp.stack(outs, axis=1).reshape(b, sq, kv, g, dh)
+        lse = jnp.stack(lses, axis=1).reshape(b, sq, kv, g)
+        return out, lse
+
+    def q_block(args):
+        qi, q_i = args
+
+        def kv_block(carry, inputs):
+            k_j, v_j, kpos_j = inputs
+            return tile(q_i, qpos[qi], k_j, v_j, kpos_j, carry), None
+
+        carry, _ = jax.lax.scan(
+            kv_block, init_carry(), (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpos))
+        return finalize(*carry)
+
+    outs, lses = jax.lax.map(q_block, (jnp.arange(nq), qb.swapaxes(0, 1)))
+    out = outs.swapaxes(0, 1).reshape(b, sq, kv, g, dh)
+    lse = lses.swapaxes(0, 1).reshape(b, sq, kv, g)
+    return out, lse
+
+
+def _flash_bwd(q, k, v, out, lse, do, q_positions, kv_positions, prefix_len,
+               window, block_q, block_k, scale):
+    """FA2-style backward: recompute tiles, O(N) residual memory."""
+    b, sq, kv, g, dh = q.shape
+    skv = k.shape[1]
+    nq, nk = sq // block_q, skv // block_k
+    qb = q.reshape(b, nq, block_q, kv, g, dh).swapaxes(0, 1)
+    dob = do.reshape(b, nq, block_q, kv, g, dh).swapaxes(0, 1)
+    lseb = lse.reshape(b, nq, block_q, kv, g).swapaxes(0, 1)
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    deltab = delta.reshape(b, nq, block_q, kv, g).swapaxes(0, 1)
+    kb = k.reshape(b, nk, block_k, kv, dh)
+    vb = v.reshape(b, nk, block_k, kv, dh)
+    qpos = q_positions.reshape(nq, block_q)
+    kpos = kv_positions.reshape(nk, block_k)
+
+    def tile_bwd(qi, q_i, do_i, lse_i, delta_i, k_j, v_j, kpos_j):
+        s = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", q_i, k_j, preferred_element_type=jnp.float32
+        ) * scale
+        mask = _mask_block(qpos[qi], kpos_j, prefix_len, window)
+        p = jnp.where(mask[None, :, None, None, :],
+                      jnp.exp(s - lse_i[..., None]), 0.0)
+        ddv_j = jnp.einsum("bqhgk,bqhgd->bkhd", p, do_i.astype(jnp.float32))
+        dp = jnp.einsum(
+            "bqhgd,bkhd->bqhgk", do_i, v_j, preferred_element_type=jnp.float32)
+        ds = p * (dp - delta_i[..., None]) * scale
+        dq_j = jnp.einsum("bqhgk,bkhd->bqhgd", ds, k_j,
+                          preferred_element_type=jnp.float32)
+        ddk_j = jnp.einsum("bqhgk,bqhgd->bkhd", ds, q_i)
+        return dq_j, ddk_j, ddv_j
+
+    if UNROLL_ATTN:
+        dq_blocks = []
+        dk = jnp.zeros((nk, b, block_k, kv, dh), jnp.float32)
+        dv = jnp.zeros((nk, b, block_k, kv, dh), jnp.float32)
+        for qi in range(nq):
+            dq_i = jnp.zeros((b, block_q, kv, g, dh), jnp.float32)
+            for kj in range(nk):
+                dq_j, ddk_j, ddv_j = tile_bwd(
+                    qi, qb[qi], dob[qi], lseb[qi], deltab[qi],
+                    kb[:, kj], vb[:, kj], kpos[kj])
+                dq_i = dq_i + dq_j
+                dk = dk.at[kj].add(ddk_j)
+                dv = dv.at[kj].add(ddv_j)
+            dq_blocks.append(dq_i)
+        dqs = jnp.stack(dq_blocks, axis=0)
+    else:
+        def q_block(carry, inputs):
+            dk, dv = carry
+            qi, q_i, do_i, lse_i, delta_i = inputs
+
+            def kv_block(_, inputs_j):
+                k_j, v_j, kpos_j = inputs_j
+                return None, tile_bwd(qi, q_i, do_i, lse_i, delta_i, k_j, v_j, kpos_j)
+
+            _, (dq_parts, ddk, ddv) = jax.lax.scan(
+                kv_block, None, (kb.swapaxes(0, 1), vb.swapaxes(0, 1), kpos))
+            dq_i = dq_parts.sum(axis=0)
+            return (dk + ddk, dv + ddv), dq_i
+
+        dk0 = jnp.zeros((nk, b, block_k, kv, dh), jnp.float32)
+        dv0 = jnp.zeros((nk, b, block_k, kv, dh), jnp.float32)
+        (dk, dv), dqs = jax.lax.scan(
+            q_block, (dk0, dv0), (jnp.arange(nq), qb, dob, lseb, deltab))
+
+    dq = dqs.swapaxes(0, 1).reshape(b, sq, kv, g, dh).astype(q.dtype)
+    dk = dk.swapaxes(0, 1).reshape(b, skv, kv, dh).astype(k.dtype)
+    dv = dv.swapaxes(0, 1).reshape(b, skv, kv, dh).astype(v.dtype)
+    return dq, dk, dv
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _flash_attention(q, k, v, q_positions, kv_positions, prefix_len, window,
+                     block_q, block_k, scale):
+    out, _ = _flash_fwd(q, k, v, q_positions, kv_positions, prefix_len, window,
+                        block_q, block_k, scale)
+    return out
+
+
+def _flash_attention_fwd(q, k, v, q_positions, kv_positions, prefix_len,
+                         window, block_q, block_k, scale):
+    out, lse = _flash_fwd(q, k, v, q_positions, kv_positions, prefix_len,
+                          window, block_q, block_k, scale)
+    return out, (q, k, v, out, lse, q_positions, kv_positions)
+
+
+def _flash_attention_bwd(prefix_len, window, block_q, block_k, scale, res, do):
+    q, k, v, out, lse, q_positions, kv_positions = res
+    dq, dk, dv = _flash_bwd(q, k, v, out, lse, do, q_positions, kv_positions,
+                            prefix_len, window, block_q, block_k, scale)
+    import jax.dtypes
+
+    zero_pos = jnp.zeros(q_positions.shape, jax.dtypes.float0)
+    zero_kpos = jnp.zeros(kv_positions.shape, jax.dtypes.float0)
+    return dq, dk, dv, zero_pos, zero_kpos
+
+
+_flash_attention.defvjp(_flash_attention_fwd, _flash_attention_bwd)
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool = True,
+    prefix_len: int = 0,
+    window: int | None = None,
+    block_q: int = 512,
+    block_k: int = 1024,
+    scale: float | None = None,
+) -> jax.Array:
+    """Memory-bounded GQA flash attention (forward + custom recompute VJP).
+
+    q: (B, Sq, H, Dh); k, v: (B, Skv, KV, Dh).  Query heads are grouped onto
+    KV heads (H = KV * G).  Peak memory is O(block_q * block_k) per
+    (batch, kv-head) in BOTH directions: the custom VJP recomputes score
+    tiles instead of saving the O(N^2) softmax residuals.
+
+    Masking: causal (+ optional prefix-LM bidirectional region of length
+    ``prefix_len``, for the VLM image prefix) and optional sliding
+    ``window`` (recurrentgemma local attention).
+    """
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    block_q = min(block_q, sq)
+    block_k = min(block_k, skv)
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, block_q, skv, block_k)
+    qg = q.reshape(b, sq, kv, g, dh)
+    out = _flash_attention(qg, k, v, q_positions, kv_positions, prefix_len,
+                           window, block_q, block_k, scale)
+    return out.reshape(b, sq, h, dh)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    cache_len: jax.Array | int,
+    scale: float | None = None,
+) -> jax.Array:
+    """Single-token decode attention over the full cache.
+
+    q: (B, 1, H, Dh); caches: (B, S, KV, Dh); positions < cache_len are valid.
+    Memory is O(S) per (batch, head) -- no chunking needed at decode.
+    """
+    b, _, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    scale = scale if scale is not None else 1.0 / math.sqrt(dh)
+    qg = q.reshape(b, kv, g, dh)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    valid = jnp.arange(s)[None, :] < jnp.asarray(cache_len).reshape(-1, 1)
+    scores = jnp.where(valid[:, None, None, :], scores, _NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(
+        "bhgs,bshd->bhgd", probs.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(b, 1, h, dh).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (params + full/decode apply)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg, dtype=jnp.float32):
+    d, h, kv, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, h * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": dense_init(k2, d, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": dense_init(k3, d, kv * dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": dense_init(k4, h * dh, d, dtype=dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(dh, dtype)
+        p["k_norm"] = rmsnorm_init(dh, dtype)
+    return p
+
+
+def _project_qkv(p, x, cfg, positions, compute_dtype):
+    b, s, _ = x.shape
+    h, kv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = dense_apply(p["wq"], x, compute_dtype=compute_dtype).reshape(b, s, h, dh)
+    k = dense_apply(p["wk"], x, compute_dtype=compute_dtype).reshape(b, s, kv, dh)
+    v = dense_apply(p["wv"], x, compute_dtype=compute_dtype).reshape(b, s, kv, dh)
+    if cfg.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q, eps=cfg.norm_eps)
+        k = rmsnorm_apply(p["k_norm"], k, eps=cfg.norm_eps)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(p, x, cfg, *, positions, window=None, prefix_len=0,
+                    compute_dtype=None):
+    """Full-sequence (train/prefill) attention. x: (B, S, D). Returns y, (k, v)."""
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg, positions, compute_dtype)
+    out = chunked_attention(
+        q, k, v,
+        q_positions=positions,
+        kv_positions=positions,
+        prefix_len=prefix_len,
+        window=window,
+        block_q=cfg.attn_block_q,
+        block_k=cfg.attn_block_k,
+    )
+    y = dense_apply(p["wo"], out.reshape(b, s, -1), compute_dtype=compute_dtype)
+    return y, (k, v)
+
+
+def attention_decode_apply(p, x, cfg, *, cache_k, cache_v, pos,
+                           compute_dtype=None, ring: bool = False):
+    """One-token decode. x: (B, 1, D); caches (B, S, KV, Dh); pos: scalar.
+
+    Writes the new KV at ``pos`` (or ``pos % S`` when ``ring``, for sliding-
+    window caches) and attends over the valid region. Returns (y, k', v').
+    """
+    b = x.shape[0]
+    s_cache = cache_k.shape[1]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(p, x, cfg, positions, compute_dtype)
+    slot = jnp.asarray(pos % s_cache if ring else pos, jnp.int32)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype), (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype), (0, slot, 0, 0))
+    cache_len = jnp.minimum(pos + 1, s_cache) if ring else pos + 1
+    out = decode_attention(q, cache_k, cache_v, cache_len=cache_len)
+    y = dense_apply(p["wo"], out.reshape(b, 1, -1), compute_dtype=compute_dtype)
+    return y, cache_k, cache_v

@@ -1,0 +1,163 @@
+"""LM entry points: registry, loss, train/prefill/serve steps, input specs.
+
+These are the functions the launcher jits.  Each step is a pure function of
+(params/state, batch); shardings are provided at jit time by the launcher
+(``repro.launch``) from ``param_pspecs``/``batch_pspecs``/``cache_pspecs``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ArchConfig, ShapeCell
+
+_REGISTRY: dict[str, Callable[[], ArchConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get_config(name: str) -> ArchConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch '{name}'; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]()
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def _shift_labels(tokens: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Next-token labels + mask (last position unmasked-out)."""
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    mask = jnp.concatenate(
+        [jnp.ones_like(tokens[:, 1:]), jnp.zeros_like(tokens[:, :1])], axis=1)
+    return labels, mask.astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask: jax.Array) -> jax.Array:
+    """Stable masked CE; logits cast to f32 for the softmax."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    return nll.sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def loss_fn(params, batch, cfg: ArchConfig):
+    """Returns (loss, metrics dict). Handles all modalities."""
+    logits, aux, _ = T.forward(params, batch, cfg)
+    if cfg.modality == "text":
+        labels, mask = _shift_labels(batch["tokens"])
+    elif cfg.modality == "audio_stub":
+        labels = batch["labels"]
+        mask = jnp.ones(labels.shape, jnp.float32)
+    elif cfg.modality == "vision_stub":
+        # loss on the text region only (image prefix produces no labels)
+        prefix = batch["image_embeds"].shape[1]
+        labels_txt, mask_txt = _shift_labels(batch["tokens"])
+        pad = jnp.zeros((labels_txt.shape[0], prefix), labels_txt.dtype)
+        labels = jnp.concatenate([pad, labels_txt], axis=1)
+        mask = jnp.concatenate([pad.astype(jnp.float32), mask_txt], axis=1)
+    else:
+        raise ValueError(cfg.modality)
+    ce = cross_entropy(logits, labels, mask)
+    loss = ce + cfg.router_aux_loss * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ArchConfig, optimizer):
+    """train_step(state, batch) -> (state', metrics). ``optimizer`` from
+    repro.optim (init/update pair)."""
+
+    def train_step(state, batch):
+        grad_fn = jax.value_and_grad(lambda p: loss_fn(p, batch, cfg), has_aux=True)
+        (loss, metrics), grads = grad_fn(state["params"])
+        new_params, new_opt = optimizer.update(
+            grads, state["opt_state"], state["params"], step=state["step"])
+        metrics["grad_norm"] = optimizer.last_grad_norm(new_opt)
+        return (
+            {"params": new_params, "opt_state": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill_step(params, batch):
+        logits, _, cache = T.forward(params, batch, cfg, collect_cache=True)
+        return logits[:, -1:, :], cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, batch, pos):
+        return T.decode(params, cache, batch, pos, cfg)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins for the dry-run; sharded, no alloc)
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ArchConfig, cell: ShapeCell) -> dict[str, jax.ShapeDtypeStruct]:
+    """Model inputs for one shape cell (training/prefill batch or decode token)."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "decode":
+        if cfg.modality == "audio_stub":
+            return {"embeds": jax.ShapeDtypeStruct((b, 1, cfg.d_model), jnp.bfloat16)}
+        return {"token": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+    if cfg.modality == "text":
+        return {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.modality == "audio_stub":
+        out = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)}
+        if cell.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return out
+    if cfg.modality == "vision_stub":
+        p = cfg.num_prefix_tokens
+        return {
+            "image_embeds": jax.ShapeDtypeStruct((b, p, cfg.d_model), jnp.bfloat16),
+            "tokens": jax.ShapeDtypeStruct((b, s - p), jnp.int32),
+        }
+    raise ValueError(cfg.modality)
+
+
+def batch_pspecs(cfg: ArchConfig, cell: ShapeCell, *, batch_axes) -> dict[str, P]:
+    """PartitionSpecs matching batch_struct: batch dim over the DP axes."""
+    struct = batch_struct(cfg, cell)
+    return {
+        k: P(batch_axes, *([None] * (len(v.shape) - 1))) for k, v in struct.items()
+    }
+
+
+def cache_struct(cfg: ArchConfig, cell: ShapeCell):
+    """ShapeDtypeStructs for the decode cache at this cell."""
+    shapes = jax.eval_shape(
+        lambda: T.cache_init(cfg, cell.global_batch, cell.seq_len))
+    return shapes

@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD, state-space duality) layer -- mamba2-130m [arXiv:2405.21060].
+
+Chunked dual-form computation for train/prefill (quadratic within chunks,
+linear recurrence across chunks) and an O(1)-state decode step.  The paper's
+spiking technique is inapplicable here (real-valued linear recurrence --
+DESIGN.md S3); note the schedule itself *is* tick-batched in spirit: all
+time-independent projections are batched GEMMs and only the cheap state
+recurrence is sequential.
+
+Recurrence (per head h, state size N):
+    state_t = a_t * state_{t-1} + B_t (x_t * dt_t)^T ;  y_t = C_t . state_t + D x_t
+with a_t = exp(dt_t * A_h), A_h = -exp(A_log_h) < 0.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rmsnorm_apply
+
+
+def mamba2_init(key, cfg, dtype=jnp.float32):
+    d, di, h, n = cfg.d_model, cfg.d_inner, cfg.ssm_heads, cfg.ssm_state
+    conv_dim = di + 2 * n
+    k = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k[0], d, 2 * di + 2 * n + h, dtype=dtype),
+        "conv_w": jax.random.normal(k[1], (cfg.ssm_conv, conv_dim), dtype) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((h,), dtype),            # A = -exp(0) = -1 init
+        "D": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": {"scale": jnp.ones((di,), dtype)},
+        "out_proj": dense_init(k[3], di, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C)."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    parts = [xp[:, i : i + x.shape[1], :] * w[i] for i in range(width)]
+    return sum(parts) + b
+
+
+def _split_proj(p, x, cfg, compute_dtype):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    cd = compute_dtype or x.dtype
+    zxbcdt = (x.astype(cd) @ p["in_proj"]["w"].astype(cd))
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def ssd_chunked(xh, dt, a_neg, bm, cm, *, chunk: int):
+    """Chunked SSD. xh: (B,S,H,hd); dt: (B,S,H); a_neg: (H,) = A < 0;
+    bm, cm: (B,S,N). Returns y: (B,S,H,hd)."""
+    b, s, h, hd = xh.shape
+    n = bm.shape[-1]
+    nc = s // chunk
+    assert s % chunk == 0, (s, chunk)
+
+    log_a = (dt * a_neg).reshape(b, nc, chunk, h)            # (B,nc,Q,H), <= 0
+    xs = (xh * dt[..., None]).reshape(b, nc, chunk, h, hd)
+    bmc = bm.reshape(b, nc, chunk, n)
+    cmc = cm.reshape(b, nc, chunk, n)
+    cum = jnp.cumsum(log_a, axis=2)                          # inclusive
+
+    # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) xs_j
+    cb = jnp.einsum("bcqn,bckn->bcqk", cmc, bmc)             # (B,nc,Q,Q)
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # (B,nc,Q,K,H)
+    idx = jnp.arange(chunk)
+    mask = (idx[:, None] >= idx[None, :])[None, None, :, :, None]
+    scores = cb[..., None] * jnp.where(mask, decay, 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhd->bcqhd", scores, xs)
+
+    # chunk summary: S_c = sum_j exp(cum_last - cum_j) B_j (x)_j
+    decay_last = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,H)
+    s_c = jnp.einsum("bcqn,bcqh,bcqhd->bchnd", bmc, decay_last, xs)
+
+    # inter-chunk linear recurrence over chunk states
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                  # (B,nc,H)
+
+    def step(state, inp):
+        dcy, sc = inp                                        # (B,H), (B,H,N,hd)
+        new = state * dcy[..., None, None] + sc
+        return new, state                                    # emit state BEFORE chunk
+
+    init = jnp.zeros((b, h, n, hd), xh.dtype)
+    final_state, states_prev = jax.lax.scan(
+        step, init, (chunk_decay.swapaxes(0, 1), s_c.swapaxes(0, 1))
+    )
+    states_prev = states_prev.swapaxes(0, 1)                 # (B,nc,H,N,hd)
+
+    # inter-chunk: y_i += C_i . state_prev * exp(cum_i)
+    y_inter = jnp.einsum("bcqn,bchnd,bcqh->bcqhd", cmc, states_prev, jnp.exp(cum))
+    return (y_intra + y_inter).reshape(b, s, h, hd), final_state
+
+
+def ssd_serial_ref(xh, dt, a_neg, bm, cm):
+    """Serial oracle: direct scan of the recurrence (tests only)."""
+    b, s, h, hd = xh.shape
+    n = bm.shape[-1]
+
+    def step(state, inp):
+        x_t, dt_t, b_t, c_t = inp
+        a_t = jnp.exp(dt_t * a_neg)                          # (B,H)
+        upd = jnp.einsum("bn,bhd->bhnd", b_t, x_t * dt_t[..., None])
+        state = state * a_t[..., None, None] + upd
+        y_t = jnp.einsum("bn,bhnd->bhd", c_t, state)
+        return state, y_t
+
+    init = jnp.zeros((b, h, n, hd), xh.dtype)
+    _, ys = jax.lax.scan(
+        step, init,
+        (xh.swapaxes(0, 1), dt.swapaxes(0, 1), bm.swapaxes(0, 1), cm.swapaxes(0, 1)),
+    )
+    return ys.swapaxes(0, 1)
+
+
+def mamba2_apply(p, x, cfg, *, compute_dtype=None, return_cache: bool = False):
+    """Full-sequence SSD block. x: (B, S, D) -> (B, S, D)[, decode cache]."""
+    b, s, d = x.shape
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc_raw, dt = _split_proj(p, x, cfg, compute_dtype)
+    xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"].astype(xbc_raw.dtype),
+                                   p["conv_b"].astype(xbc_raw.dtype)))
+    xs, bm, cm = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    a_neg = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, s, h, hd)
+    y, final_state = ssd_chunked(
+        xh.astype(jnp.float32), dt, a_neg, bm.astype(jnp.float32),
+        cm.astype(jnp.float32), chunk=min(cfg.ssm_chunk, s))
+    y = y + p["D"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))          # gated RMSNorm
+    out = y @ p["out_proj"]["w"].astype(y.dtype)
+    if return_cache:
+        cache = {"state": final_state,
+                 "conv": xbc_raw[:, -(cfg.ssm_conv - 1):, :].astype(x.dtype)}
+        return out, cache
+    return out
+
+
+def mamba2_cache_init(cfg, batch: int, dtype=jnp.float32):
+    h, n, hd = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, h, n, hd), dtype),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype),
+    }
+
+
+def mamba2_decode_step(p, x, cache, cfg, *, compute_dtype=None):
+    """One-token decode. x: (B, 1, D) -> (y (B, 1, D), cache')."""
+    b = x.shape[0]
+    di, n, h, hd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _split_proj(p, x, cfg, compute_dtype)
+    # conv over (cached W-1 inputs + current)
+    hist = jnp.concatenate([cache["conv"], xbc.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(hist.dtype)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(hist.dtype)
+    xbc_t = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = hist[:, 1:, :]
+    xs, bm, cm = jnp.split(xbc_t, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))[:, 0]
+    a_t = jnp.exp(dt * -jnp.exp(p["A_log"].astype(jnp.float32)))     # (B,H)
+    xh = xs.reshape(b, h, hd).astype(jnp.float32)
+    upd = jnp.einsum("bn,bhd->bhnd", bm[:, 0].astype(jnp.float32), xh * dt[..., None])
+    state = cache["state"] * a_t[..., None, None] + upd
+    y = jnp.einsum("bn,bhnd->bhd", cm[:, 0].astype(jnp.float32), state)
+    y = y + p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(b, 1, di).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    y = y @ p["out_proj"]["w"].astype(y.dtype)
+    return y, {"state": state, "conv": new_conv}

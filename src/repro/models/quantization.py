@@ -1,0 +1,63 @@
+"""Weight-only int8 quantization for serving (beyond-paper).
+
+Decode cells are weight-streaming-bound (§Roofline: the memory term is
+params_bytes / HBM_bw). Per-output-channel symmetric int8 halves the bf16
+stream — the dominant decode term — at negligible quality cost for weight-only
+quantization. Spiritually faithful to the paper: its whole premise is that
+spike-domain operands (1-bit activations) shrink the datapath; here we shrink
+the other operand.
+
+    qparams = quantize_params_int8(params)     # matrices -> {q: int8, scale}
+    w       = dequant(qparams[...])            # on-the-fly, fused by XLA
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(w: jax.Array) -> dict:
+    """Per-output-channel (last dim) symmetric int8."""
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / jnp.maximum(scale, 1e-12)),
+                 -127, 127).astype(jnp.int8)
+    return {"q": q, "scale": scale.astype(jnp.float32)}
+
+
+def dequant(qw: dict, dtype=jnp.bfloat16) -> jax.Array:
+    return (qw["q"].astype(jnp.float32) * qw["scale"]).astype(dtype)
+
+
+def _is_weight_matrix(path: tuple, leaf) -> bool:
+    return leaf.ndim == 2 and leaf.shape[0] >= 64 and leaf.shape[1] >= 64
+
+
+def quantize_params_int8(params):
+    """Quantize every >=64x64 2-D matrix leaf; other leaves pass through.
+    Returns (qparams, bytes_before, bytes_after)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out, before, after = [], 0, 0
+    for path, leaf in flat:
+        before += leaf.size * leaf.dtype.itemsize
+        if _is_weight_matrix(path, leaf):
+            qw = quantize_int8(leaf)
+            after += qw["q"].size + qw["scale"].size * 4
+            out.append(qw)
+        else:
+            after += leaf.size * leaf.dtype.itemsize
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out), before, after
+
+
+def dequantize_params(qparams, dtype=jnp.bfloat16):
+    """Inverse transform (serving runtime materializes per layer / on the fly)."""
+
+    def undo(leaf):
+        if isinstance(leaf, dict) and set(leaf) == {"q", "scale"}:
+            return dequant(leaf, dtype)
+        return leaf
+
+    return jax.tree_util.tree_map(
+        undo, qparams,
+        is_leaf=lambda x: isinstance(x, dict) and set(x) == {"q", "scale"})

@@ -1,0 +1,128 @@
+"""RG-LRU recurrent block + local attention (recurrentgemma / Griffin,
+arXiv:2402.19427).
+
+Block pattern 1:2 -- repeating (recurrent, recurrent, local-attention).
+The recurrent branch: x -> {gelu gate, conv1d -> RG-LRU} -> elementwise
+product -> out projection.  RG-LRU:
+
+    r_t = sigmoid(W_a xi_t);  i_t = sigmoid(W_x xi_t)
+    log a_t = -c * softplus(Lambda) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * xi_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (log-parallel on
+TPU); decode carries the O(lru_width) hidden state.  Gate projections are
+block-diagonal with num_heads blocks, as in the reference model.  The paper's
+spiking technique is inapplicable to the real-valued gated recurrence
+(DESIGN.md S3); the local-attention blocks use the shared GQA layer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+_C = 8.0
+
+
+def _blockdiag_init(key, width: int, blocks: int, dtype=jnp.float32):
+    bw = width // blocks
+    w = jax.random.normal(key, (blocks, bw, bw), dtype) * (bw ** -0.5)
+    return {"w": w, "b": jnp.zeros((width,), dtype)}
+
+
+def _blockdiag_apply(p, x):
+    """x: (..., width) -> (..., width) with block-diagonal weight."""
+    blocks, bw, _ = p["w"].shape
+    xs = x.reshape(x.shape[:-1] + (blocks, bw))
+    y = jnp.einsum("...gi,gij->...gj", xs, p["w"].astype(x.dtype))
+    return y.reshape(x.shape) + p["b"].astype(x.dtype)
+
+
+def rglru_init(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    lru = cfg.lru_width or d
+    heads = cfg.num_heads
+    k = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(k[0], d, lru, dtype=dtype),        # recurrent branch in
+        "w_y": dense_init(k[1], d, lru, dtype=dtype),        # gelu gate branch
+        "conv_w": jax.random.normal(k[2], (cfg.ssm_conv, lru), dtype) * 0.1,
+        "conv_b": jnp.zeros((lru,), dtype),
+        "gate_a": _blockdiag_init(k[3], lru, heads, dtype),
+        "gate_x": _blockdiag_init(k[4], lru, heads, dtype),
+        "lam": jnp.full((lru,), 4.0, dtype),                 # softplus(4) ~ 4.02
+        "w_out": dense_init(k[5], lru, d, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(width)) + b
+
+
+def _rg_lru_scan(xi, p, h0=None):
+    """xi: (B, S, lru) -> (h (B, S, lru), h_last). Associative scan over S."""
+    r = jax.nn.sigmoid(_blockdiag_apply(p["gate_a"], xi).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag_apply(p["gate_x"], xi).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * xi.astype(jnp.float32)
+    )
+    if h0 is not None:  # decode: fold the carried state into the first step
+        gated = gated.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(xi.dtype), h[:, -1, :]
+
+
+def rglru_block_apply(p, x, cfg, *, compute_dtype=None, h0=None,
+                      return_cache: bool = False):
+    """Recurrent temporal block. x: (B, S, D) -> (y, h_last | decode cache)."""
+    cd = compute_dtype or x.dtype
+    x = x.astype(cd)
+    gate = jax.nn.gelu(x @ p["w_y"]["w"].astype(cd), approximate=True)
+    xi_raw = x @ p["w_x"]["w"].astype(cd)
+    xi = _causal_conv(xi_raw, p["conv_w"].astype(cd), p["conv_b"].astype(cd))
+    h, h_last = _rg_lru_scan(xi, p, h0=h0)
+    y = (gate * h) @ p["w_out"]["w"].astype(cd)
+    if return_cache:
+        width = p["conv_w"].shape[0]
+        return y, {"h": h_last, "conv": xi_raw[:, -(width - 1):, :]}
+    return y, h_last
+
+
+def rglru_cache_init(cfg, batch: int, dtype=jnp.float32):
+    lru = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, lru), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, lru), dtype),
+    }
+
+
+def rglru_decode_step(p, x, cache, cfg, *, compute_dtype=None):
+    """One-token decode. x: (B, 1, D) -> (y (B, 1, D), cache')."""
+    cd = compute_dtype or x.dtype
+    x = x.astype(cd)
+    gate = jax.nn.gelu(x @ p["w_y"]["w"].astype(cd), approximate=True)
+    xi = x @ p["w_x"]["w"].astype(cd)                        # (B, 1, lru)
+    hist = jnp.concatenate([cache["conv"], xi.astype(cache["conv"].dtype)], axis=1)
+    w = p["conv_w"].astype(hist.dtype)
+    xi_t = (jnp.einsum("bwc,wc->bc", hist, w) + p["conv_b"].astype(hist.dtype))[:, None, :]
+    r = jax.nn.sigmoid(_blockdiag_apply(p["gate_a"], xi_t).astype(jnp.float32))
+    i = jax.nn.sigmoid(_blockdiag_apply(p["gate_x"], xi_t).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)[:, 0]
+    gated = (jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9)) * (
+        i * xi_t.astype(jnp.float32)))[:, 0]
+    h_new = a * cache["h"] + gated
+    y = (gate * h_new[:, None, :].astype(cd)) @ p["w_out"]["w"].astype(cd)
+    return y, {"h": h_new, "conv": hist[:, 1:, :]}

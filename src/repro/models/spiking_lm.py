@@ -1,0 +1,172 @@
+"""Spiking transformer blocks at LM shape: the paper's technique transplanted
+onto the assigned decoder-only architectures (DESIGN.md S3, beyond-paper).
+
+Per block (all inter-layer tensors binary, exactly as in Spike-IAND-Former):
+
+    q/k/v  = LIF(RMSNorm(Linear(x)))            (tick-batched GEMMs)
+    attn   = LIF(causal-SSA(q, k, v))           (softmax-free, masked QK^T V)
+    branch = LIF(RMSNorm(Linear(attn)))
+    x      = IAND(x, branch)                    (AND-NOT residual)
+    h      = LIF(RMSNorm(Linear1(x)))
+    branch = LIF(RMSNorm(Linear2(h)))
+    x      = IAND(x, branch)
+
+Adaptations vs the vision model (documented in DESIGN.md S8): RMSNorm on the
+pre-LIF drive instead of BatchNorm (LM convention; spikes stay binary), causal
+masking on the spike score matrix, and -- enabled by softmax elimination -- a
+chunked LINEAR ordering (running K^T V state) that gives O(S d^2) attention
+and O(d^2) decode state: a spiking LM scales to 500k-token contexts.
+
+Time steps are tick-batched: T folds into the batch for every GEMM (single
+weight read for all T); only the LIF chains see the unfolded T axis.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.iand import iand
+from repro.core.lif import lif_parallel
+from repro.models.config import ArchConfig
+from repro.models.layers import rmsnorm_apply, rmsnorm_init
+
+
+def _fold(x):      # (T, B, S, D) -> (T*B, S, D)
+    return x.reshape((-1,) + x.shape[2:])
+
+
+def _unfold(x, t):
+    return x.reshape((t, -1) + x.shape[1:])
+
+
+def _lin_init(key, d_in, d_out, dtype):
+    return {"w": jax.random.normal(key, (d_in, d_out), dtype) * (d_in ** -0.5),
+            "norm": rmsnorm_init(d_out, dtype)}
+
+
+def _lin_norm_lif(p, x, cfg: ArchConfig, *, iand_skip=None):
+    """Tick-batched Linear -> RMSNorm -> LIF. x: (T, B, S, Din) spikes."""
+    t = x.shape[0]
+    y = _fold(x) @ p["w"].astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y, eps=cfg.norm_eps)
+    return lif_parallel(_unfold(y, t), chain_len=cfg.spike_chain_len,
+                        iand_skip=iand_skip)
+
+
+def causal_ssa(q, k, v, *, scale: float, ordering: str = "quadratic",
+               chunk: int = 512):
+    """Softmax-free causal spiking attention. q/k/v: (T, B, H, S, Dh)."""
+    s = q.shape[3]
+    if ordering == "quadratic":
+        scores = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, 0.0)          # no softmax: mask -> 0
+        return jnp.einsum("tbhnm,tbhmd->tbhnd", scores, v) * scale
+    if ordering == "linear":
+        # chunked running K^T V state: O(S d^2), exact same result
+        chunk = min(chunk, s)
+        nc = s // chunk
+        qc = q.reshape(q.shape[:3] + (nc, chunk, q.shape[-1]))
+        kc = k.reshape(k.shape[:3] + (nc, chunk, k.shape[-1]))
+        vc = v.reshape(v.shape[:3] + (nc, chunk, v.shape[-1]))
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+        def step(state, inp):
+            q_i, k_i, v_i = inp
+            intra = jnp.einsum("tbhnd,tbhmd->tbhnm", q_i, k_i)
+            intra = jnp.where(mask, intra, 0.0)
+            y = jnp.einsum("tbhnm,tbhmd->tbhnd", intra, v_i)
+            y = y + jnp.einsum("tbhnd,tbhde->tbhne", q_i, state)
+            state = state + jnp.einsum("tbhmd,tbhme->tbhde", k_i, v_i)
+            return state, y
+
+        dh = q.shape[-1]
+        state0 = jnp.zeros(q.shape[:3] + (dh, dh), q.dtype)
+        _, ys = jax.lax.scan(
+            step, state0,
+            (qc.transpose(3, 0, 1, 2, 4, 5), kc.transpose(3, 0, 1, 2, 4, 5),
+             vc.transpose(3, 0, 1, 2, 4, 5)))
+        y = ys.transpose(1, 2, 3, 0, 4, 5).reshape(q.shape)
+        return y * scale
+    raise ValueError(ordering)
+
+
+def block_init(key, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 6)
+    return {
+        "q": _lin_init(ks[0], d, d, dtype),
+        "k": _lin_init(ks[1], d, d, dtype),
+        "v": _lin_init(ks[2], d, d, dtype),
+        "proj": _lin_init(ks[3], d, d, dtype),
+        "fc1": _lin_init(ks[4], d, f, dtype),
+        "fc2": _lin_init(ks[5], f, d, dtype),
+    }
+
+
+def block_apply(p, x, cfg: ArchConfig, *, ordering: str):
+    """x: (T, B, S, D) spikes -> same."""
+    t, b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    q = _lin_norm_lif(p["q"], x, cfg)
+    k = _lin_norm_lif(p["k"], x, cfg)
+    v = _lin_norm_lif(p["v"], x, cfg)
+    split = lambda z: z.reshape(t, b, s, h, dh).transpose(0, 1, 3, 2, 4)
+    attn = causal_ssa(split(q), split(k), split(v), scale=0.125,
+                      ordering=ordering)
+    attn = attn.transpose(0, 1, 3, 2, 4).reshape(t, b, s, d)
+    attn = lif_parallel(attn, chain_len=cfg.spike_chain_len)     # attn spikes
+    branch = _lin_norm_lif(p["proj"], attn, cfg)
+    x = iand(x, branch)                                          # AND-NOT residual
+    hdn = _lin_norm_lif(p["fc1"], x, cfg)
+    branch = _lin_norm_lif(p["fc2"], hdn, cfg)
+    return iand(x, branch)
+
+
+def init_spiking_lm(key, cfg: ArchConfig):
+    dtype = jnp.float32 if cfg.param_dtype == "float32" else jnp.bfloat16
+    k_e, k_l, k_h = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_l, cfg.num_layers)
+    return {
+        "embed": {"table": jax.random.normal(k_e, (cfg.vocab_size, cfg.d_model), dtype) * 0.02,
+                  "norm": rmsnorm_init(cfg.d_model, dtype)},
+        "layers": jax.vmap(lambda k: block_init(k, cfg, dtype))(layer_keys),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+        "lm_head": {"w": jax.random.normal(k_h, (cfg.d_model, cfg.vocab_size), dtype)
+                    * (cfg.d_model ** -0.5)},
+    }
+
+
+def forward(params, batch, cfg: ArchConfig, *, ordering: str = "quadratic"):
+    """tokens (B, S) -> logits (B, S, V). Rate-decoded over T time steps."""
+    t = cfg.spike_t
+    emb = jnp.take(params["embed"]["table"], batch["tokens"], axis=0)
+    drive = jnp.broadcast_to(emb[None], (t,) + emb.shape)
+    drive = rmsnorm_apply(params["embed"]["norm"], drive, eps=cfg.norm_eps)
+    x = lif_parallel(drive, chain_len=cfg.spike_chain_len)       # encoding layer
+
+    def body(x, p_l):
+        return block_apply(p_l, x, cfg, ordering=ordering), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable,
+                              prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["layers"])
+
+    rate = x.mean(axis=0)                                        # rate decoding
+    rate = rmsnorm_apply(params["final_norm"], rate, eps=cfg.norm_eps)
+    return rate @ params["lm_head"]["w"].astype(rate.dtype)
+
+
+def loss_fn(params, batch, cfg: ArchConfig, *, ordering: str = "quadratic"):
+    from repro.models.lm import _shift_labels, cross_entropy
+
+    logits = forward(params, batch, cfg, ordering=ordering)
+    labels, mask = _shift_labels(batch["tokens"])
+    ce = cross_entropy(logits, labels, mask)
+    return ce, {"loss": ce}

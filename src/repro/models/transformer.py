@@ -1,0 +1,489 @@
+"""Generic decoder-only LM covering all assigned families.
+
+One block vocabulary:
+    attn_mlp    -- dense transformer block (musicgen, qwen, llama, mistral,
+                   paligemma backbone)
+    attn_moe    -- attention + MoE FFN (granite, kimi-k2)
+    ssm         -- mamba2/SSD mixer block
+    rec         -- RG-LRU recurrent block + MLP (recurrentgemma)
+    attn_local  -- sliding-window attention block + MLP (recurrentgemma)
+
+Uniform-kind models stack per-layer params with a leading L dim and run
+``lax.scan`` over layers (compact HLO, remat-wrapped body).  Hybrid models
+(mixed kinds) use a Python loop over a list of per-layer params.
+
+Sharding: parameters get explicit PartitionSpecs from ``param_pspecs`` (FSDP
+over ``data`` x TP over ``model``); activations carry logical-axis
+constraints that resolve through ``repro.distributed.sharding`` rules.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rglru as RG
+from repro.models.config import ArchConfig
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}[name]
+
+
+# Remat configuration for the layer body (module-level so the perf-iteration
+# loop can sweep it; see EXPERIMENTS.md S Perf).  prevent_cse=False is safe
+# ONLY under lax.scan/cond (the control-flow boundary preserves the
+# rematerialisation); the Python-loop (hybrid) path must keep CSE prevention
+# or XLA merges the recompute with the forward and saves everything.
+REMAT_KWARGS: dict = {
+    "policy": jax.checkpoint_policies.nothing_saveable,
+    "prevent_cse": False,
+}
+REMAT_KWARGS_UNROLLED: dict = {
+    "policy": jax.checkpoint_policies.nothing_saveable,
+    "prevent_cse": True,
+}
+
+
+def _remat(fn, *, scanned: bool = True):
+    return jax.checkpoint(fn, **(REMAT_KWARGS if scanned else REMAT_KWARGS_UNROLLED))
+
+
+def layer_kinds(cfg: ArchConfig) -> list[str]:
+    if cfg.family in ("dense", "audio", "vlm"):
+        return ["attn_mlp"] * cfg.num_layers
+    if cfg.family == "moe":
+        return ["attn_moe"] * cfg.num_layers
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.num_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn_local")
+        return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+    raise ValueError(cfg.family)
+
+
+def _uniform(cfg: ArchConfig) -> bool:
+    return len(set(layer_kinds(cfg))) == 1 and cfg.scan_layers
+
+
+# ---------------------------------------------------------------------------
+# per-block init / pspecs
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ArchConfig, kind: str, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    if kind in ("attn_mlp", "attn_local"):
+        return {
+            "ln1": L.rmsnorm_init(d, dtype),
+            "attn": L.attention_init(k1, cfg, dtype),
+            "ln2": L.rmsnorm_init(d, dtype),
+            "mlp": L.mlp_init(k2, d, cfg.d_ff, act=cfg.act, dtype=dtype),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": L.rmsnorm_init(d, dtype),
+            "attn": L.attention_init(k1, cfg, dtype),
+            "ln2": L.rmsnorm_init(d, dtype),
+            "moe": MOE.moe_init(k2, cfg, dtype),
+        }
+    if kind == "ssm":
+        return {"ln": L.rmsnorm_init(d, dtype), "mixer": M2.mamba2_init(k1, cfg, dtype)}
+    if kind == "rec":
+        return {
+            "ln1": L.rmsnorm_init(d, dtype),
+            "rec": RG.rglru_init(k1, cfg, dtype),
+            "ln2": L.rmsnorm_init(d, dtype),
+            "mlp": L.mlp_init(k2, d, cfg.d_ff, act=cfg.act, dtype=dtype),
+        }
+    raise ValueError(kind)
+
+
+def _attn_pspecs(cfg):
+    p = {
+        "wq": {"w": P("data", "model")},
+        "wk": {"w": P("data", "model")},
+        "wv": {"w": P("data", "model")},
+        "wo": {"w": P("model", "data")},
+    }
+    if cfg.qkv_bias:
+        for n in ("wq", "wk", "wv"):
+            p[n]["b"] = P("model")
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": P(None)}
+        p["k_norm"] = {"scale": P(None)}
+    return p
+
+
+def _mlp_pspecs(cfg):
+    p = {"down": {"w": P("model", "data")}, "up": {"w": P("data", "model")}}
+    if cfg.act in ("swiglu", "geglu"):
+        p["gate"] = {"w": P("data", "model")}
+    return p
+
+
+def block_pspecs(cfg: ArchConfig, kind: str):
+    if kind in ("attn_mlp", "attn_local"):
+        return {
+            "ln1": {"scale": P(None)},
+            "attn": _attn_pspecs(cfg),
+            "ln2": {"scale": P(None)},
+            "mlp": _mlp_pspecs(cfg),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": {"scale": P(None)},
+            "attn": _attn_pspecs(cfg),
+            "ln2": {"scale": P(None)},
+            "moe": {
+                "router": {"w": P(None, None)},
+                "w_gate": P("data", None, "model"),
+                "w_up": P("data", None, "model"),
+                "w_down": P("data", "model", None),
+            },
+        }
+    if kind == "ssm":
+        return {
+            "ln": {"scale": P(None)},
+            "mixer": {
+                "in_proj": {"w": P("data", "model")},
+                "conv_w": P(None, "model"),
+                "conv_b": P("model"),
+                "A_log": P(None),
+                "D": P(None),
+                "dt_bias": P(None),
+                "norm": {"scale": P(None)},
+                "out_proj": {"w": P("model", "data")},
+            },
+        }
+    if kind == "rec":
+        return {
+            "ln1": {"scale": P(None)},
+            "rec": {
+                "w_x": {"w": P("data", "model")},
+                "w_y": {"w": P("data", "model")},
+                "conv_w": P(None, "model"),
+                "conv_b": P("model"),
+                "gate_a": {"w": P("model", None, None), "b": P("model")},
+                "gate_x": {"w": P("model", None, None), "b": P("model")},
+                "lam": P("model"),
+                "w_out": {"w": P("model", "data")},
+            },
+            "ln2": {"scale": P(None)},
+            "mlp": _mlp_pspecs(cfg),
+        }
+    raise ValueError(kind)
+
+
+def _prepend_layer_dim(specs):
+    return jax.tree_util.tree_map(
+        lambda s: P(*((None,) + tuple(s))), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# per-block apply (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_apply(p, x, cfg: ArchConfig, kind: str, *, positions, prefix_len: int,
+                collect_cache: bool):
+    """x: (B, S, D). Returns (x', aux_loss, cache_kv_or_None)."""
+    cd = _dtype(cfg.compute_dtype)
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    if kind in ("attn_mlp", "attn_local", "attn_moe"):
+        window = cfg.local_window if kind == "attn_local" else None
+        h = L.rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+        y, (k, v) = L.attention_apply(
+            p["attn"], h, cfg, positions=positions, window=window,
+            prefix_len=prefix_len, compute_dtype=cd)
+        x = x + y
+        x = constrain(x, "batch", "seq", "embed")
+        h = L.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        if kind == "attn_moe":
+            y, aux = MOE.moe_apply(p["moe"], h, cfg, compute_dtype=cd)
+        else:
+            y = L.mlp_apply(p["mlp"], h, act=cfg.act, compute_dtype=cd)
+        x = x + y
+        if collect_cache:
+            if kind == "attn_local":
+                # ring-buffer alignment: with S % window == 0 the last window
+                # tokens land at slots t % window = 0..window-1 in order
+                w = min(cfg.local_window, k.shape[1])
+                k, v = k[:, -w:], v[:, -w:]
+            cache = {"k": k.astype(cd), "v": v.astype(cd)}
+    elif kind == "ssm":
+        h = L.rmsnorm_apply(p["ln"], x, eps=cfg.norm_eps)
+        if collect_cache:
+            y, cache = M2.mamba2_apply(p["mixer"], h, cfg, compute_dtype=cd,
+                                       return_cache=True)
+        else:
+            y = M2.mamba2_apply(p["mixer"], h, cfg, compute_dtype=cd)
+        x = x + y
+    elif kind == "rec":
+        h = L.rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+        y, rec_out = RG.rglru_block_apply(p["rec"], h, cfg, compute_dtype=cd,
+                                          return_cache=collect_cache)
+        x = x + y
+        h2 = L.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h2, act=cfg.act, compute_dtype=cd)
+        if collect_cache:
+            cache = rec_out
+    else:
+        raise ValueError(kind)
+    x = constrain(x, "batch", "seq", "embed")
+    return x, aux, cache
+
+
+# ---------------------------------------------------------------------------
+# per-block decode
+# ---------------------------------------------------------------------------
+
+def block_decode(p, x, cache, cfg: ArchConfig, kind: str, *, pos):
+    """x: (B, 1, D); cache: per-layer dict. Returns (x', cache')."""
+    cd = _dtype(cfg.compute_dtype)
+    if kind in ("attn_mlp", "attn_local", "attn_moe"):
+        ring = kind == "attn_local"
+        h = L.rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+        y, ck, cv = L.attention_decode_apply(
+            p["attn"], h, cfg, cache_k=cache["k"], cache_v=cache["v"], pos=pos,
+            compute_dtype=cd, ring=ring)
+        x = x + y
+        h = L.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        if kind == "attn_moe":
+            y, _ = MOE.moe_apply(p["moe"], h, cfg, compute_dtype=cd)
+        else:
+            y = L.mlp_apply(p["mlp"], h, act=cfg.act, compute_dtype=cd)
+        x = x + y
+        return x, {"k": ck, "v": cv}
+    if kind == "ssm":
+        h = L.rmsnorm_apply(p["ln"], x, eps=cfg.norm_eps)
+        y, new_cache = M2.mamba2_decode_step(p["mixer"], h, cache, cfg, compute_dtype=cd)
+        return x + y, new_cache
+    if kind == "rec":
+        h = L.rmsnorm_apply(p["ln1"], x, eps=cfg.norm_eps)
+        y, new_cache = RG.rglru_decode_step(p["rec"], h, cache, cfg, compute_dtype=cd)
+        x = x + y
+        h2 = L.rmsnorm_apply(p["ln2"], x, eps=cfg.norm_eps)
+        x = x + L.mlp_apply(p["mlp"], h2, act=cfg.act, compute_dtype=cd)
+        return x, new_cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# decode-cache construction
+# ---------------------------------------------------------------------------
+
+def block_cache_init(cfg: ArchConfig, kind: str, batch: int, seq_len: int, dtype):
+    kv, dh = cfg.num_kv_heads, cfg.resolved_head_dim
+    if kind in ("attn_mlp", "attn_moe"):
+        shape = (batch, seq_len, kv, dh)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "attn_local":
+        s = min(seq_len, cfg.local_window)
+        shape = (batch, s, kv, dh)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if kind == "ssm":
+        return M2.mamba2_cache_init(cfg, batch, dtype)
+    if kind == "rec":
+        return RG.rglru_cache_init(cfg, batch, dtype)
+    raise ValueError(kind)
+
+
+def block_cache_pspecs(cfg: ArchConfig, kind: str):
+    if kind in ("attn_mlp", "attn_moe", "attn_local"):
+        kv_spec = P("data", "model", None, None)  # sequence-sharded KV cache
+        return {"k": kv_spec, "v": kv_spec}
+    if kind == "ssm":
+        return {"state": P("data", None, None, None), "conv": P("data", None, "model")}
+    if kind == "rec":
+        return {"h": P("data", "model"), "conv": P("data", None, "model")}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# whole-model init / pspecs
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = _dtype(cfg.param_dtype)
+    kinds = layer_kinds(cfg)
+    k_embed, k_layers, k_head = jax.random.split(key, 3)
+    params: dict = {}
+
+    if cfg.modality != "audio_stub":
+        params["embed"] = {
+            "table": jax.random.normal(k_embed, (cfg.vocab_size, cfg.d_model), dtype) * 0.02
+        }
+
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    if _uniform(cfg):
+        params["layers"] = jax.vmap(
+            lambda k: block_init(k, cfg, kinds[0], dtype)
+        )(layer_keys)
+    else:
+        params["layers"] = [
+            block_init(layer_keys[i], cfg, kinds[i], dtype)
+            for i in range(cfg.num_layers)
+        ]
+
+    params["final_norm"] = L.rmsnorm_init(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = {
+            "w": jax.random.normal(k_head, (cfg.d_model, cfg.vocab_size), dtype)
+            * (cfg.d_model ** -0.5)
+        }
+    return params
+
+
+def param_pspecs(cfg: ArchConfig):
+    kinds = layer_kinds(cfg)
+    specs: dict = {}
+    if cfg.modality != "audio_stub":
+        specs["embed"] = {"table": P("model", "data")}
+    if _uniform(cfg):
+        specs["layers"] = _prepend_layer_dim(block_pspecs(cfg, kinds[0]))
+    else:
+        specs["layers"] = [block_pspecs(cfg, k) for k in kinds]
+    specs["final_norm"] = {"scale": P(None)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = {"w": P("data", "model")}
+    return specs
+
+
+def cache_init(cfg: ArchConfig, batch: int, seq_len: int):
+    dtype = _dtype(cfg.compute_dtype)
+    kinds = layer_kinds(cfg)
+    if _uniform(cfg):
+        one = block_cache_init(cfg, kinds[0], batch, seq_len, dtype)
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_layers,) + a.shape), one
+        )
+    return [block_cache_init(cfg, k, batch, seq_len, dtype) for k in kinds]
+
+
+def cache_pspecs(cfg: ArchConfig):
+    kinds = layer_kinds(cfg)
+    if _uniform(cfg):
+        return _prepend_layer_dim(block_cache_pspecs(cfg, kinds[0]))
+    return [block_cache_pspecs(cfg, k) for k in kinds]
+
+
+# ---------------------------------------------------------------------------
+# whole-model forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, batch, cfg: ArchConfig):
+    """Returns (x (B,S,D) in compute dtype, prefix_len)."""
+    cd = _dtype(cfg.compute_dtype)
+    if cfg.modality == "text":
+        x = jnp.take(params["embed"]["table"], batch["tokens"], axis=0)
+        prefix_len = 0
+    elif cfg.modality == "audio_stub":
+        x = batch["embeds"]  # precomputed EnCodec frame embeddings (stub)
+        prefix_len = 0
+    elif cfg.modality == "vision_stub":
+        text = jnp.take(params["embed"]["table"], batch["tokens"], axis=0)
+        x = jnp.concatenate([batch["image_embeds"].astype(text.dtype), text], axis=1)
+        prefix_len = batch["image_embeds"].shape[1]
+    else:
+        raise ValueError(cfg.modality)
+    x = x.astype(cd)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+    return x, prefix_len
+
+
+def _logits(params, x, cfg: ArchConfig):
+    x = L.rmsnorm_apply(params["final_norm"], x, eps=cfg.norm_eps)
+    if cfg.tie_embeddings:
+        w = params["embed"]["table"].T
+    else:
+        w = params["lm_head"]["w"]
+    logits = x @ w.astype(x.dtype)
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def forward(params, batch, cfg: ArchConfig, *, collect_cache: bool = False):
+    """Full-sequence forward. Returns (logits, aux_loss, cache_or_None)."""
+    kinds = layer_kinds(cfg)
+    x, prefix_len = embed_inputs(params, batch, cfg)
+    x = constrain(x, "batch", "seq", "embed")
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+
+    if _uniform(cfg):
+        def body(carry, p_l):
+            x, aux = carry
+            x, a, cache = block_apply(
+                p_l, x, cfg, kinds[0], positions=positions, prefix_len=prefix_len,
+                collect_cache=collect_cache)
+            return (x, aux + a), cache
+
+        if cfg.remat:
+            body = _remat(body)
+        (x, aux), cache = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                                       params["layers"])
+        if not collect_cache:
+            cache = None
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        caches = []
+        for i, kind in enumerate(kinds):
+            fn = functools.partial(
+                block_apply, cfg=cfg, kind=kind, positions=positions,
+                prefix_len=prefix_len, collect_cache=collect_cache)
+            if cfg.remat:
+                fn = _remat(fn, scanned=False)
+            x, a, c = fn(params["layers"][i], x)
+            aux = aux + a
+            caches.append(c)
+        cache = caches if collect_cache else None
+
+    return _logits(params, x, cfg), aux, cache
+
+
+# ---------------------------------------------------------------------------
+# whole-model decode
+# ---------------------------------------------------------------------------
+
+def decode(params, cache, batch, pos, cfg: ArchConfig):
+    """One-token decode. batch: {'token': (B,1)} (text) or {'embeds': (B,1,D)}.
+
+    Returns (logits (B,1,V), cache')."""
+    cd = _dtype(cfg.compute_dtype)
+    kinds = layer_kinds(cfg)
+    if cfg.modality == "audio_stub":
+        x = batch["embeds"].astype(cd)
+    else:
+        x = jnp.take(params["embed"]["table"], batch["token"], axis=0).astype(cd)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), cd)
+
+    if _uniform(cfg):
+        def body(x, inp):
+            p_l, c_l = inp
+            x, c_new = block_decode(p_l, x, c_l, cfg, kinds[0], pos=pos)
+            return x, c_new
+
+        x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    else:
+        new_cache = []
+        for i, kind in enumerate(kinds):
+            x, c_new = block_decode(params["layers"][i], x, cache[i], cfg, kind, pos=pos)
+            new_cache.append(c_new)
+
+    return _logits(params, x, cfg), new_cache
+
+
+def num_params(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

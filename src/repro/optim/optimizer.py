@@ -1,0 +1,237 @@
+"""Optimizers: AdamW (fp32/bf16 moments) and factored Adafactor-lite.
+
+Self-contained (no optax in the image).  Moments are sharded identically to
+the parameters (2-D FSDPxTP sharding = fully sharded optimizer state); the
+moment dtype is per-arch (kimi-k2 uses bf16 moments to fit 512 chips --
+DESIGN.md S4).  Update includes global-norm clipping and decoupled weight
+decay; the LR schedule is linear-warmup + cosine decay.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"              # adamw | adafactor
+    lr: float = 5e-4                 # paper: AdamW, cosine from 5e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"     # float32 | bfloat16
+    master_weights: bool = False     # keep f32 master copy when params are bf16
+                                     # (=> bf16 grads on the wire: the grad
+                                     # reduce-scatter and weight all-gathers
+                                     # run at half the bytes)
+
+
+def cosine_schedule(cfg: OptimizerConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    progress = (step - cfg.warmup_steps) / jnp.maximum(
+        cfg.total_steps - cfg.warmup_steps, 1)
+    progress = jnp.clip(progress, 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+    return cfg.lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    config: OptimizerConfig
+    init: Callable[[Any], Any]
+    update: Callable[..., tuple[Any, Any]]
+
+    @staticmethod
+    def last_grad_norm(opt_state) -> jax.Array:
+        return opt_state["grad_norm"]
+
+
+def _clip(grads, clip_norm):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads), gn
+
+
+def make_adamw(cfg: OptimizerConfig) -> Optimizer:
+    sdtype = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, sdtype)
+        state = {
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "grad_norm": jnp.zeros((), jnp.float32),
+        }
+        if cfg.master_weights:
+            state["master"] = jax.tree_util.tree_map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, opt_state, params, *, step):
+        grads, gn = _clip(grads, cfg.clip_norm)
+        t = (step + 1).astype(jnp.float32)
+        lr = cosine_schedule(cfg, step)
+        bc1 = 1 - cfg.b1 ** t
+        bc2 = 1 - cfg.b2 ** t
+
+        def upd(g, m, v, p, master=None):
+            g32 = g.astype(jnp.float32)
+            m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            ref = master if master is not None else p
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + cfg.weight_decay * ref.astype(jnp.float32)
+            new_ref = ref.astype(jnp.float32) - lr * delta
+            out = (new_ref.astype(p.dtype), m_new.astype(sdtype),
+                   v_new.astype(sdtype))
+            if master is not None:
+                out = out + (new_ref,)
+            return out
+
+        if cfg.master_weights:
+            out = jax.tree_util.tree_map(
+                upd, grads, opt_state["m"], opt_state["v"], params,
+                opt_state["master"])
+        else:
+            out = jax.tree_util.tree_map(
+                upd, grads, opt_state["m"], opt_state["v"], params)
+        pick = lambda i: jax.tree_util.tree_map(
+            lambda o: o[i], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": pick(1), "v": pick(2), "grad_norm": gn}
+        if cfg.master_weights:
+            new_state["master"] = pick(3)
+        return pick(0), new_state
+
+    return Optimizer(cfg, init, update)
+
+
+def make_adafactor(cfg: OptimizerConfig) -> Optimizer:
+    """Factored second moment (row/col) for >=2-D params; saves O(param) memory.
+    ``b1 == 0`` drops the first moment entirely (classic Adafactor) -- the
+    memory-floor choice for trillion-param training: total optimizer bytes
+    ~= O(rows + cols) instead of 2x params (kimi-k2 @ 256 chips needs this:
+    bf16 params 8.15 GB/dev + factored v fits 16 GB HBM; bf16 Adam does not)."""
+    sdtype = jnp.bfloat16 if cfg.state_dtype == "bfloat16" else jnp.float32
+    use_momentum = cfg.b1 > 0.0
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def vstate(p):
+            if _factored(p):
+                return {
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"full": jnp.zeros(p.shape, jnp.float32)}
+
+        state = {
+            "v": jax.tree_util.tree_map(vstate, params),
+            "grad_norm": jnp.zeros((), jnp.float32),
+        }
+        if use_momentum:
+            state["m"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, sdtype), params)
+        return state
+
+    def update(grads, opt_state, params, *, step):
+        grads, gn = _clip(grads, cfg.clip_norm)
+        lr = cosine_schedule(cfg, step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + 1e-30
+            if _factored(p):
+                row = cfg.b2 * v["row"] + (1 - cfg.b2) * g2.mean(axis=-1)
+                col = cfg.b2 * v["col"] + (1 - cfg.b2) * g2.mean(axis=-2)
+                vhat = (row[..., None] * col[..., None, :]) / jnp.maximum(
+                    row.mean(axis=-1)[..., None, None], 1e-30)
+                v_new = {"row": row, "col": col}
+            else:
+                full = cfg.b2 * v["full"] + (1 - cfg.b2) * g2
+                vhat = full
+                v_new = {"full": full}
+            upd_ = g32 / jnp.maximum(jnp.sqrt(vhat), 1e-30)
+            if use_momentum:
+                m_new = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * upd_
+                delta = m_new
+            else:
+                m_new = None
+                delta = upd_
+            if p.ndim >= 2:
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            p_new = p.astype(jnp.float32) - lr * delta
+            return (p_new.astype(p.dtype),
+                    m_new.astype(sdtype) if m_new is not None else None, v_new)
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = (tdef.flatten_up_to(opt_state["m"]) if use_momentum
+                  else [None] * len(flat_g))
+        flat_v = tdef.flatten_up_to(opt_state["v"])
+        flat_p = tdef.flatten_up_to(params)
+        outs = [upd(*args) for args in zip(flat_g, flat_m, flat_v, flat_p)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_v = jax.tree_util.tree_unflatten(tdef, [o[2] for o in outs])
+        new_state = {"v": new_v, "grad_norm": gn}
+        if use_momentum:
+            new_state["m"] = jax.tree_util.tree_unflatten(
+                tdef, [o[1] for o in outs])
+        return new_params, new_state
+
+    return Optimizer(cfg, init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig) -> Optimizer:
+    if cfg.kind == "adamw":
+        return make_adamw(cfg)
+    if cfg.kind == "adafactor":
+        return make_adafactor(cfg)
+    raise ValueError(cfg.kind)
+
+
+def opt_pspecs(param_specs, kind: str = "adamw"):
+    """Moment shardings mirror the parameter shardings."""
+    from jax.sharding import PartitionSpec as P
+
+    if kind == "adamw":
+        return {
+            "m": param_specs,
+            "v": param_specs,
+            "grad_norm": P(),
+        }
+    if kind == "adafactor":
+        def vspec(s):
+            spec = tuple(s)
+            return {
+                "row": P(*spec[:-1]) if len(spec) >= 2 else P(*spec),
+                "col": P(*(spec[:-2] + spec[-1:])) if len(spec) >= 2 else P(*spec),
+            }
+        # NOTE: for <2-D params the v entry is {"full": ...}; specs for those
+        # are replicated -- handled by the generic fallback in launch.dryrun.
+        return {
+            "m": param_specs,
+            "v": jax.tree_util.tree_map(vspec, param_specs,
+                                        is_leaf=lambda x: isinstance(x, P)),
+            "grad_norm": P(),
+        }
+    raise ValueError(kind)

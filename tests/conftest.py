@@ -1,0 +1,9 @@
+import os
+
+# Tests run on the single real CPU device; only the dry-run forces 512
+# placeholder devices (and does so in its own process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

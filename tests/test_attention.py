@@ -1,0 +1,95 @@
+"""Flash (chunked) attention vs dense reference: fwd + custom VJP, masks,
+GQA grouping, unrolled probe mode."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.models.layers as L
+
+KEY = jax.random.PRNGKey(0)
+B, S, H, KV, DH = 2, 128, 8, 4, 32
+
+
+@pytest.fixture()
+def qkv():
+    ks = jax.random.split(KEY, 4)
+    return (jax.random.normal(ks[0], (B, S, H, DH)),
+            jax.random.normal(ks[1], (B, S, KV, DH)),
+            jax.random.normal(ks[2], (B, S, KV, DH)),
+            jax.random.normal(ks[3], (B, S, H, DH)))
+
+
+def dense_ref(q, k, v, prefix_len=0, window=None):
+    pos = jnp.arange(S)
+    g = H // KV
+    qg = q.reshape(B, S, KV, g, DH)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / math.sqrt(DH)
+    mask = pos[None, :] <= pos[:, None]
+    if prefix_len:
+        mask = mask | (pos[None, :] < prefix_len)
+    if window:
+        mask = mask & (pos[None, :] > pos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, -1)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", p, v).reshape(B, S, H, DH)
+
+
+@pytest.mark.parametrize("kwargs", [{}, {"prefix_len": 37}, {"window": 64}])
+@pytest.mark.parametrize("unroll", [False, True])
+def test_flash_vs_dense_fwd_bwd(qkv, kwargs, unroll):
+    q, k, v, do = qkv
+    pos = jnp.arange(S)
+    old = L.UNROLL_ATTN
+    L.UNROLL_ATTN = unroll
+    try:
+        f = lambda q, k, v: L.chunked_attention(
+            q, k, v, q_positions=pos, kv_positions=pos, block_q=32, block_k=16,
+            **kwargs)
+        np.testing.assert_allclose(
+            np.asarray(f(q, k, v)), np.asarray(dense_ref(q, k, v, **kwargs)),
+            rtol=2e-5, atol=2e-5)
+        g_got = jax.grad(lambda *a: (f(*a) * do).sum(), argnums=(0, 1, 2))(q, k, v)
+        g_want = jax.grad(lambda *a: (dense_ref(*a, **kwargs) * do).sum(),
+                          argnums=(0, 1, 2))(q, k, v)
+        for a, b in zip(g_got, g_want):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-4, atol=1e-4)
+    finally:
+        L.UNROLL_ATTN = old
+
+
+def test_decode_matches_last_row(qkv):
+    q, k, v, _ = qkv
+    out = L.decode_attention(q[:, -1:], k, v, cache_len=S)
+    np.testing.assert_allclose(
+        np.asarray(out), np.asarray(dense_ref(q, k, v)[:, -1:]),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: scores depend only on relative positions."""
+    x = jax.random.normal(KEY, (1, 4, 2, 16))
+    a = L.apply_rope(x, jnp.arange(4), theta=10000.0)
+    b = L.apply_rope(x, jnp.arange(4) + 7, theta=10000.0)
+    sa = jnp.einsum("bqhd,bkhd->bqk", a, a)
+    sb = jnp.einsum("bqhd,bkhd->bqk", b, b)
+    np.testing.assert_allclose(np.asarray(sa), np.asarray(sb), rtol=1e-4, atol=1e-5)
+
+
+def test_qk_norm_and_bias_paths():
+    from repro.models.lm import get_config
+    from repro.models import transformer as T
+
+    for arch in ("qwen3-8b_smoke", "qwen1.5-4b_smoke"):
+        cfg = get_config(arch)
+        params = T.init_lm(KEY, cfg)
+        kinds = T.layer_kinds(cfg)
+        attn = jax.tree_util.tree_map(lambda x: x[0], params["layers"])["attn"]
+        if cfg.qk_norm:
+            assert "q_norm" in attn
+        if cfg.qkv_bias:
+            assert "b" in attn["wq"]

@@ -1,0 +1,87 @@
+"""Fast dry-run machinery tests on the single real device (the production
+512-device dry-run runs via `python -m repro.launch.dryrun`; artifacts are
+checked here if present)."""
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def test_collective_parser():
+    from repro.launch.dryrun import _type_bytes, collective_bytes
+
+    assert _type_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _type_bytes("(f32[8,8], s32[4])") == 8 * 8 * 4 + 4 * 4
+    hlo = """
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ag = bf16[2048,256]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[64]{0} all-reduce(%conv.1), to_apply=%add
+  %conv.1 = f32[64]{0} convert(%p0)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 128 * 256 * 2
+    assert out["all-reduce"] == 64 * 4
+
+
+def test_lower_on_host_mesh():
+    """The full build_cell path lowers on a 1-device mesh (no 512-dev fork)."""
+    from repro.distributed.sharding import make_rules, use_rules
+    from repro.models import lm, transformer as T
+    from repro.models.config import ShapeCell
+
+    cfg = lm.get_config("llama3.2-1b_smoke")
+    cell = ShapeCell("tiny_train", 64, 4, "train")
+    from repro.optim.optimizer import OptimizerConfig, make_optimizer
+
+    opt = make_optimizer(OptimizerConfig())
+    params_struct = jax.eval_shape(lambda: T.init_lm(jax.random.PRNGKey(0), cfg))
+    opt_struct = jax.eval_shape(opt.init, params_struct)
+    state_struct = {"params": params_struct, "opt_state": opt_struct,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)}
+    batch_struct = lm.batch_struct(cfg, cell)
+    step = lm.make_train_step(cfg, opt)
+    lowered = jax.jit(step).lower(state_struct, batch_struct)
+    compiled = lowered.compile()
+    assert compiled.cost_analysis().get("flops", 0) > 0
+
+
+def test_mesh_factory_shapes():
+    from repro.launch.mesh import batch_axes
+
+    assert batch_axes(False) == ("data",)
+    assert batch_axes(True) == ("pod", "data")
+
+
+@pytest.mark.skipif(not ART.exists() or not list(ART.glob("*.json")),
+                    reason="dry-run artifacts not generated yet")
+def test_dryrun_artifacts_no_failures():
+    """Every generated (arch x cell x mesh) artifact is OK or a documented
+    SKIP; 40 cells x 2 meshes when the full sweep has run."""
+    records = [json.loads(p.read_text()) for p in ART.glob("*.json")]
+    fails = [r for r in records if r["status"] == "FAIL"]
+    assert not fails, [(r["arch"], r["cell"], r.get("error")) for r in fails]
+    skips = [r for r in records if r["status"] == "SKIP"]
+    for r in skips:
+        assert r["cell"] == "long_500k", r  # only documented long-context skips
+    oks = [r for r in records if r["status"] == "OK"]
+    for r in oks:
+        assert r["flops"] > 0
+        assert r["bytes_accessed"] > 0
+
+
+@pytest.mark.skipif(not (ART.parent / "dryrun").exists()
+                    or len(list(ART.glob("*pod2x16x16.json"))) == 0,
+                    reason="multi-pod artifacts not generated yet")
+def test_multipod_artifacts_have_pod_axis():
+    """Multi-pod cells compiled against 512 devices."""
+    recs = [json.loads(p.read_text()) for p in ART.glob("*pod2x16x16.json")]
+    oks = [r for r in recs if r["status"] == "OK"]
+    assert oks
+    for r in oks:
+        assert r["num_devices"] == 512

@@ -1,0 +1,125 @@
+"""IAND residuals, SSA orderings, Spikformer end-to-end + all-spike property."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import spikformer as sf
+from repro.core.encoding import bitplane_conv, direct_encode, from_bitplanes, to_bitplanes
+from repro.core.iand import iand, is_binary, residual_add
+from repro.core.spiking_attention import ssa
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _rand_spikes(key, shape):
+    return (jax.random.uniform(key, shape) > 0.5).astype(jnp.float32)
+
+
+def test_iand_truth_table():
+    x = jnp.array([0.0, 0.0, 1.0, 1.0])
+    y = jnp.array([0.0, 1.0, 0.0, 1.0])
+    np.testing.assert_array_equal(np.asarray(iand(x, y)), [0.0, 0.0, 1.0, 0.0])
+    assert bool(is_binary(iand(x, y)))
+    # residual ADD leaves the binary domain (the Spikformer problem)
+    assert not bool(is_binary(residual_add(x, y)))
+
+
+def test_ssa_orderings_equal():
+    q, k, v = (_rand_spikes(kk, (2, 1, 3, 16, 8)) for kk in jax.random.split(KEY, 3))
+    a = ssa(q, k, v, ordering="quadratic")
+    b = ssa(q, k, v, ordering="linear")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_bitplane_roundtrip_and_linearity():
+    img = jax.random.randint(KEY, (2, 8, 8, 3), 0, 256).astype(jnp.uint8)
+    np.testing.assert_array_equal(
+        np.asarray(from_bitplanes(to_bitplanes(img))), np.asarray(img).astype(np.float32))
+    # bitplane conv == direct conv (linearity; reuses the spike PE path)
+    from repro.core import nn as cnn
+    p = cnn.conv_init(KEY, 3, 4, 3)
+    got = bitplane_conv(lambda pp, x: cnn.conv_apply(pp, x), p, img)
+    want = cnn.conv_apply(p, img.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=4)
+    params, state = sf.init(KEY, cfg)
+    img = jax.random.uniform(KEY, (2, 32, 32, 3))
+    return cfg, params, state, img
+
+
+def test_spikformer_forward_shapes(tiny_model):
+    cfg, params, state, img = tiny_model
+    logits, _ = sf.apply(params, state, img, cfg, train=True)
+    assert logits.shape == (2, cfg.num_classes)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_all_spike_property_iand(tiny_model):
+    """The paper's claim: with IAND residuals every inter-block tensor is
+    binary."""
+    cfg, params, state, img = tiny_model
+    _, _, spikes = sf.apply(params, state, img, cfg, train=True, return_spikes=True)
+    for s in spikes:
+        assert bool(is_binary(s))
+
+
+def test_add_baseline_breaks_binarity(tiny_model):
+    cfg, params, state, img = tiny_model
+    cfg_add = sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=4,
+                                  residual="add")
+    _, _, spikes = sf.apply(params, state, img, cfg_add, train=True,
+                            return_spikes=True)
+    assert not all(bool(is_binary(s)) for s in spikes[1:])
+
+
+def test_serial_and_parallel_schedules_identical_logits(tiny_model):
+    cfg, params, state, img = tiny_model
+    cfg_ser = sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=4,
+                                  lif_schedule="serial")
+    a, _ = sf.apply(params, state, img, cfg, train=False)
+    b, _ = sf.apply(params, state, img, cfg_ser, train=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_train_step_reduces_loss(tiny_model):
+    cfg, params, state, img = tiny_model
+    labels = jnp.array([1, 3])
+
+    def loss_fn(p, s):
+        logits, s2 = sf.apply(p, s, img, cfg, train=True)
+        return -jnp.mean(jax.nn.log_softmax(logits)[jnp.arange(2), labels]), s2
+
+    @jax.jit
+    def step(p, s):
+        (l, s2), g = jax.value_and_grad(loss_fn, has_aux=True)(p, s)
+        p = jax.tree_util.tree_map(lambda w, gw: w - 0.05 * gw, p, g)
+        return p, s2, l
+
+    losses = []
+    for _ in range(8):
+        params, state, l = step(params, state)
+        losses.append(float(l))
+    assert losses[-1] < losses[0]
+
+
+def test_kernel_pipeline_matches_jnp(tiny_model):
+    """use_kernel=True routes LIF through the Pallas kernel; logits match."""
+    cfg, params, state, img = tiny_model
+    cfg_k = sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=4,
+                                use_kernel=True)
+    a, _ = sf.apply(params, state, img, cfg, train=False)
+    b, _ = sf.apply(params, state, img, cfg_k, train=False)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+def test_direct_encode_shape():
+    img = jax.random.uniform(KEY, (2, 8, 8, 3))
+    enc = direct_encode(img, 4)
+    assert enc.shape == (4, 2, 8, 8, 3)
+    np.testing.assert_array_equal(np.asarray(enc[0]), np.asarray(enc[3]))

@@ -1,0 +1,120 @@
+"""Pallas kernel allclose sweeps vs ref.py oracles (interpret mode on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.lif_parallel.ops import lif_iand_op, lif_parallel_op
+from repro.kernels.lif_parallel.ref import lif_parallel_ref, lif_parallel_ref_grad
+from repro.kernels.spike_matmul.ops import conv1x1_op, conv3x3_op, spike_matmul_op
+from repro.kernels.spike_matmul.ref import conv1x1_ref, conv3x3_ref, spike_matmul_ref
+from repro.kernels.spiking_attention.ops import ssa_op
+from repro.kernels.spiking_attention.ref import ssa_linear_ref, ssa_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _spikes(key, shape, dtype=jnp.float32):
+    return (jax.random.uniform(key, shape) > 0.5).astype(dtype)
+
+
+# -- lif_parallel -------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [
+    (4, 128), (4, 8, 300), (2, 1024), (1, 130), (4, 3, 5, 7), (8, 256),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_lif_kernel_shapes_dtypes(shape, dtype):
+    drive = jax.random.normal(KEY, shape).astype(dtype)
+    got = lif_parallel_op(drive)
+    want = lif_parallel_ref(drive.reshape(shape[0], -1)).reshape(shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("chain_len", [1, 2, 4])
+def test_lif_kernel_reconfigurable(chain_len):
+    drive = jax.random.normal(KEY, (4, 512))
+    got = lif_parallel_op(drive, chain_len=chain_len)
+    want = lif_parallel_ref(drive, chain_len=chain_len)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("reset", ["hard", "soft"])
+def test_lif_kernel_reset_modes(reset):
+    drive = jax.random.normal(KEY, (4, 256))
+    got = lif_parallel_op(drive, reset=reset)
+    want = lif_parallel_ref(drive, reset=reset)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("chain_len", [1, 2, 4])
+def test_lif_kernel_backward(chain_len):
+    drive = jax.random.normal(KEY, (4, 512))
+    g = jax.random.normal(jax.random.PRNGKey(1), (4, 512))
+    _, vjp = jax.vjp(lambda d: lif_parallel_op(d, chain_len=chain_len), drive)
+    dx = vjp(g)[0]
+    dx_ref = lif_parallel_ref_grad(drive, g, chain_len=chain_len)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref), rtol=1e-6)
+
+
+def test_lif_kernel_fused_iand():
+    drive = jax.random.normal(KEY, (4, 384))
+    skip = _spikes(jax.random.PRNGKey(2), (4, 384))
+    got = lif_iand_op(drive, skip)
+    want = lif_parallel_ref(drive, skip=skip)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert bool(jnp.all((got == 0) | (got == 1)))
+
+
+# -- spiking_attention --------------------------------------------------------
+
+@pytest.mark.parametrize("t,b,h,n,dh", [
+    (4, 2, 3, 64, 48), (1, 1, 1, 16, 8), (2, 2, 4, 64, 64), (4, 1, 2, 196, 32),
+])
+def test_ssa_kernel_vs_oracle(t, b, h, n, dh):
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    got = ssa_op(q, k, v)
+    fold = lambda x: x.reshape(t * b * h, n, dh)
+    want = ssa_ref(fold(q), fold(k), fold(v)).reshape(t, b, h, n, dh)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_ssa_kernel_gradients():
+    t, b, h, n, dh = 2, 1, 2, 32, 16
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    g = jax.grad(lambda q: ssa_op(q, k, v).sum())(q)
+    fold = lambda x: x.reshape(t * b * h, n, dh)
+    g_ref = jax.grad(lambda q2: ssa_ref(q2, fold(k), fold(v)).sum())(fold(q))
+    np.testing.assert_allclose(
+        np.asarray(g), np.asarray(g_ref.reshape(t, b, h, n, dh)), rtol=1e-5, atol=1e-5)
+
+
+def test_ssa_linear_ordering_identity():
+    """No softmax => (QK^T)V == Q(K^TV): the 500k-context enabler."""
+    q, k, v = (_spikes(kk, (24, 64, 48)) for kk in jax.random.split(KEY, 3))
+    np.testing.assert_allclose(
+        np.asarray(ssa_ref(q, k, v)), np.asarray(ssa_linear_ref(q, k, v)),
+        rtol=1e-5, atol=1e-5)
+
+
+# -- spike_matmul -------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,c", [(200, 77, 130), (128, 128, 128), (64, 9, 32),
+                                   (1000, 300, 50)])
+def test_spike_matmul_vs_oracle(m, k, c):
+    x = _spikes(KEY, (m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, c))
+    np.testing.assert_allclose(
+        np.asarray(spike_matmul_op(x, w)), np.asarray(spike_matmul_ref(x, w)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_conv_paths_vs_oracle():
+    x = _spikes(KEY, (2, 8, 8, 16))
+    w1 = jax.random.normal(jax.random.PRNGKey(1), (16, 32))
+    np.testing.assert_allclose(np.asarray(conv1x1_op(x, w1)),
+                               np.asarray(conv1x1_ref(x, w1)), rtol=1e-4, atol=1e-4)
+    w3 = jax.random.normal(jax.random.PRNGKey(2), (3, 3, 16, 32))
+    np.testing.assert_allclose(np.asarray(conv3x3_op(x, w3)),
+                               np.asarray(conv3x3_ref(x, w3)), rtol=1e-4, atol=1e-4)

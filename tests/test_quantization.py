@@ -1,0 +1,52 @@
+"""Weight-only int8 quantization (serving path)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.quantization import (
+    dequant, dequantize_params, quantize_int8, quantize_params_int8)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_quantize_roundtrip_error_bounded():
+    w = jax.random.normal(KEY, (128, 256)) * 0.02
+    qw = quantize_int8(w)
+    w2 = dequant(qw, jnp.float32)
+    err = jnp.abs(w - w2)
+    bound = jnp.max(jnp.abs(w), axis=0) / 127.0  # per-channel step
+    assert bool(jnp.all(err <= bound[None, :] * 0.5 + 1e-8))
+
+
+def test_params_tree_quantization_shrinks():
+    params = {
+        "big": jax.random.normal(KEY, (256, 128)),
+        "norm": jnp.ones((128,)),              # passes through
+        "tiny": jax.random.normal(KEY, (8, 8)),  # too small, passes through
+    }
+    q, before, after = quantize_params_int8(params)
+    assert after < before * 0.5
+    assert isinstance(q["big"], dict) and q["big"]["q"].dtype == jnp.int8
+    assert q["norm"].dtype == params["norm"].dtype
+    restored = dequantize_params(q, jnp.float32)
+    np.testing.assert_allclose(np.asarray(restored["big"]),
+                               np.asarray(params["big"]), atol=0.03)
+    np.testing.assert_array_equal(np.asarray(restored["norm"]),
+                                  np.asarray(params["norm"]))
+
+
+def test_quantized_model_quality():
+    from repro.models import lm, transformer as T
+
+    cfg = lm.get_config("llama3.2-1b_smoke")
+    params = T.init_lm(KEY, cfg)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    logits, _, _ = T.forward(params, {"tokens": tokens}, cfg)
+    q, _, _ = quantize_params_int8(params)
+    logits_q, _, _ = T.forward(dequantize_params(q, jnp.float32),
+                               {"tokens": tokens}, cfg)
+    a = np.asarray(logits).ravel()
+    b = np.asarray(logits_q).ravel()
+    cos = np.dot(a, b) / (np.linalg.norm(a) * np.linalg.norm(b))
+    assert cos > 0.995

@@ -1,0 +1,51 @@
+"""Integration: the production train launcher end-to-end -- loss decreases,
+checkpoint/restart is exact, grad compression trains, serving generates."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def test_train_loss_decreases(tmp_path):
+    state, losses = train("llama3.2-1b_smoke", steps=30, batch=4, seq_len=64,
+                          ckpt_dir=None, log_every=1000)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_checkpoint_restart_exact(tmp_path):
+    """Train 20; vs train 10 -> crash -> resume 10: identical final state
+    (deterministic data pipeline + exact state restore)."""
+    d1, d2 = tmp_path / "a", tmp_path / "b"
+    state_a, losses_a = train("llama3.2-1b_smoke", steps=20, batch=2,
+                              seq_len=32, ckpt_dir=str(d1), ckpt_every=100,
+                              log_every=1000)
+    # interrupted run: same 20-step budget, simulated crash at step 10
+    train("llama3.2-1b_smoke", steps=20, batch=2, seq_len=32,
+          ckpt_dir=str(d2), ckpt_every=100, log_every=1000, stop_after=10)
+    # resume to 20
+    state_b, losses_b = train("llama3.2-1b_smoke", steps=20, batch=2,
+                              seq_len=32, ckpt_dir=str(d2), ckpt_every=100,
+                              log_every=1000)
+    for a, b in zip(jax.tree_util.tree_leaves(state_a["params"]),
+                    jax.tree_util.tree_leaves(state_b["params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_grad_compression_trains(tmp_path):
+    state, losses = train("llama3.2-1b_smoke", steps=25, batch=4, seq_len=64,
+                          compress_grads=True, log_every=1000)
+    assert np.mean(losses[-5:]) < np.mean(losses[:5])
+
+
+def test_serving_generates():
+    done = serve("llama3.2-1b_smoke", num_requests=4, prompt_len=16,
+                 max_new=8, slots=2, verbose=False)
+    assert len(done) == 4
+    for idx, gen in done:
+        assert gen.shape == (8,)
+        assert gen.dtype == np.int32
