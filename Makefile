@@ -1,0 +1,12 @@
+.PHONY: test test-fast bench
+
+# Tier-1 verify: full suite, stop at first failure.
+test:
+	./scripts/test.sh
+
+# Quick signal: kernels + engine + model tests only.
+test-fast:
+	./scripts/test.sh tests/test_kernels.py tests/test_engine.py tests/test_iand_spikformer.py tests/test_lif.py
+
+bench:
+	PYTHONPATH=src python -m benchmarks.run

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import spikformer as sf
+from repro.launch.compile_info import cost_analysis_dict
 
 BATCH = 8
 
@@ -50,7 +51,7 @@ def measure(cfg, params, state, img, *, wall_iters=3):
     jitted = jax.jit(fn)
     lowered = jitted.lower(params, state, img)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     out = jitted(params, state, img)
     out.block_until_ready()
     t0 = time.perf_counter()

@@ -37,6 +37,8 @@ from pathlib import Path
 
 import jax
 
+from repro.launch.compile_info import cost_analysis_dict
+
 PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e-class)
 HBM_BW = 819e9               # bytes/s / chip
 LINK_BW = 50e9               # bytes/s / link (ICI)
@@ -74,7 +76,7 @@ def compile_costs(cfg, cell_name: str, preset: str = "base") -> dict:
         with use_rules(rules), mesh:
             lowered = jitted.lower(*args)
             compiled = lowered.compile()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             coll = dr.collective_bytes(compiled.as_text())
         return {
             "flops": float(cost.get("flops", 0.0)),

@@ -3,6 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract, then
 each benchmark's own detailed report.
 
+  engine  -- deploy plan (BN folded, IAND fused) vs naive eval graph
   table1  -- IAND vs ADD residual training proxy (paper Table I)
   table2  -- serial vs parallel tick-batching weight traffic (Table II /
              the -43.2% weight-access claim)
@@ -28,11 +29,13 @@ def _run(name, fn):
 
 
 def main() -> None:
-    from benchmarks import (int8_decode, kernel_bench,
+    from benchmarks import (engine_fused_vs_naive, int8_decode, kernel_bench,
                             linear_attention_scaling, perf_spiking,
                             table1_iand_vs_add, table2_weight_traffic)
 
     print("name,us_per_call,derived")
+    _run("engine_fused_vs_naive", engine_fused_vs_naive.main)
+    print()
     _run("table2_weight_traffic", table2_weight_traffic.main)
     print()
     _run("kernel_bench", kernel_bench.main)

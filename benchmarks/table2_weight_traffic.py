@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.lif import lif_parallel, lif_serial
+from repro.launch.compile_info import cost_analysis_dict
 
 T_STEPS = 4
 N_TOK = 256          # tokens (e.g. 16x16 feature map)
@@ -49,7 +50,7 @@ def parallel_schedule(spikes, w):
 
 def _cost(fn, *args):
     c = jax.jit(fn).lower(*args).compile()
-    cost = c.cost_analysis()
+    cost = cost_analysis_dict(c)
     return float(cost.get("bytes accessed", 0.0)), float(cost.get("flops", 0.0))
 
 

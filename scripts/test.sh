@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verify in one invocation: sets PYTHONPATH=src and runs pytest.
+# Usage: scripts/test.sh [extra pytest args...]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

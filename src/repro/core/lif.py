@@ -181,23 +181,39 @@ def lif(
     chain_len: int | None = None,
     surrogate: str = "boxcar",
     use_kernel: bool = False,
+    iand_skip: jax.Array | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Schedule-dispatching LIF entry point used by the model code.
+    """THE neuron dispatch: every LIF in the model and the deploy engine goes
+    through this one entry point.
 
-    ``use_kernel=True`` routes through the Pallas ``lif_parallel`` kernel
-    (interpret mode on CPU); otherwise the pure-jnp unrolled version is used.
-    Both are bit-equivalent to :func:`lif_serial`.
+    * ``use_kernel=True`` routes through the Pallas ``lif_parallel`` kernel
+      (``interpret=None`` auto-selects interpret mode off-TPU); otherwise the
+      pure-jnp unrolled version is used.  Both are bit-equivalent to
+      :func:`lif_serial`.
+    * ``iand_skip`` fuses the paper's AND-NOT residual ``skip * (1 - s)`` into
+      the neuron's output stage on every route -- the kernel runs it inside
+      the Pallas epilogue (zero extra HBM round-trips).  The fused kernel
+      epilogue is forward-only (deploy path); training with fusion uses the
+      differentiable jnp route.
     """
     if schedule == "serial":
-        return lif_serial(drive, theta=theta, lam=lam, reset=reset, surrogate=surrogate)
+        out = lif_serial(drive, theta=theta, lam=lam, reset=reset, surrogate=surrogate)
+        if iand_skip is not None:
+            out = iand_skip * (1.0 - out)
+        return out
     if schedule == "parallel":
         if use_kernel:
             from repro.kernels.lif_parallel import ops as lif_ops
 
+            if iand_skip is not None:
+                return lif_ops.lif_iand_op(
+                    drive, iand_skip, theta=theta, lam=lam, reset=reset,
+                    chain_len=chain_len, interpret=interpret)
             return lif_ops.lif_parallel_op(
-                drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len
-            )
+                drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
+                interpret=interpret)
         return lif_parallel(
-            drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len, surrogate=surrogate
-        )
+            drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
+            surrogate=surrogate, iand_skip=iand_skip)
     raise ValueError(f"unknown schedule: {schedule}")

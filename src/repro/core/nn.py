@@ -112,6 +112,20 @@ def fold_conv_bn(conv_p, bn_p, bn_state, eps: float = 1e-5):
     return {"w": w, "b": b}
 
 
+def fold_linear_bn(lin_p, bn_p, bn_state, eps: float = 1e-5):
+    """Deploy-time Linear+BN folding: one (w, b) pair, BN disappears.
+
+    ``linear(x, w') + b'`` equals ``bn_eval(linear(x, w) + b)`` up to FP
+    reassociation (~1e-7 absolute); the engine equivalence suite bounds the
+    end-to-end effect."""
+    g = bn_p["scale"] * jax.lax.rsqrt(bn_state["var"] + eps)
+    w = lin_p["w"] * g  # broadcast over d_out (last) axis
+    b = bn_p["bias"] - bn_state["mean"] * g
+    if "b" in lin_p:
+        b = b + lin_p["b"] * g
+    return {"w": w, "b": b}
+
+
 # -- tick-batch reshaping helpers ---------------------------------------------
 
 def fold_time(x):

@@ -4,6 +4,13 @@ Structure: Spiking Tokenizer -> L x {SSA block, MLP block} -> classification
 head.  The paper's variant replaces both residual additions per block with
 element-wise IAND, making every inter-layer tensor binary ("all-spike").
 
+The block's layer list is NOT hand-inlined here: both ``init`` and
+``block_apply`` iterate :func:`repro.engine.layout.block_layout`, the same
+definition the deploy engine (``repro.engine``) folds and fuses.  This module
+is the training/eval view (live BatchNorm, surrogate gradients); the engine
+is the deploy view (folded weights, fused LIF+IAND epilogue, backend as a
+plan property).
+
 All ConvBN / Linear+BN compute is tick-batched: T folds into the batch so each
 weight is read once per step for all time steps (the parallel tick-batching
 dataflow); only the LIF chains see the unfolded time axis.
@@ -20,7 +27,8 @@ from repro.core import nn as cnn
 from repro.core import tokenizer as tok
 from repro.core.iand import connective
 from repro.core.lif import lif
-from repro.core.spiking_attention import ssa
+from repro.core.spiking_attention import merge_heads, split_heads, ssa
+from repro.engine.layout import block_layout
 
 
 @dataclass(frozen=True)
@@ -42,7 +50,7 @@ class SpikformerConfig:
     theta: float = 0.5
     lam: float = 0.25
     lif_schedule: str = "parallel"  # "parallel" (paper) | "serial" (SpinalFlow-style)
-    use_kernel: bool = False
+    use_kernel: bool = False        # legacy flag; deploy plans carry a Backend
     # tick_fold=False reproduces the SERIAL tick-batching dataflow end to end:
     # every Linear/BN is applied once PER TIME STEP (T weight reads, membrane
     # carried across steps) instead of once on the T-folded batch.  This is
@@ -95,17 +103,15 @@ def init(key, cfg: SpikformerConfig):
     params, state = {}, {}
     params["tokenizer"], state["tokenizer"] = tok.init(keys[0], cfg.tokenizer_config())
 
-    d, hidden = cfg.embed_dim, int(cfg.embed_dim * cfg.mlp_ratio)
+    units = block_layout(cfg)
     for i in range(cfg.num_layers):
-        bk = jax.random.split(keys[1 + i], 6)
+        bk = jax.random.split(keys[1 + i], len(units))
         bp, bs = {}, {}
-        for j, name in enumerate(("q", "k", "v", "proj")):
-            bp[name], bs[name] = _linear_bn_init(bk[j], d, d)
-        bp["fc1"], bs["fc1"] = _linear_bn_init(bk[4], d, hidden)
-        bp["fc2"], bs["fc2"] = _linear_bn_init(bk[5], hidden, d)
+        for u, k in zip(units, bk):
+            bp[u.name], bs[u.name] = _linear_bn_init(k, u.d_in, u.d_out)
         params[f"block{i}"], state[f"block{i}"] = bp, bs
 
-    params["head"] = cnn.linear_init(keys[-1], d, cfg.num_classes)
+    params["head"] = cnn.linear_init(keys[-1], cfg.embed_dim, cfg.num_classes)
     return params, state
 
 
@@ -114,17 +120,15 @@ def init(key, cfg: SpikformerConfig):
 # ---------------------------------------------------------------------------
 
 def _lif(cfg, drive, iand_skip=None):
-    out = lif(
+    return lif(
         drive,
         theta=cfg.theta,
         lam=cfg.lam,
         schedule=cfg.lif_schedule,
         chain_len=cfg.chain_len,
         use_kernel=cfg.use_kernel,
+        iand_skip=iand_skip,
     )
-    if iand_skip is not None:  # fused IAND epilogue (paper's AND-NOT residual)
-        out = iand_skip * (1.0 - out)
-    return out
 
 
 def _linear_bn_lif(cfg, p, s, x, *, train, iand_skip=None):
@@ -145,40 +149,47 @@ def _linear_bn_lif(cfg, p, s, x, *, train, iand_skip=None):
     return _lif(cfg, drive, iand_skip=iand_skip), {"bn": s_new}
 
 
-def _split_heads(x, h):
-    t, b, n, d = x.shape
-    return x.reshape(t, b, n, h, d // h).transpose(0, 1, 3, 2, 4)
-
-
-def _merge_heads(x):
-    t, b, h, n, dh = x.shape
-    return x.transpose(0, 1, 3, 2, 4).reshape(t, b, n, h * dh)
-
-
 def block_apply(bp, bs, x, cfg: SpikformerConfig, *, train: bool):
-    """One Spike-(IAND-)Former block. x: (T, B, N, D) spikes."""
+    """One Spike-(IAND-)Former block, walking the shared layer layout.
+    x: (T, B, N, D) spikes.
+
+    Residual joins on units marked ``fuse_residual`` go through the LIF
+    dispatch's ``iand_skip`` epilogue (bit-identical to the standalone
+    connective) on the jnp route; the Pallas route keeps the standalone
+    connective in training because the fused kernel epilogue is
+    forward-only."""
     res = connective(cfg.residual)
+    fuse_in_dispatch = not cfg.use_kernel
     ns = {}
+    acts: dict = {}
+    h = None
 
-    # --- spiking self-attention ---
-    q, ns["q"] = _linear_bn_lif(cfg, bp["q"], bs["q"], x, train=train)
-    k, ns["k"] = _linear_bn_lif(cfg, bp["k"], bs["k"], x, train=train)
-    v, ns["v"] = _linear_bn_lif(cfg, bp["v"], bs["v"], x, train=train)
-    attn = ssa(
-        _split_heads(q, cfg.num_heads),
-        _split_heads(k, cfg.num_heads),
-        _split_heads(v, cfg.num_heads),
-        scale=cfg.attn_scale,
-        ordering=cfg.attn_ordering,
-    )
-    attn = _lif(cfg, _merge_heads(attn))  # attn spikes
-    branch, ns["proj"] = _linear_bn_lif(cfg, bp["proj"], bs["proj"], attn, train=train)
-    x = res(x, branch)
-
-    # --- spiking MLP ---
-    h, ns["fc1"] = _linear_bn_lif(cfg, bp["fc1"], bs["fc1"], x, train=train)
-    branch, ns["fc2"] = _linear_bn_lif(cfg, bp["fc2"], bs["fc2"], h, train=train)
-    x = res(x, branch)
+    for u in block_layout(cfg):
+        if u.role == "qkv":
+            acts[u.name], ns[u.name] = _linear_bn_lif(cfg, bp[u.name], bs[u.name], x, train=train)
+            continue
+        if u.role == "attn_out":
+            attn = ssa(
+                split_heads(acts["q"], cfg.num_heads),
+                split_heads(acts["k"], cfg.num_heads),
+                split_heads(acts["v"], cfg.num_heads),
+                scale=cfg.attn_scale,
+                ordering=cfg.attn_ordering,
+            )
+            inp = _lif(cfg, merge_heads(attn))  # attn spikes
+        elif u.role == "mlp_hidden":
+            h, ns[u.name] = _linear_bn_lif(cfg, bp[u.name], bs[u.name], x, train=train)
+            continue
+        elif u.role == "mlp_out":
+            inp = h
+        else:
+            raise ValueError(f"unknown unit role: {u.role}")
+        if u.fuse_residual and fuse_in_dispatch:
+            x, ns[u.name] = _linear_bn_lif(
+                cfg, bp[u.name], bs[u.name], inp, train=train, iand_skip=x)
+        else:
+            branch, ns[u.name] = _linear_bn_lif(cfg, bp[u.name], bs[u.name], inp, train=train)
+            x = res(x, branch)
     return x, ns
 
 

@@ -48,6 +48,18 @@ def ssa(
     return out * scale
 
 
+def split_heads(x: jax.Array, h: int) -> jax.Array:
+    """(T, B, N, D) -> (T, B, H, N, D/H)."""
+    t, b, n, d = x.shape
+    return x.reshape(t, b, n, h, d // h).transpose(0, 1, 3, 2, 4)
+
+
+def merge_heads(x: jax.Array) -> jax.Array:
+    """(T, B, H, N, Dh) -> (T, B, N, H*Dh)."""
+    t, b, h, n, dh = x.shape
+    return x.transpose(0, 1, 3, 2, 4).reshape(t, b, n, h * dh)
+
+
 def ssa_linear_state_init(b: int, h: int, dh: int, dtype=jnp.float32):
     """O(d^2) running state for linear-ordering spiking decode: sum_m k_m v_m^T."""
     return jnp.zeros((b, h, dh, dh), dtype)

@@ -5,6 +5,10 @@ convolution is the *encoding layer* [Wu et al. 2019], converting 8-bit image
 inputs into spike signals across the time steps (direct encoding: the analog
 frame drives the first LIF at every tick).  Subsequent stages are
 ConvBN + LIF (+ MaxPool) operating purely on spikes, tick-batched.
+
+The stage list is shared with the deploy engine: both this training/eval view
+(live BatchNorm) and ``repro.engine`` (ConvBN folded into one weight read)
+iterate :func:`repro.engine.layout.tokenizer_layout`.
 """
 
 from __future__ import annotations
@@ -16,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core import nn as cnn
 from repro.core.lif import lif
+from repro.engine.layout import tokenizer_layout
 
 
 @dataclass(frozen=True)
@@ -35,12 +40,11 @@ class TokenizerConfig:
 
 def init(key, cfg: TokenizerConfig):
     params, state = {}, {}
-    c_in = cfg.in_channels
-    keys = jax.random.split(key, len(cfg.stage_channels))
-    for i, c_out in enumerate(cfg.stage_channels):
-        params[f"conv{i}"] = cnn.conv_init(keys[i], c_in, c_out, 3)
-        params[f"bn{i}"], state[f"bn{i}"] = cnn.bn_init(c_out)
-        c_in = c_out
+    stages = tokenizer_layout(cfg)
+    keys = jax.random.split(key, len(stages))
+    for stage, k in zip(stages, keys):
+        params[stage.conv] = cnn.conv_init(k, stage.c_in, stage.c_out, 3)
+        params[stage.bn], state[stage.bn] = cnn.bn_init(stage.c_out)
     assert cfg.stage_channels[-1] == cfg.embed_dim
     return params, state
 
@@ -59,33 +63,36 @@ def _lif(cfg: TokenizerConfig, drive):
 def apply(params, state, image, cfg: TokenizerConfig, *, train: bool):
     """image: (B, H, W, C) in [0, 1]. Returns (spikes (T, B, N, D), new_state)."""
     new_state = {}
-    # Stage 0 -- encoding layer: conv once (drive identical across ticks), then
-    # broadcast over T and let the LIF temporal dynamics produce the spike train.
-    y = cnn.conv_apply(params["conv0"], image)
-    y, new_state["bn0"] = cnn.bn_apply(params["bn0"], state["bn0"], y, train=train)
-    if cfg.pool_stages[0]:
-        y = cnn.maxpool(y)
-    drive = jnp.broadcast_to(y[None], (cfg.t,) + y.shape)
-    x = _lif(cfg, drive)  # (T, B, H, W, C0) spikes
-
-    # Remaining stages: tick-batched ConvBN on spikes, LIF unfolded over T
-    # (tick_fold=False: conv per time step = T weight reads, serial dataflow).
-    for i in range(1, len(cfg.stage_channels)):
-        if cfg.tick_fold:
-            flat = cnn.fold_time(x)  # (T*B, H, W, C): one weight read for all T
-            y = cnn.conv_apply(params[f"conv{i}"], flat)
-            y, new_state[f"bn{i}"] = cnn.bn_apply(params[f"bn{i}"], state[f"bn{i}"], y, train=train)
-            if cfg.pool_stages[i]:
+    x = None
+    for stage in tokenizer_layout(cfg):
+        if stage.encode:
+            # encoding layer: conv once (drive identical across ticks), then
+            # broadcast over T and let the LIF dynamics produce the spike train
+            y = cnn.conv_apply(params[stage.conv], image)
+            y, new_state[stage.bn] = cnn.bn_apply(
+                params[stage.bn], state[stage.bn], y, train=train)
+            if stage.pool:
                 y = cnn.maxpool(y)
-            x = _lif(cfg, cnn.unfold_time(y, cfg.t))
+            drive = jnp.broadcast_to(y[None], (cfg.t,) + y.shape)
+        elif cfg.tick_fold:
+            # tick-batched ConvBN on spikes: one weight read for all T
+            flat = cnn.fold_time(x)  # (T*B, H, W, C)
+            y = cnn.conv_apply(params[stage.conv], flat)
+            y, new_state[stage.bn] = cnn.bn_apply(
+                params[stage.bn], state[stage.bn], y, train=train)
+            if stage.pool:
+                y = cnn.maxpool(y)
+            drive = cnn.unfold_time(y, cfg.t)
         else:
-            ys = jnp.stack([cnn.conv_apply(params[f"conv{i}"], x[j])
+            # serial dataflow baseline: conv per time step = T weight reads
+            ys = jnp.stack([cnn.conv_apply(params[stage.conv], x[j])
                             for j in range(cfg.t)])
-            y, new_state[f"bn{i}"] = cnn.bn_apply(params[f"bn{i}"], state[f"bn{i}"],
-                                                  cnn.fold_time(ys), train=train)
-            if cfg.pool_stages[i]:
+            y, new_state[stage.bn] = cnn.bn_apply(
+                params[stage.bn], state[stage.bn], cnn.fold_time(ys), train=train)
+            if stage.pool:
                 y = cnn.maxpool(y)
-            x = _lif(cfg, cnn.unfold_time(y, cfg.t))
+            drive = cnn.unfold_time(y, cfg.t)
+        x = _lif(cfg, drive)
 
     t, b, h, w, d = x.shape
     return x.reshape(t, b, h * w, d), new_state

@@ -1,0 +1,29 @@
+"""Deploy-time fused inference engine (the paper's accelerator view).
+
+Layer-plan / execute split:
+
+* :func:`compile_plan` folds a trained ``(params, state, cfg)`` into a
+  :class:`DeployPlan`: ConvBN/LinearBN pairs become single weight reads,
+  AND-NOT residuals are marked for the fused LIF epilogue, and the backend
+  (jnp vs Pallas, interpret vs compiled) becomes a plan property.
+* :func:`apply` / :func:`make_apply_fn` execute a plan (the latter returns a
+  pure jit-friendly ``fn(params, image)``).
+* :func:`plan_stats` and :mod:`repro.engine.analysis` account for the ops the
+  deploy view eliminated (BN passes, standalone IAND passes, repeated weight
+  reads).
+
+The layer list itself lives in :mod:`repro.engine.layout` and is shared with
+the training graph in ``repro.core`` -- one definition, two views.
+"""
+
+from repro.engine.backend import JNP, PALLAS, Backend, resolve as resolve_backend
+from repro.engine.execute import apply, make_apply_fn
+from repro.engine.layout import ProjUnit, TokStage, block_layout, tokenizer_layout
+from repro.engine.plan import DeployPlan, PlanMeta, compile_plan, plan_stats
+
+__all__ = [
+    "JNP", "PALLAS", "Backend", "resolve_backend",
+    "apply", "make_apply_fn",
+    "ProjUnit", "TokStage", "block_layout", "tokenizer_layout",
+    "DeployPlan", "PlanMeta", "compile_plan", "plan_stats",
+]

@@ -1,0 +1,51 @@
+"""Jaxpr-level op accounting for the fused-vs-naive claim.
+
+The deploy plan's promise is structural: BatchNorm is folded at plan-compile
+time and the AND-NOT residual rides the LIF epilogue.  These helpers verify
+the promise on the traced graph itself: :func:`op_histogram` walks a
+function's jaxpr (including nested/closed sub-jaxprs) and counts primitives,
+and :func:`bn_op_count` reports how many BN-signature ops (``rsqrt`` /
+``batch_norm*``) the graph still contains -- 0 for any compiled plan.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import jax
+from jax import core as jcore
+
+
+_BN_PRIMS = ("rsqrt",)  # eval-mode BN lowers to rsqrt(var+eps); nothing else
+                        # in the spiking model uses rsqrt
+
+
+def _walk(jaxpr, counts: Counter):
+    for eqn in jaxpr.eqns:
+        counts[eqn.primitive.name] += 1
+        for v in eqn.params.values():
+            if isinstance(v, jcore.ClosedJaxpr):
+                _walk(v.jaxpr, counts)
+            elif isinstance(v, jcore.Jaxpr):
+                _walk(v, counts)
+            elif isinstance(v, (tuple, list)):
+                for item in v:
+                    if isinstance(item, jcore.ClosedJaxpr):
+                        _walk(item.jaxpr, counts)
+                    elif isinstance(item, jcore.Jaxpr):
+                        _walk(item, counts)
+
+
+def op_histogram(fn, *args, **kwargs) -> Counter:
+    """Primitive-name -> count over ``fn``'s jaxpr, nested jaxprs included."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    counts: Counter = Counter()
+    _walk(closed.jaxpr, counts)
+    return counts
+
+
+def bn_op_count(fn, *args, **kwargs) -> int:
+    """Number of BatchNorm-signature ops in ``fn``'s jaxpr."""
+    hist = op_histogram(fn, *args, **kwargs)
+    return sum(hist[p] for p in _BN_PRIMS) + sum(
+        n for name, n in hist.items() if name.startswith("batch_norm"))

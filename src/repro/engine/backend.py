@@ -1,0 +1,93 @@
+"""Backend selection as a plan property.
+
+The seed code threaded a ``use_kernel`` bool through five modules
+(SpikformerConfig -> TokenizerConfig -> every ``_lif`` call site); interpret
+mode was a module-level constant inside each kernel package.  Here both become
+one frozen :class:`Backend` value carried by the deploy plan (and derivable
+from the legacy flag for the training path):
+
+* ``kind``: ``"jnp"`` (pure-XLA oracle graph) or ``"pallas"`` (Pallas kernels
+  for LIF and optionally the spike GEMMs).
+* ``interpret``: Pallas interpret mode -- ``None`` auto-selects (interpret
+  off-TPU), ``False`` forces compiled lowering (TPU), ``True`` forces
+  interpretation.
+* ``matmul_kernel``: route deploy-time linears/convs through the
+  ``spike_matmul`` GEMM kernel as well (off by default: interpret-mode GEMMs
+  are CPU-slow; on TPU this maps the whole layer onto the paper's PE array).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+
+from repro.core.lif import lif as _lif_dispatch
+
+
+@dataclass(frozen=True)
+class Backend:
+    kind: str = "jnp"                  # "jnp" | "pallas"
+    interpret: bool | None = None      # None = auto (interpret off-TPU)
+    matmul_kernel: bool = False        # spike GEMM kernel for linears/convs
+
+    def __post_init__(self):
+        if self.kind not in ("jnp", "pallas"):
+            raise ValueError(f"unknown backend kind: {self.kind}")
+
+
+JNP = Backend("jnp")
+PALLAS = Backend("pallas")
+
+
+def resolve(spec) -> Backend:
+    """Coerce user-facing specs into a Backend: Backend | "jnp" | "pallas" |
+    bool (legacy use_kernel) | None."""
+    if isinstance(spec, Backend):
+        return spec
+    if spec is None:
+        return JNP
+    if isinstance(spec, bool):
+        return PALLAS if spec else JNP
+    if isinstance(spec, str):
+        return Backend(spec)
+    raise TypeError(f"cannot resolve backend from {spec!r}")
+
+
+def lif_apply(backend: Backend, drive: jax.Array, *, theta, lam, schedule,
+              chain_len, iand_skip=None, reset: str = "hard") -> jax.Array:
+    """Route a LIF (optionally with the fused IAND epilogue) through the
+    unified neuron dispatch on this backend."""
+    return _lif_dispatch(
+        drive, theta=theta, lam=lam, reset=reset, schedule=schedule,
+        chain_len=chain_len, use_kernel=(backend.kind == "pallas"),
+        iand_skip=iand_skip, interpret=backend.interpret)
+
+
+def linear_apply(backend: Backend, p, x2d: jax.Array) -> jax.Array:
+    """Folded linear (w, b) on tick-folded 2-D activations."""
+    if backend.kind == "pallas" and backend.matmul_kernel:
+        from repro.kernels.spike_matmul.ops import spike_matmul_op
+
+        y = spike_matmul_op(x2d, p["w"], interpret=backend.interpret)
+    else:
+        import jax.numpy as jnp
+
+        y = jnp.dot(x2d, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def conv3x3_apply(backend: Backend, p, x: jax.Array) -> jax.Array:
+    """Folded 3x3 SAME conv on (N, H, W, C) spikes."""
+    if backend.kind == "pallas" and backend.matmul_kernel:
+        from repro.kernels.spike_matmul.ops import conv3x3_op
+
+        y = conv3x3_op(x, p["w"], interpret=backend.interpret)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    from repro.core import nn as cnn
+
+    return cnn.conv_apply(p, x)

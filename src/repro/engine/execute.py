@@ -1,0 +1,118 @@
+"""Deploy-plan executor: folded weights in, logits out.
+
+Walks the same layer list (``engine.layout``) as the training graph, but in
+the accelerator's deploy view:
+
+* each stage/unit is ONE folded weight read (Conv/Linear with the BN baked
+  in) -- no separate BN pass over the activations;
+* every AND-NOT residual executes inside the LIF dispatch's epilogue
+  (``iand_skip``), so spikes are written once -- no standalone IAND pass;
+* all Conv/Linear compute is tick-batched (T folded into the batch: one
+  weight read serves all time steps).
+
+Executors are pure functions of (folded params, image); static plan metadata
+is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import nn as cnn
+from repro.core.iand import connective
+from repro.core.spiking_attention import merge_heads, split_heads, ssa
+from repro.engine import backend as B
+from repro.engine.plan import DeployPlan, PlanMeta
+
+
+def _lif(meta: PlanMeta, drive, iand_skip=None):
+    cfg = meta.cfg
+    return B.lif_apply(
+        meta.backend, drive, theta=cfg.theta, lam=cfg.lam,
+        schedule=cfg.lif_schedule, chain_len=cfg.chain_len,
+        iand_skip=iand_skip)
+
+
+def _tokenizer_exec(meta: PlanMeta, tok_params, image):
+    """image: (B, H, W, C) analog in [0, 1] -> spikes (T, B, N, D)."""
+    cfg = meta.cfg
+    x = None
+    for stage, p in zip(meta.tok_stages, tok_params):
+        if stage.encode:
+            # encoding layer: analog conv once, broadcast across T (the input
+            # is not binary, so it stays on the jnp conv even under the
+            # spike-GEMM backend)
+            y = cnn.conv_apply(p, image)
+            if stage.pool:
+                y = cnn.maxpool(y)
+            drive = jnp.broadcast_to(y[None], (cfg.t,) + y.shape)
+        else:
+            flat = cnn.fold_time(x)          # (T*B, H, W, C): one weight read
+            y = B.conv3x3_apply(meta.backend, p, flat)
+            if stage.pool:
+                y = cnn.maxpool(y)
+            drive = cnn.unfold_time(y, cfg.t)
+        x = _lif(meta, drive)
+    t, b, h, w, d = x.shape
+    return x.reshape(t, b, h * w, d)
+
+
+def _unit_linear(meta: PlanMeta, p, x):
+    """Tick-batched folded linear on (T, B, N, Din) spikes."""
+    t, b, n, _ = x.shape
+    y = B.linear_apply(meta.backend, p, x.reshape(t * b * n, -1))
+    return y.reshape(t, b, n, -1)
+
+
+def _block_exec(meta: PlanMeta, bparams, x):
+    """One block in deploy form. x: (T, B, N, D) spikes."""
+    cfg = meta.cfg
+    res = connective(cfg.residual)  # only reached for residual="add"
+    acts: dict = {}
+    h = None
+    for u in meta.block_units:
+        if u.role == "qkv":
+            acts[u.name] = _lif(meta, _unit_linear(meta, bparams[u.name], x))
+            continue
+        if u.role == "attn_out":
+            attn = ssa(
+                split_heads(acts["q"], cfg.num_heads),
+                split_heads(acts["k"], cfg.num_heads),
+                split_heads(acts["v"], cfg.num_heads),
+                scale=cfg.attn_scale, ordering=cfg.attn_ordering)
+            attn = _lif(meta, merge_heads(attn))          # attn spikes
+            drive = _unit_linear(meta, bparams[u.name], attn)
+        elif u.role == "mlp_hidden":
+            h = _lif(meta, _unit_linear(meta, bparams[u.name], x))
+            continue
+        elif u.role == "mlp_out":
+            drive = _unit_linear(meta, bparams[u.name], h)
+        else:
+            raise ValueError(f"unknown unit role: {u.role}")
+        if u.fuse_residual:      # AND-NOT inside the LIF epilogue
+            x = _lif(meta, drive, iand_skip=x)
+        else:
+            x = res(x, _lif(meta, drive))
+    return x
+
+
+def _execute(meta: PlanMeta, params, image):
+    x = _tokenizer_exec(meta, params["tokenizer"], image)
+    for bparams in params["blocks"]:
+        x = _block_exec(meta, bparams, x)
+    feats = x.mean(axis=(0, 2))              # rate decoding over (T, tokens)
+    return cnn.linear_apply(params["head"], feats)
+
+
+def make_apply_fn(plan: DeployPlan):
+    """Pure ``fn(params, image) -> logits`` with the plan's static metadata
+    closed over (jit-friendly: arrays stay arguments, not constants)."""
+    return functools.partial(_execute, plan.meta)
+
+
+def apply(plan: DeployPlan, image) -> jax.Array:
+    """One-shot convenience: run the plan on a batch of images."""
+    return _execute(plan.meta, plan.params, image)

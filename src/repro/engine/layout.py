@@ -1,0 +1,81 @@
+"""The model's layer list, as data: ONE definition shared by training and
+deploy.
+
+``repro.core.spikformer`` / ``repro.core.tokenizer`` (training/eval graph,
+live BatchNorm, standalone residual connective) and ``repro.engine`` (deploy
+graph, folded weights, fused LIF+IAND dispatch) both iterate these layouts
+instead of hand-inlining Linear -> BN -> LIF, so a layer added or resized in
+one place exists in both worlds by construction.
+
+Layouts are duck-typed over the configs (any object with the
+``SpikformerConfig`` / ``TokenizerConfig`` attributes works) so this module
+imports neither -- keeping ``core -> engine.layout`` dependency-cycle-free.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class TokStage:
+    """One Spiking-Tokenizer stage: ConvBN (+MaxPool) + LIF.
+
+    ``encode`` marks the paper's encoding layer (stage 0): the analog frame is
+    convolved ONCE and broadcast across T so the LIF dynamics produce the
+    spike train (direct encoding); all later stages are tick-batched spike
+    convolutions."""
+
+    index: int
+    conv: str           # param key, e.g. "conv0"
+    bn: str             # param/state key, e.g. "bn0"
+    c_in: int
+    c_out: int
+    pool: bool
+    encode: bool
+
+
+@dataclass(frozen=True)
+class ProjUnit:
+    """One Linear+BN+LIF unit of a Spike-(IAND-)Former block.
+
+    ``fuse_residual`` marks the units whose LIF output feeds the block's
+    AND-NOT residual: at deploy time the IAND executes inside the neuron's
+    epilogue (one dispatch, no standalone residual pass)."""
+
+    name: str           # param key within the block ("q", ..., "fc2")
+    d_in: int
+    d_out: int
+    role: str           # "qkv" | "attn_out" | "mlp_hidden" | "mlp_out"
+    fuse_residual: bool
+
+
+def tokenizer_layout(tcfg) -> tuple[TokStage, ...]:
+    """Stage list for a ``TokenizerConfig``-shaped object."""
+    stages = []
+    c_in = tcfg.in_channels
+    for i, c_out in enumerate(tcfg.stage_channels):
+        stages.append(TokStage(
+            index=i, conv=f"conv{i}", bn=f"bn{i}", c_in=c_in, c_out=c_out,
+            pool=bool(tcfg.pool_stages[i]), encode=(i == 0)))
+        c_in = c_out
+    return tuple(stages)
+
+
+def block_layout(cfg) -> tuple[ProjUnit, ...]:
+    """Unit list of one block for a ``SpikformerConfig``-shaped object.
+
+    Order is execution order; the SSA sits between the ``qkv`` units and the
+    ``attn_out`` unit, and the two residual joins follow ``attn_out`` and
+    ``mlp_out``."""
+    d = cfg.embed_dim
+    hidden = int(cfg.embed_dim * cfg.mlp_ratio)
+    fuse = cfg.residual == "iand"
+    return (
+        ProjUnit("q", d, d, "qkv", False),
+        ProjUnit("k", d, d, "qkv", False),
+        ProjUnit("v", d, d, "qkv", False),
+        ProjUnit("proj", d, d, "attn_out", fuse),
+        ProjUnit("fc1", d, hidden, "mlp_hidden", False),
+        ProjUnit("fc2", hidden, d, "mlp_out", fuse),
+    )

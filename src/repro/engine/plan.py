@@ -1,0 +1,116 @@
+"""Deploy-plan compiler: (params, state, cfg) -> the accelerator's view.
+
+``compile_plan`` performs the paper's deploy-time transformations once, ahead
+of serving:
+
+* every Conv+BN pair of the tokenizer is folded into a single (w, b) via
+  ``fold_conv_bn`` -- the BN disappears from the graph entirely;
+* every Linear+BN pair of every block is folded via ``fold_linear_bn``;
+* the block layout records which LIFs fuse the AND-NOT residual into their
+  epilogue, so execution never runs a standalone IAND pass;
+* the backend (jnp oracle vs Pallas kernels, interpret vs compiled) is a plan
+  property, not a per-call-site flag.
+
+The plan splits into hashable static metadata (:class:`PlanMeta`) and a plain
+pytree of folded arrays, so executors jit cleanly with the metadata closed
+over and the arrays as arguments.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+
+from repro.core import nn as cnn
+from repro.engine.backend import Backend, resolve
+from repro.engine.layout import ProjUnit, TokStage, block_layout, tokenizer_layout
+
+
+@dataclass(frozen=True)
+class PlanMeta:
+    """Static (hashable) half of a deploy plan."""
+
+    cfg: Any                          # SpikformerConfig (frozen dataclass)
+    backend: Backend
+    tok_stages: tuple[TokStage, ...]
+    block_units: tuple[ProjUnit, ...]
+    num_layers: int
+
+
+@dataclass(frozen=True)
+class DeployPlan:
+    meta: PlanMeta
+    params: dict                      # folded-weight pytree
+
+    @property
+    def cfg(self):
+        return self.meta.cfg
+
+    @property
+    def backend(self) -> Backend:
+        return self.meta.backend
+
+
+def compile_plan(params, state, cfg, *, backend="jnp") -> DeployPlan:
+    """Fold a trained (params, state, cfg) into a deploy plan.
+
+    ``backend``: Backend | "jnp" | "pallas" | bool (legacy ``use_kernel``).
+    """
+    be = resolve(backend)
+    tcfg = cfg.tokenizer_config()
+    tok_stages = tokenizer_layout(tcfg)
+    units = block_layout(cfg)
+
+    tp, ts = params["tokenizer"], state["tokenizer"]
+    folded_tok = tuple(
+        cnn.fold_conv_bn(tp[st.conv], tp[st.bn], ts[st.bn])
+        for st in tok_stages)
+
+    folded_blocks = []
+    for i in range(cfg.num_layers):
+        bp, bs = params[f"block{i}"], state[f"block{i}"]
+        folded_blocks.append({
+            u.name: cnn.fold_linear_bn(
+                bp[u.name]["lin"], bp[u.name]["bn"], bs[u.name]["bn"])
+            for u in units})
+
+    meta = PlanMeta(cfg=cfg, backend=be, tok_stages=tok_stages,
+                    block_units=units, num_layers=cfg.num_layers)
+    plan_params = {
+        "tokenizer": folded_tok,
+        "blocks": tuple(folded_blocks),
+        "head": params["head"],
+    }
+    return DeployPlan(meta=meta, params=plan_params)
+
+
+def plan_stats(plan: DeployPlan) -> dict:
+    """Structural op accounting of the deploy plan (what the paper's Table II
+    argues about): every BN is folded away, every IAND rides a LIF epilogue."""
+    meta = plan.meta
+    cfg = meta.cfg
+    n_tok = len(meta.tok_stages)
+    n_units = len(meta.block_units)
+    fused = sum(u.fuse_residual for u in meta.block_units) * meta.num_layers
+    residuals_per_block = 2
+    standalone = (0 if cfg.residual == "iand"
+                  else residuals_per_block * meta.num_layers)
+    return {
+        "folded_conv_bn": n_tok,
+        "folded_linear_bn": n_units * meta.num_layers,
+        "bn_ops": 0,                          # folded at plan-compile time
+        "fused_lif_iand_dispatches": fused,
+        "standalone_iand_ops": 0,  # IAND only ever executes in the fused epilogue
+        "standalone_add_ops": standalone,
+        # one LIF dispatch per tokenizer stage; per block: q,k,v, attn, proj,
+        # fc1, fc2
+        "lif_dispatches": n_tok + (n_units + 1) * meta.num_layers,
+        # tick-batched: each folded weight is read once per image batch for
+        # all T time steps
+        "weight_reads": n_tok + n_units * meta.num_layers + 1,
+        "backend": meta.backend.kind,
+        "param_count": sum(
+            p.size for p in jax.tree_util.tree_leaves(plan.params)),
+    }

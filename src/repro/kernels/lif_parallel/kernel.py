@@ -69,9 +69,12 @@ def lif_bwd_kernel(drive_ref, g_ref, dx_ref, *, t_total: int, chain_len: int,
     """Backward of the unrolled chain w.r.t. drive (surrogate boxcar).
 
     Recomputes u_t in VMEM (kernel-level remat), then walks the chain in
-    reverse:  du_t = g_t * surr'(u_t) + dv_t * dvdu_t ;  dv_{t-1} = lam * du_t.
-    ``dvdu`` includes the (non-detached) reset path, matching JAX autodiff of
-    the jnp oracle.
+    reverse, accumulating the spike cotangent BEFORE multiplying by the
+    surrogate -- ds_t = g_t - dv_t * u_t (hard reset), du_t = ds_t * surr'(u_t)
+    + dv_t * (1 - s_t) -- the exact grouping JAX autodiff produces for the jnp
+    oracle, so the chain-carried dv path stays bit-identical across time-step
+    boundaries (distributing surr over the sum instead drifts by ~1 ulp per
+    chained step).
     """
     rows = [drive_ref[t, :] for t in range(t_total)]
     spikes, us = _chain(t_total, chain_len, lam, theta, reset, rows)
@@ -80,10 +83,11 @@ def lif_bwd_kernel(drive_ref, g_ref, dx_ref, *, t_total: int, chain_len: int,
         u, s = us[t], spikes[t]
         surr = (jnp.abs(u - theta) < (width / 2.0)).astype(u.dtype) / width
         if reset == "hard":
-            dvdu = (1.0 - s) - u * surr
+            ds = g_ref[t, :] - dv * u      # spike cotangent incl. reset path
+            du = ds * surr + dv * (1.0 - s)
         else:
-            dvdu = 1.0 - theta * surr
-        du = g_ref[t, :] * surr + dv * dvdu
+            ds = g_ref[t, :] - theta * dv
+            du = ds * surr + dv
         dx_ref[t, :] = du
         # membrane flowing back across a chain boundary is cut by the mux
         dv = lam * du if t % chain_len != 0 else jnp.zeros_like(du)

@@ -4,6 +4,10 @@ Accepts arbitrary (T, ...) shapes: features are flattened to (T, N), padded to
 lane alignment, and restored. The custom VJP routes the backward pass through
 the backward Pallas kernel (chain recompute in VMEM), matching JAX autodiff of
 the jnp oracle with the boxcar surrogate.
+
+``interpret`` is a deploy-plan property (see ``repro.engine``): ``None``
+auto-selects interpret mode when not running on a TPU backend; pass
+``False``/``True`` to force compiled/interpreted execution.
 """
 
 from __future__ import annotations
@@ -15,8 +19,14 @@ import jax.numpy as jnp
 
 from repro.kernels.lif_parallel import kernel as K
 
-_INTERPRET = jax.default_backend() != "tpu"
 _SURR_WIDTH = 1.0
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """None -> interpret off-TPU (the CPU-correctness default)."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)
 
 
 def _flatten(drive):
@@ -32,29 +42,30 @@ def _pad_lanes(x):
     return x, n
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
-def _lif_op(drive2d, chain_len, lam, theta, reset):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _lif_op(drive2d, chain_len, lam, theta, reset, interpret):
     out = K.lif_parallel_fwd(
         drive2d, chain_len=chain_len, lam=lam, theta=theta, reset=reset,
-        skip=None, interpret=_INTERPRET)
+        skip=None, interpret=interpret)
     return out
 
 
-def _lif_op_fwd(drive2d, chain_len, lam, theta, reset):
-    return _lif_op(drive2d, chain_len, lam, theta, reset), drive2d
+def _lif_op_fwd(drive2d, chain_len, lam, theta, reset, interpret):
+    return _lif_op(drive2d, chain_len, lam, theta, reset, interpret), drive2d
 
 
-def _lif_op_bwd(chain_len, lam, theta, reset, drive2d, g):
+def _lif_op_bwd(chain_len, lam, theta, reset, interpret, drive2d, g):
     dx = K.lif_parallel_bwd(
         drive2d, g, chain_len=chain_len, lam=lam, theta=theta, reset=reset,
-        width=_SURR_WIDTH, interpret=_INTERPRET)
+        width=_SURR_WIDTH, interpret=interpret)
     return (dx,)
 
 
 _lif_op.defvjp(_lif_op_fwd, _lif_op_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("chain_len", "lam", "theta", "reset"))
+@functools.partial(
+    jax.jit, static_argnames=("chain_len", "lam", "theta", "reset", "interpret"))
 def lif_parallel_op(
     drive: jax.Array,
     *,
@@ -62,17 +73,20 @@ def lif_parallel_op(
     lam: float = 0.25,
     theta: float = 0.5,
     reset: str = "hard",
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Unrolled parallel tick-batching LIF. drive: (T, ...) -> spikes (T, ...)."""
     t = drive.shape[0]
     chain_len = chain_len or t
     flat, shape = _flatten(drive)
     padded, n = _pad_lanes(flat)
-    out = _lif_op(padded, chain_len, float(lam), float(theta), reset)
+    out = _lif_op(padded, chain_len, float(lam), float(theta), reset,
+                  resolve_interpret(interpret))
     return out[:, :n].reshape(shape)
 
 
-@functools.partial(jax.jit, static_argnames=("chain_len", "lam", "theta", "reset"))
+@functools.partial(
+    jax.jit, static_argnames=("chain_len", "lam", "theta", "reset", "interpret"))
 def lif_iand_op(
     drive: jax.Array,
     skip: jax.Array,
@@ -81,6 +95,7 @@ def lif_iand_op(
     lam: float = 0.25,
     theta: float = 0.5,
     reset: str = "hard",
+    interpret: bool | None = None,
 ) -> jax.Array:
     """LIF with fused IAND epilogue: ``skip * (1 - LIF(drive))`` (inference path)."""
     t = drive.shape[0]
@@ -91,5 +106,5 @@ def lif_iand_op(
     skip_p, _ = _pad_lanes(skip_flat)
     out = K.lif_parallel_fwd(
         padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
-        reset=reset, skip=skip_p, interpret=_INTERPRET)
+        reset=reset, skip=skip_p, interpret=resolve_interpret(interpret))
     return out[:, :n].reshape(shape)

@@ -15,8 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.spike_matmul import kernel as K
-
-_INTERPRET = jax.default_backend() != "tpu"
+from repro.kernels.lif_parallel.ops import resolve_interpret
 
 
 def _pad_to(x, axis, mult):
@@ -29,22 +28,24 @@ def _pad_to(x, axis, mult):
     return x, size
 
 
-@jax.jit
-def spike_matmul_op(x: jax.Array, w: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spike_matmul_op(x: jax.Array, w: jax.Array, *,
+                    interpret: bool | None = None) -> jax.Array:
     """(M, K) spikes x (K, C) -> (M, C) f32. Pads all dims to 128 alignment."""
     xp, m = _pad_to(x, 0, 128)
     xp, k = _pad_to(xp, 1, 128)
     wp, _ = _pad_to(w, 0, 128)
     wp, c = _pad_to(wp, 1, 128)
-    out = K.spike_matmul_fwd(xp, wp, interpret=_INTERPRET)
+    out = K.spike_matmul_fwd(xp, wp, interpret=resolve_interpret(interpret))
     return out[:m, :c]
 
 
-@jax.jit
-def conv1x1_op(x: jax.Array, w: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv1x1_op(x: jax.Array, w: jax.Array, *,
+               interpret: bool | None = None) -> jax.Array:
     """1x1 conv as direct GEMM. x: (N, H, W, Cin), w: (Cin, Cout)."""
     n, h, wd, c = x.shape
-    out = spike_matmul_op(x.reshape(n * h * wd, c), w)
+    out = spike_matmul_op(x.reshape(n * h * wd, c), w, interpret=interpret)
     return out.reshape(n, h, wd, w.shape[1])
 
 
@@ -62,12 +63,13 @@ def _im2col(x: jax.Array, ksize: int = 3) -> jax.Array:
     return patches.reshape(n * h * w, ksize * ksize * c)
 
 
-@jax.jit
-def conv3x3_op(x: jax.Array, w: jax.Array) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def conv3x3_op(x: jax.Array, w: jax.Array, *,
+               interpret: bool | None = None) -> jax.Array:
     """3x3 conv as im2col GEMM. x: (N, H, W, Cin), w: (3, 3, Cin, Cout)."""
     n, h, wd, c = x.shape
     cout = w.shape[-1]
     cols = _im2col(x, 3)                       # (N*H*W, 9*Cin)
     wmat = w.reshape(9 * c, cout)              # HWIO row-major matches im2col order
-    out = spike_matmul_op(cols, wmat)
+    out = spike_matmul_op(cols, wmat, interpret=interpret)
     return out.reshape(n, h, wd, cout)

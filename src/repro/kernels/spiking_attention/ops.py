@@ -14,10 +14,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.lif_parallel.ops import resolve_interpret
 from repro.kernels.spiking_attention import kernel as K
 from repro.kernels.spiking_attention.ref import ssa_ref
-
-_INTERPRET = jax.default_backend() != "tpu"
 
 
 def _pad_d(x):
@@ -28,20 +27,20 @@ def _pad_d(x):
     return x, d
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
-def _ssa(q, k, v, scale):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _ssa(q, k, v, scale, interpret):
     qp, d = _pad_d(q)
     kp, _ = _pad_d(k)
     vp, _ = _pad_d(v)
-    out = K.ssa_fwd(qp, kp, vp, scale=scale, interpret=_INTERPRET)
+    out = K.ssa_fwd(qp, kp, vp, scale=scale, interpret=interpret)
     return out[..., :d]
 
 
-def _ssa_fwd(q, k, v, scale):
-    return _ssa(q, k, v, scale), (q, k, v)
+def _ssa_fwd(q, k, v, scale, interpret):
+    return _ssa(q, k, v, scale, interpret), (q, k, v)
 
 
-def _ssa_bwd(scale, res, g):
+def _ssa_bwd(scale, interpret, res, g):
     q, k, v = res
     # d/dq [(qk^T)v s] = (g v^T) k s ; d/dk = (g^T q)^T ... all bilinear:
     _, vjp = jax.vjp(lambda a, b, c: ssa_ref(a, b, c, scale=scale), q, k, v)
@@ -51,11 +50,12 @@ def _ssa_bwd(scale, res, g):
 _ssa.defvjp(_ssa_fwd, _ssa_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("scale",))
-def ssa_op(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125) -> jax.Array:
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def ssa_op(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125,
+           interpret: bool | None = None) -> jax.Array:
     """Tick-batched spiking attention. q,k,v: (T, B, H, N, Dh) -> same shape."""
     t, b, h, n, dh = q.shape
     m = k.shape[3]
     fold = lambda x: x.reshape(t * b * h, x.shape[3], dh)
-    out = _ssa(fold(q), fold(k), fold(v), float(scale))
+    out = _ssa(fold(q), fold(k), fold(v), float(scale), resolve_interpret(interpret))
     return out.reshape(t, b, h, n, dh)

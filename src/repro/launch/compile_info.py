@@ -1,0 +1,17 @@
+"""Version-tolerant accessors for jax.stages.Compiled introspection.
+
+``Compiled.cost_analysis()`` returns a plain dict on recent JAX but a
+one-element list of dicts on older releases (e.g. 0.4.x); every consumer of
+the dry-run lowering path and the cost-model benchmarks goes through
+:func:`cost_analysis_dict` so the difference is absorbed in one place.
+"""
+
+from __future__ import annotations
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """HLO cost analysis of a compiled executable as a flat dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

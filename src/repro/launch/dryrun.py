@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import make_rules, use_rules
+from repro.launch.compile_info import cost_analysis_dict
 from repro.launch.mesh import batch_axes, make_production_mesh
 from repro.models import lm, transformer as T
 from repro.models.config import SHAPE_CELLS, cell_by_name, cell_supported
@@ -268,7 +269,7 @@ def dryrun_cell(arch: str, cell_name: str, *, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = cost_analysis_dict(compiled)
             hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         record.update(

@@ -4,9 +4,16 @@ Prefill incoming requests (batched), then decode with a shared step function;
 finished sequences are retired and their slots refilled -- the standard
 continuous-batching pattern (vLLM-style, simplified to synchronous slots).
 
+Vision serving goes through the deploy engine: ``--vision`` compiles the
+Spike-(IAND-)Former into a folded/fused deploy plan (``repro.engine``) once at
+startup -- BN folded into the weight reads, AND-NOT residuals fused into the
+LIF epilogues -- and classifies image batches with the jitted plan executor.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b_smoke \
         --requests 8 --prompt-len 32 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --vision \
+        --arch spike-iand-former_smoke --requests 16 --slots 4 --backend jnp
 """
 
 from __future__ import annotations
@@ -74,6 +81,56 @@ def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
     return done
 
 
+def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
+                 backend: str = "jnp", seed: int = 0, verbose: bool = True):
+    """Serve a vision Spikformer through the deploy engine.
+
+    The (params, state, cfg) triple is compiled ONCE into a deploy plan --
+    ConvBN/LinearBN folded, IAND fused into the neuron epilogue, backend a
+    plan property -- then slot batches of images run the jitted executor.
+    """
+    from repro import engine
+    from repro.configs.spike_iand_former import get_vision_config
+    from repro.core import spikformer as sf
+
+    cfg = get_vision_config(arch)
+    params, state = sf.init(jax.random.PRNGKey(seed), cfg)
+    plan = engine.compile_plan(params, state, cfg, backend=backend)
+    step = jax.jit(engine.make_apply_fn(plan))
+
+    imgs = jax.random.uniform(
+        jax.random.PRNGKey(seed + 1),
+        (num_requests, cfg.img_size, cfg.img_size, cfg.in_channels))
+
+    # warm both batch shapes (full slot + ragged tail) so the reported
+    # throughput is steady-state inference, not trace+compile time
+    warm_sizes = {min(slots, num_requests)}
+    if num_requests % slots:
+        warm_sizes.add(num_requests % slots)
+    for b in warm_sizes:
+        jax.block_until_ready(step(plan.params, imgs[:b]))
+
+    done, t0 = [], time.perf_counter()
+    for start in range(0, num_requests, slots):
+        batch = imgs[start : start + slots]
+        logits = step(plan.params, batch)
+        classes = np.asarray(jnp.argmax(logits, axis=-1))
+        for j, c in enumerate(classes):
+            done.append((start + j, int(c)))
+        if verbose:
+            print(f"[serve] slot batch {start//slots}: classified "
+                  f"{batch.shape[0]} images")
+    dt = time.perf_counter() - t0
+    if verbose:
+        stats = engine.plan_stats(plan)
+        print(f"[serve] {num_requests} images in {dt:.2f}s "
+              f"({num_requests/dt:.1f} img/s on {jax.default_backend()}; "
+              f"deploy plan: {stats['folded_conv_bn'] + stats['folded_linear_bn']} "
+              f"folded BN pairs, {stats['fused_lif_iand_dispatches']} fused "
+              f"LIF+IAND dispatches, backend={stats['backend']})")
+    return done
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b_smoke")
@@ -81,7 +138,15 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--vision", action="store_true",
+                    help="serve a vision Spikformer via the deploy engine")
+    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
+                    help="deploy-plan backend (vision mode)")
     args = ap.parse_args()
+    if args.vision:
+        serve_vision(args.arch, num_requests=args.requests, slots=args.slots,
+                     backend=args.backend)
+        return
     serve(args.arch, num_requests=args.requests, prompt_len=args.prompt_len,
           max_new=args.max_new, slots=args.slots)
 

@@ -44,10 +44,21 @@ def _route(p, x2d, cfg):
     return topw, topi, probs
 
 
+def _logical_capacity(tokens_per_group: int, cfg) -> int:
+    """Expert capacity in the Switch/GShard sense: tokens ranked past this are
+    dropped. ceil(T_g * k * cf / E), at least 1."""
+    c = -(-(tokens_per_group * cfg.num_experts_per_tok * cfg.capacity_factor)
+          // cfg.num_experts)
+    return max(1, int(c))
+
+
 def _capacity(tokens_per_group: int, cfg) -> int:
-    c = int(tokens_per_group * cfg.num_experts_per_tok * cfg.capacity_factor
-            / cfg.num_experts) + 1
-    return max(8, -(-c // 8) * 8)  # >=8, rounded up to sublane multiple
+    """Dispatch-buffer slots per expert: the logical capacity padded up to a
+    sublane multiple (>=8). Padding slots exist only for alignment -- the drop
+    decision uses :func:`_logical_capacity`, otherwise small capacity factors
+    would never drop anything."""
+    c = _logical_capacity(tokens_per_group, cfg)
+    return max(8, -(-c // 8) * 8)
 
 
 # --------------------------------------------------------------------------
@@ -132,7 +143,8 @@ def moe_apply(p, x, cfg, *, num_groups: int | None = None, compute_dtype=None):
     assert t % g == 0, (t, g)
     tg = t // g
     k, e = cfg.num_experts_per_tok, cfg.num_experts
-    c = _capacity(tg, cfg)
+    c = _capacity(tg, cfg)          # buffer slots (sublane-aligned)
+    c_drop = _logical_capacity(tg, cfg)  # rank threshold for dropping
     tk = tg * k
 
     xg = constrain(x.reshape(g, tg, d), "expert_group", None, None)
@@ -153,7 +165,7 @@ def moe_apply(p, x, cfg, *, num_groups: int | None = None, compute_dtype=None):
     offsets = jnp.cumsum(counts, axis=1) - counts                  # exclusive
     rank_sorted = (jnp.arange(tk)[None, :]
                    - jnp.take_along_axis(offsets, sorted_e, axis=1))
-    slot_sorted = jnp.where(rank_sorted < c, rank_sorted, c)       # c == OOB
+    slot_sorted = jnp.where(rank_sorted < c_drop, rank_sorted, c)  # c == OOB
 
     # gather tokens in sorted order and scatter into the dispatch buffer
     tok_sorted = sort_idx // k                                     # (G, Tk)

@@ -48,7 +48,9 @@ def test_lower_on_host_mesh():
     step = lm.make_train_step(cfg, opt)
     lowered = jax.jit(step).lower(state_struct, batch_struct)
     compiled = lowered.compile()
-    assert compiled.cost_analysis().get("flops", 0) > 0
+    from repro.launch.compile_info import cost_analysis_dict
+
+    assert cost_analysis_dict(compiled).get("flops", 0) > 0
 
 
 def test_mesh_factory_shapes():
