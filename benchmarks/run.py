@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV lines per the harness contract, then
 each benchmark's own detailed report.
 
   engine  -- deploy plan (BN folded, IAND fused) vs naive eval graph
+  packed  -- bit-packed spike datapath: inter-layer bytes + wall clock
   table1  -- IAND vs ADD residual training proxy (paper Table I)
   table2  -- serial vs parallel tick-batching weight traffic (Table II /
              the -43.2% weight-access claim)
@@ -17,7 +18,11 @@ production mesh and takes ~1h on this CPU).
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
 
 
 def _run(name, fn):
@@ -28,13 +33,58 @@ def _run(name, fn):
     return out
 
 
+def write_bench_json(engine_result, packed_result) -> None:
+    """Persist the engine perf trajectory machine-readably: per-config
+    tokens/s and inter-layer activation bytes, tracked across PRs."""
+    configs = {}
+    for row in packed_result["table1_t8"]:
+        configs[row["config"]] = {
+            "t": row["t"],
+            "activation_bytes_dense": row["dense_bytes"],
+            "activation_bytes_packed": row["packed_bytes"],
+            "packed_reduction": row["reduction"],
+            "packed_reduction_ssa_dense": row["reduction_ssa_dense"],
+        }
+    m = packed_result["measured"]
+    measured_key = m["config"]
+    configs[measured_key] = {
+        "t": m["t"],
+        "batch": m["batch"],
+        "tokens_per_s_dense": m["dense_tokens_per_s"],
+        "tokens_per_s_packed": m["packed_tokens_per_s"],
+        "activation_bytes_dense": m["dense_bytes"],
+        "activation_bytes_packed": m["packed_bytes"],
+        "packed_reduction": m["reduction"],
+        "packed_reduction_ssa_dense": m["reduction_ssa_dense"],
+    }
+    if engine_result is not None:
+        # same small config, but the engine bench runs its own batch size --
+        # keep its metrics in a sub-record with that batch, not mixed into
+        # the measured row's batch-4 fields
+        from benchmarks import engine_fused_vs_naive
+
+        configs[measured_key]["fused_vs_naive"] = {
+            "batch": engine_fused_vs_naive.BATCH,
+            "fused_wall_s": engine_result["fused"]["wall_s"],
+            "naive_wall_s": engine_result["naive"]["wall_s"],
+            "hlo_bytes_fused": engine_result["fused"]["bytes"],
+            "hlo_bytes_naive": engine_result["naive"]["bytes"],
+        }
+    BENCH_JSON.write_text(json.dumps({"configs": configs}, indent=2) + "\n")
+    print(f"wrote {BENCH_JSON}")
+
+
 def main() -> None:
     from benchmarks import (engine_fused_vs_naive, int8_decode, kernel_bench,
-                            linear_attention_scaling, perf_spiking,
-                            table1_iand_vs_add, table2_weight_traffic)
+                            linear_attention_scaling, packed_traffic,
+                            perf_spiking, table1_iand_vs_add,
+                            table2_weight_traffic)
 
     print("name,us_per_call,derived")
-    _run("engine_fused_vs_naive", engine_fused_vs_naive.main)
+    engine_result = _run("engine_fused_vs_naive", engine_fused_vs_naive.main)
+    print()
+    packed_result = _run("packed_traffic", packed_traffic.main)
+    write_bench_json(engine_result, packed_result)
     print()
     _run("table2_weight_traffic", table2_weight_traffic.main)
     print()

@@ -181,9 +181,10 @@ def lif(
     chain_len: int | None = None,
     surrogate: str = "boxcar",
     use_kernel: bool = False,
-    iand_skip: jax.Array | None = None,
+    iand_skip=None,
     interpret: bool | None = None,
-) -> jax.Array:
+    pack_output: bool = False,
+):
     """THE neuron dispatch: every LIF in the model and the deploy engine goes
     through this one entry point.
 
@@ -196,16 +197,48 @@ def lif(
       the Pallas epilogue (zero extra HBM round-trips).  The fused kernel
       epilogue is forward-only (deploy path); training with fusion uses the
       differentiable jnp route.
+    * ``pack_output=True`` returns the spike train bit-packed along time as a
+      :class:`repro.core.packing.PackedSpikes` (uint32 bitplane words) instead
+      of a dense (T, ...) tensor; the kernel route packs inside the Pallas
+      epilogue, so dense spikes never reach HBM.  With ``pack_output``,
+      ``iand_skip`` must itself be a ``PackedSpikes`` -- the residual becomes
+      the bitwise ``skip & ~spikes`` on words.  Inference-only (the packed
+      train is not differentiable).
     """
+    from repro.core import packing
+
+    if pack_output and iand_skip is not None:
+        if not isinstance(iand_skip, packing.PackedSpikes):
+            raise TypeError("pack_output=True requires a PackedSpikes iand_skip")
+        if iand_skip.t != drive.shape[0]:
+            raise ValueError(
+                f"time-step mismatch: drive T={drive.shape[0]}, "
+                f"iand_skip t={iand_skip.t}")
+    if not pack_output and isinstance(iand_skip, packing.PackedSpikes):
+        raise TypeError("PackedSpikes iand_skip requires pack_output=True")
+
     if schedule == "serial":
         out = lif_serial(drive, theta=theta, lam=lam, reset=reset, surrogate=surrogate)
-        if iand_skip is not None:
-            out = iand_skip * (1.0 - out)
-        return out
+        if not pack_output:
+            if iand_skip is not None:
+                out = iand_skip * (1.0 - out)
+            return out
+        packed = packing.pack(out)
+        return packing.iand(iand_skip, packed) if iand_skip is not None else packed
     if schedule == "parallel":
         if use_kernel:
             from repro.kernels.lif_parallel import ops as lif_ops
 
+            if pack_output:
+                if iand_skip is not None:
+                    words = lif_ops.lif_iand_pack_op(
+                        drive, iand_skip.words, theta=theta, lam=lam,
+                        reset=reset, chain_len=chain_len, interpret=interpret)
+                else:
+                    words = lif_ops.lif_pack_op(
+                        drive, theta=theta, lam=lam, reset=reset,
+                        chain_len=chain_len, interpret=interpret)
+                return packing.PackedSpikes(words=words, t=drive.shape[0])
             if iand_skip is not None:
                 return lif_ops.lif_iand_op(
                     drive, iand_skip, theta=theta, lam=lam, reset=reset,
@@ -213,6 +246,13 @@ def lif(
             return lif_ops.lif_parallel_op(
                 drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
                 interpret=interpret)
+        if pack_output:
+            out = lif_parallel(
+                drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
+                surrogate=surrogate)
+            packed = packing.pack(out)
+            return (packing.iand(iand_skip, packed) if iand_skip is not None
+                    else packed)
         return lif_parallel(
             drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
             surrogate=surrogate, iand_skip=iand_skip)

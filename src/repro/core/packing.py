@@ -1,0 +1,142 @@
+"""Bit-packed spike tensors: all T time steps of one element in one word.
+
+The model's inter-layer tensors are binary spikes (the IAND residual keeps
+them binary end to end), yet the dense deploy path moves them between layers
+as f32 -- 32 bits per spike, times T time steps.  This module packs the time
+axis into ``uint32`` bitplane words, mirroring the paper's tick-batching: bit
+``t`` of the word at element ``e`` is the spike of ``e`` at time step ``t``,
+so the whole T-step train of one neuron is one word (one HBM beat).
+
+    dense  (T, *S) f32     -> 4*T bytes / element
+    packed (W, *S) uint32   -> 4*W bytes / element,  W = ceil(T / 32)
+
+T=8 is an 8x reduction in inter-layer spike traffic; T=32 is 32x.  The two
+spike-level ops the deploy engine needs stay in the packed domain:
+
+* IAND residual: ``skip * (1 - s)`` on {0,1} tensors is exactly the bitwise
+  ``skip & ~s`` on packed words (:func:`iand`);
+* rate decoding: the per-neuron spike count over T is a popcount
+  (:func:`spike_counts`), so the classification head never unpacks.
+
+:class:`PackedSpikes` is a pytree (words are the only leaf; ``t`` is static
+aux data), so packed activations flow through ``jax.jit`` executors unchanged.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def num_words(t: int) -> int:
+    """Words needed for a T-step train: ``ceil(t / 32)``."""
+    if t < 1:
+        raise ValueError(f"need at least one time step, got t={t}")
+    return -(-t // WORD_BITS)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class PackedSpikes:
+    """A spike train (T, *S) packed along time into uint32 words (W, *S).
+
+    Bit ``t % 32`` of ``words[t // 32]`` is the spike at time step ``t``;
+    bits at positions >= t (the ragged tail of the last word) are zero by
+    construction -- :func:`iand` and :func:`spike_counts` rely on that.
+    """
+
+    words: jax.Array          # uint32, (W,) + elem_shape
+    t: int                    # static: time steps packed in the word axis
+
+    def __post_init__(self):
+        if isinstance(self.words, jax.Array) and self.words.dtype != jnp.uint32:
+            raise TypeError(f"packed words must be uint32, got {self.words.dtype}")
+
+    def tree_flatten(self):
+        return (self.words,), self.t
+
+    @classmethod
+    def tree_unflatten(cls, t, children):
+        return cls(words=children[0], t=t)
+
+    @property
+    def elem_shape(self) -> tuple[int, ...]:
+        return self.words.shape[1:]
+
+    @property
+    def dense_shape(self) -> tuple[int, ...]:
+        return (self.t,) + self.elem_shape
+
+    def reshape_elems(self, *shape) -> "PackedSpikes":
+        """Reshape the element axes, keeping the word axis."""
+        w = self.words.shape[0]
+        return PackedSpikes(self.words.reshape((w,) + tuple(shape)), self.t)
+
+
+def _bit_shifts(n: int, ndim: int) -> jax.Array:
+    """(n, 1, ..., 1) uint32 shift amounts 0..n-1 broadcast over elem dims."""
+    return jnp.arange(n, dtype=jnp.uint32).reshape((n,) + (1,) * (ndim - 1))
+
+
+def pack(spikes: jax.Array, t: int | None = None) -> PackedSpikes:
+    """Pack a (T, *S) spike tensor (any dtype, values in {0, 1}) into words.
+
+    Nonzero is treated as a spike; the ragged tail of the last word is zero.
+    """
+    if spikes.ndim < 1:
+        raise ValueError("spikes must have a leading time axis")
+    t_total = spikes.shape[0]
+    if t is not None and t != t_total:
+        raise ValueError(f"t={t} does not match leading axis {t_total}")
+    bits = (spikes != 0).astype(jnp.uint32)
+    words = []
+    for w in range(num_words(t_total)):
+        chunk = bits[w * WORD_BITS : (w + 1) * WORD_BITS]
+        shifts = _bit_shifts(chunk.shape[0], bits.ndim)
+        # bits occupy disjoint positions, so a sum is a bitwise OR
+        words.append(jnp.sum(chunk << shifts, axis=0, dtype=jnp.uint32))
+    return PackedSpikes(words=jnp.stack(words, axis=0), t=t_total)
+
+
+def unpack(ps: PackedSpikes, dtype=jnp.float32) -> jax.Array:
+    """(W, *S) words -> (T, *S) dense spikes in ``dtype``."""
+    planes = []
+    for w in range(ps.words.shape[0]):
+        t_here = min(WORD_BITS, ps.t - w * WORD_BITS)
+        shifts = _bit_shifts(t_here, ps.words.ndim)
+        planes.append((ps.words[w][None] >> shifts) & jnp.uint32(1))
+    return jnp.concatenate(planes, axis=0).astype(dtype)
+
+
+def iand(skip: PackedSpikes, spikes: PackedSpikes) -> PackedSpikes:
+    """AND-NOT residual in the packed domain: ``skip & ~spikes``, bitwise.
+
+    Because the ragged-tail bits of ``skip`` are zero, ``~spikes`` setting
+    them is harmless -- the invariant is preserved without a mask.
+    """
+    if skip.t != spikes.t:
+        raise ValueError(f"time-step mismatch: skip t={skip.t}, spikes t={spikes.t}")
+    return PackedSpikes(words=skip.words & ~spikes.words, t=skip.t)
+
+
+def spike_counts(ps: PackedSpikes) -> jax.Array:
+    """Per-element spike count over T via popcount: (W, *S) -> (*S) uint32.
+
+    This is the rate-decoding numerator -- the head computes
+    ``popcount(words) / T`` instead of unpacking and averaging.
+    """
+    return jnp.sum(jax.lax.population_count(ps.words), axis=0, dtype=jnp.uint32)
+
+
+def packed_nbytes(t: int, num_elems: int) -> int:
+    """Inter-layer bytes of a packed (t, num_elems) spike tensor."""
+    return num_words(t) * num_elems * 4
+
+
+def dense_nbytes(t: int, num_elems: int, itemsize: int = 4) -> int:
+    """Inter-layer bytes of the same tensor moved dense (f32 by default)."""
+    return t * num_elems * itemsize

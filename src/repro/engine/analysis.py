@@ -49,3 +49,47 @@ def bn_op_count(fn, *args, **kwargs) -> int:
     hist = op_histogram(fn, *args, **kwargs)
     return sum(hist[p] for p in _BN_PRIMS) + sum(
         n for name, n in hist.items() if name.startswith("batch_norm"))
+
+
+def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None) -> dict:
+    """Inter-layer spike-activation bytes of one forward pass, dense vs
+    packed.
+
+    Walks :func:`repro.engine.layout.spike_edges` (every binary tensor a LIF
+    epilogue writes and the next consumer reads) and prices each edge two
+    ways: dense f32 over T time steps (``4*T`` bytes/element) vs bit-packed
+    uint32 bitplane words (``4*ceil(T/32)`` bytes/element).  ``packed_bytes``
+    / ``reduction`` are the datapath contract (every edge carried packed);
+    the SSA-boundary q/k/v edges are additionally priced dense in
+    ``packed_bytes_ssa_dense`` / ``reduction_ssa_dense`` -- the conservative
+    number while the attention kernel still consumes dense operands (unpacked
+    at its boundary; packed SSA is ROADMAP backlog).  Both are what
+    ``benchmarks/packed_traffic.py`` reports against the Table-I configs.
+    """
+    from repro.core import packing
+    from repro.engine.layout import spike_edges
+
+    edges = spike_edges(cfg, img_size=img_size)
+    t = cfg.t
+    per_edge = [{
+        "name": e.name,
+        "elems": e.elems * batch,
+        "ssa_boundary": e.ssa_boundary,
+        "dense_bytes": packing.dense_nbytes(t, e.elems * batch),
+        "packed_bytes": packing.packed_nbytes(t, e.elems * batch),
+    } for e in edges]
+    dense = sum(e["dense_bytes"] for e in per_edge)
+    packed = sum(e["packed_bytes"] for e in per_edge)
+    packed_ssa_dense = sum(
+        e["dense_bytes"] if e["ssa_boundary"] else e["packed_bytes"]
+        for e in per_edge)
+    return {
+        "t": t,
+        "batch": batch,
+        "edges": per_edge,
+        "dense_bytes": dense,
+        "packed_bytes": packed,
+        "reduction": dense / packed,
+        "packed_bytes_ssa_dense": packed_ssa_dense,
+        "reduction_ssa_dense": dense / packed_ssa_dense,
+    }

@@ -12,8 +12,13 @@ from the legacy flag for the training path):
   off-TPU), ``False`` forces compiled lowering (TPU), ``True`` forces
   interpretation.
 * ``matmul_kernel``: route deploy-time linears/convs through the
-  ``spike_matmul`` GEMM kernel as well (off by default: interpret-mode GEMMs
-  are CPU-slow; on TPU this maps the whole layer onto the paper's PE array).
+  ``spike_matmul`` GEMM kernel as well.  ``None`` (the default) auto-enables
+  it exactly where it is fast: Pallas kernels compiled on TPU; interpret-mode
+  GEMMs are CPU-slow, so off-TPU the auto stays on the XLA dot.
+* ``packed``: carry inter-layer spike activations bit-packed along time
+  (uint32 bitplane words, ``repro.core.packing``) -- LIF epilogues emit
+  packed words, the IAND residual is a bitwise ``skip & ~s``, and GEMMs
+  unpack per-tile in VMEM (or at the op boundary on the jnp oracle path).
 """
 
 from __future__ import annotations
@@ -22,6 +27,7 @@ from dataclasses import dataclass
 
 import jax
 
+from repro.core import packing
 from repro.core.lif import lif as _lif_dispatch
 
 
@@ -29,20 +35,35 @@ from repro.core.lif import lif as _lif_dispatch
 class Backend:
     kind: str = "jnp"                  # "jnp" | "pallas"
     interpret: bool | None = None      # None = auto (interpret off-TPU)
-    matmul_kernel: bool = False        # spike GEMM kernel for linears/convs
+    matmul_kernel: bool | None = None  # None = auto (on for compiled pallas)
+    packed: bool = False               # bit-packed inter-layer spikes
 
     def __post_init__(self):
         if self.kind not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend kind: {self.kind}")
 
+    @property
+    def use_matmul_kernel(self) -> bool:
+        """Resolved spike-GEMM routing: an explicit bool wins; ``None`` means
+        on exactly when the Pallas kernels lower compiled (TPU) -- interpret
+        mode keeps GEMMs on the XLA dot, where they are orders faster on CPU.
+        """
+        if self.matmul_kernel is None:
+            from repro.kernels.lif_parallel.ops import resolve_interpret
+
+            return self.kind == "pallas" and not resolve_interpret(self.interpret)
+        return bool(self.matmul_kernel)
+
 
 JNP = Backend("jnp")
 PALLAS = Backend("pallas")
+JNP_PACKED = Backend("jnp", packed=True)
+PALLAS_PACKED = Backend("pallas", packed=True)
 
 
 def resolve(spec) -> Backend:
     """Coerce user-facing specs into a Backend: Backend | "jnp" | "pallas" |
-    bool (legacy use_kernel) | None."""
+    "jnp+packed" | "pallas+packed" | bool (legacy use_kernel) | None."""
     if isinstance(spec, Backend):
         return spec
     if spec is None:
@@ -50,23 +71,29 @@ def resolve(spec) -> Backend:
     if isinstance(spec, bool):
         return PALLAS if spec else JNP
     if isinstance(spec, str):
-        return Backend(spec)
+        kind, sep, flag = spec.partition("+")
+        if sep and flag != "packed":
+            raise ValueError(f"unknown backend flag: {flag!r} in {spec!r}")
+        return Backend(kind, packed=bool(sep))
     raise TypeError(f"cannot resolve backend from {spec!r}")
 
 
 def lif_apply(backend: Backend, drive: jax.Array, *, theta, lam, schedule,
-              chain_len, iand_skip=None, reset: str = "hard") -> jax.Array:
+              chain_len, iand_skip=None, reset: str = "hard",
+              pack_output: bool = False):
     """Route a LIF (optionally with the fused IAND epilogue) through the
-    unified neuron dispatch on this backend."""
+    unified neuron dispatch on this backend.  With ``pack_output`` the spike
+    train returns bit-packed (and ``iand_skip`` must be packed)."""
     return _lif_dispatch(
         drive, theta=theta, lam=lam, reset=reset, schedule=schedule,
         chain_len=chain_len, use_kernel=(backend.kind == "pallas"),
-        iand_skip=iand_skip, interpret=backend.interpret)
+        iand_skip=iand_skip, interpret=backend.interpret,
+        pack_output=pack_output)
 
 
 def linear_apply(backend: Backend, p, x2d: jax.Array) -> jax.Array:
     """Folded linear (w, b) on tick-folded 2-D activations."""
-    if backend.kind == "pallas" and backend.matmul_kernel:
+    if backend.kind == "pallas" and backend.use_matmul_kernel:
         from repro.kernels.spike_matmul.ops import spike_matmul_op
 
         y = spike_matmul_op(x2d, p["w"], interpret=backend.interpret)
@@ -81,7 +108,7 @@ def linear_apply(backend: Backend, p, x2d: jax.Array) -> jax.Array:
 
 def conv3x3_apply(backend: Backend, p, x: jax.Array) -> jax.Array:
     """Folded 3x3 SAME conv on (N, H, W, C) spikes."""
-    if backend.kind == "pallas" and backend.matmul_kernel:
+    if backend.kind == "pallas" and backend.use_matmul_kernel:
         from repro.kernels.spike_matmul.ops import conv3x3_op
 
         y = conv3x3_op(x, p["w"], interpret=backend.interpret)
@@ -91,3 +118,52 @@ def conv3x3_apply(backend: Backend, p, x: jax.Array) -> jax.Array:
     from repro.core import nn as cnn
 
     return cnn.conv_apply(p, x)
+
+
+def _kernel_takes_packed(backend: Backend, xp: packing.PackedSpikes) -> bool:
+    """Feed words straight to the packed GEMM kernel?  Needs the Pallas GEMM
+    route and a single-word train (T <= 32 -- always, for the paper's T)."""
+    return (backend.kind == "pallas" and backend.use_matmul_kernel
+            and xp.words.shape[0] == 1)
+
+
+def linear_apply_packed(backend: Backend, p, xp: packing.PackedSpikes) -> jax.Array:
+    """Folded linear on a packed spike train (W, ..., Din) -> dense drive
+    (T, ..., Dout).
+
+    On the compiled Pallas route the uint32 words are the GEMM operand
+    (unpacked per-tile in VMEM); otherwise the train is unpacked at the op
+    boundary and the tick-folded XLA dot runs -- the jnp oracle.
+    """
+    lead = xp.elem_shape[:-1]
+    d_in = xp.elem_shape[-1]
+    if _kernel_takes_packed(backend, xp):
+        from repro.kernels.spike_matmul.ops import packed_spike_matmul_op
+
+        y = packed_spike_matmul_op(
+            xp.words[0].reshape(-1, d_in), p["w"], t=xp.t,
+            interpret=backend.interpret)
+        y = y.reshape((xp.t,) + lead + (p["w"].shape[1],))
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    x = packing.unpack(xp)                           # (T, ..., Din)
+    y2d = linear_apply(backend, p, x.reshape(-1, d_in))
+    return y2d.reshape((xp.t,) + lead + (-1,))
+
+
+def conv3x3_apply_packed(backend: Backend, p, xp: packing.PackedSpikes) -> jax.Array:
+    """Folded 3x3 SAME conv on packed spikes (W, N, H, Wd, C) -> dense drive
+    (T, N, H, Wd, Cout)."""
+    if _kernel_takes_packed(backend, xp):
+        from repro.kernels.spike_matmul.ops import packed_conv3x3_op
+
+        y = packed_conv3x3_op(
+            xp.words[0], p["w"], t=xp.t, interpret=backend.interpret)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    x = packing.unpack(xp)                           # (T, N, H, Wd, C)
+    t, n = x.shape[0], x.shape[1]
+    y = conv3x3_apply(backend, p, x.reshape((t * n,) + x.shape[2:]))
+    return y.reshape((t, n) + y.shape[1:])

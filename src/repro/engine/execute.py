@@ -8,7 +8,14 @@ the accelerator's deploy view:
 * every AND-NOT residual executes inside the LIF dispatch's epilogue
   (``iand_skip``), so spikes are written once -- no standalone IAND pass;
 * all Conv/Linear compute is tick-batched (T folded into the batch: one
-  weight read serves all time steps).
+  weight read serves all time steps);
+* with ``Backend.packed``, spikes move between layers bit-packed along time
+  (``repro.core.packing``): LIF epilogues emit uint32 bitplane words, the
+  IAND residual is the bitwise ``skip & ~s`` on words, GEMMs take the words
+  as operands (unpacked per-tile in VMEM on the compiled Pallas route), and
+  the head rate-decodes by popcount -- dense spike tensors only ever
+  materialise inside kernels (and at the SSA boundary, whose operands the
+  attention kernel consumes dense).
 
 Executors are pure functions of (folded params, image); static plan metadata
 is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
@@ -22,18 +29,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import nn as cnn
+from repro.core import packing
 from repro.core.iand import connective
 from repro.core.spiking_attention import merge_heads, split_heads, ssa
 from repro.engine import backend as B
 from repro.engine.plan import DeployPlan, PlanMeta
 
 
-def _lif(meta: PlanMeta, drive, iand_skip=None):
+def _lif(meta: PlanMeta, drive, iand_skip=None, pack_output=False):
     cfg = meta.cfg
     return B.lif_apply(
         meta.backend, drive, theta=cfg.theta, lam=cfg.lam,
         schedule=cfg.lif_schedule, chain_len=cfg.chain_len,
-        iand_skip=iand_skip)
+        iand_skip=iand_skip, pack_output=pack_output)
 
 
 def _tokenizer_exec(meta: PlanMeta, tok_params, image):
@@ -99,7 +107,82 @@ def _block_exec(meta: PlanMeta, bparams, x):
     return x
 
 
+# -- packed datapath ---------------------------------------------------------
+
+def _tokenizer_exec_packed(meta: PlanMeta, tok_params, image) -> packing.PackedSpikes:
+    """image: (B, H, W, C) analog -> packed spikes, words (W, B, N, D)."""
+    cfg = meta.cfg
+    xp = None
+    for stage, p in zip(meta.tok_stages, tok_params):
+        if stage.encode:
+            # analog encoding conv: same as the dense path (input not binary)
+            y = cnn.conv_apply(p, image)
+            if stage.pool:
+                y = cnn.maxpool(y)
+            drive = jnp.broadcast_to(y[None], (cfg.t,) + y.shape)
+        else:
+            drive = B.conv3x3_apply_packed(meta.backend, p, xp)  # (T,B,H,W,C)
+            if stage.pool:
+                drive = cnn.unfold_time(cnn.maxpool(cnn.fold_time(drive)), cfg.t)
+        xp = _lif(meta, drive, pack_output=True)
+    w, b, h, wd, d = xp.words.shape
+    return xp.reshape_elems(b, h * wd, d)
+
+
+def _unit_linear_packed(meta: PlanMeta, p, xp: packing.PackedSpikes):
+    """Packed-operand folded linear: words (W, B, N, Din) -> drive (T, B, N, Dout)."""
+    return B.linear_apply_packed(meta.backend, p, xp)
+
+
+def _block_exec_packed(meta: PlanMeta, bparams, xp: packing.PackedSpikes):
+    """One block on packed activations.  Only reached for residual='iand'
+    (compile_plan rejects packed ADD plans), so every residual join is the
+    bitwise AND-NOT in a LIF epilogue."""
+    cfg = meta.cfg
+    acts: dict = {}
+    h = None
+    for u in meta.block_units:
+        if u.role == "qkv":
+            acts[u.name] = _lif(
+                meta, _unit_linear_packed(meta, bparams[u.name], xp),
+                pack_output=True)
+            continue
+        if u.role == "attn_out":
+            # the SSA kernel consumes dense Q/K/V: unpack at its boundary
+            q, k, v = (packing.unpack(acts[nm]) for nm in ("q", "k", "v"))
+            attn = ssa(
+                split_heads(q, cfg.num_heads), split_heads(k, cfg.num_heads),
+                split_heads(v, cfg.num_heads),
+                scale=cfg.attn_scale, ordering=cfg.attn_ordering)
+            attn_sp = _lif(meta, merge_heads(attn), pack_output=True)
+            drive = _unit_linear_packed(meta, bparams[u.name], attn_sp)
+        elif u.role == "mlp_hidden":
+            h = _lif(meta, _unit_linear_packed(meta, bparams[u.name], xp),
+                     pack_output=True)
+            continue
+        elif u.role == "mlp_out":
+            drive = _unit_linear_packed(meta, bparams[u.name], h)
+        else:
+            raise ValueError(f"unknown unit role: {u.role}")
+        xp = _lif(meta, drive, iand_skip=xp, pack_output=True)
+    return xp
+
+
+def _head_packed(meta: PlanMeta, head_params, xp: packing.PackedSpikes):
+    """Rate decoding by popcount: mean over (T, tokens) without unpacking."""
+    counts = packing.spike_counts(xp)                 # (B, N, D) uint32
+    n = xp.elem_shape[1]
+    feats = jnp.sum(counts, axis=1, dtype=jnp.uint32).astype(jnp.float32)
+    feats = feats / jnp.float32(xp.t * n)
+    return cnn.linear_apply(head_params, feats)
+
+
 def _execute(meta: PlanMeta, params, image):
+    if meta.backend.packed:
+        xp = _tokenizer_exec_packed(meta, params["tokenizer"], image)
+        for bparams in params["blocks"]:
+            xp = _block_exec_packed(meta, bparams, xp)
+        return _head_packed(meta, params["head"], xp)
     x = _tokenizer_exec(meta, params["tokenizer"], image)
     for bparams in params["blocks"]:
         x = _block_exec(meta, bparams, x)

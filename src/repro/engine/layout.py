@@ -62,6 +62,58 @@ def tokenizer_layout(tcfg) -> tuple[TokStage, ...]:
     return tuple(stages)
 
 
+@dataclass(frozen=True)
+class SpikeEdge:
+    """One inter-layer spike tensor of the deploy graph: a binary activation
+    written by a LIF epilogue and read by the next consumer (the tensors the
+    packed datapath compresses).  ``elems`` counts elements per image per
+    time step.  ``ssa_boundary`` marks the q/k/v edges whose consumer is the
+    SSA: they are carried packed but unpacked dense at the attention kernel's
+    boundary (a packed-SSA kernel is ROADMAP backlog), so conservative
+    traffic accounting prices them dense."""
+
+    name: str
+    elems: int
+    ssa_boundary: bool = False
+
+
+def tokenizer_grid(tcfg, img_size: int) -> tuple[tuple[int, int], ...]:
+    """Per-stage output spatial dims: SAME 3x3 convs keep H x W, pooling
+    stages halve it."""
+    h = w = img_size
+    dims = []
+    for pool in tcfg.pool_stages:
+        if pool:
+            h, w = h // 2, w // 2
+        dims.append((h, w))
+    return tuple(dims)
+
+
+def spike_edges(cfg, *, img_size: int | None = None) -> tuple[SpikeEdge, ...]:
+    """Every inter-layer spike tensor of the model, in execution order.
+
+    Drives (f32 pre-activations) and attention internals are intra-layer and
+    excluded: this is the traffic the engine moves BETWEEN layer kernels,
+    which the packed datapath bit-packs.
+    """
+    tcfg = cfg.tokenizer_config()
+    img = img_size if img_size is not None else cfg.img_size
+    grid = tokenizer_grid(tcfg, img)
+    edges = [
+        SpikeEdge(f"tok{st.index}", gh * gw * st.c_out)
+        for st, (gh, gw) in zip(tokenizer_layout(tcfg), grid)
+    ]
+    n = grid[-1][0] * grid[-1][1]     # token count
+    for i in range(cfg.num_layers):
+        for u in block_layout(cfg):
+            if u.role == "attn_out":  # spikes of the SSA output, pre-proj
+                edges.append(SpikeEdge(f"block{i}.attn", n * cfg.embed_dim))
+            edges.append(SpikeEdge(
+                f"block{i}.{u.name}", n * u.d_out,
+                ssa_boundary=(u.role == "qkv")))
+    return tuple(edges)
+
+
 def block_layout(cfg) -> tuple[ProjUnit, ...]:
     """Unit list of one block for a ``SpikformerConfig``-shaped object.
 

@@ -59,6 +59,10 @@ def compile_plan(params, state, cfg, *, backend="jnp") -> DeployPlan:
     ``backend``: Backend | "jnp" | "pallas" | bool (legacy ``use_kernel``).
     """
     be = resolve(backend)
+    if be.packed and cfg.residual != "iand":
+        raise ValueError(
+            "packed backends require residual='iand': the ADD residual sums "
+            "spike trains into non-binary tensors, which cannot be bit-packed")
     tcfg = cfg.tokenizer_config()
     tok_stages = tokenizer_layout(tcfg)
     units = block_layout(cfg)
@@ -111,6 +115,11 @@ def plan_stats(plan: DeployPlan) -> dict:
         # all T time steps
         "weight_reads": n_tok + n_units * meta.num_layers + 1,
         "backend": meta.backend.kind,
+        "packed": meta.backend.packed,
+        # bits per spike moved between layers: 32 (f32) dense, or the packed
+        # word amortised over the T steps it carries
+        "bits_per_spike": (32 * -(-cfg.t // 32) / cfg.t
+                           if meta.backend.packed else 32),
         "param_count": sum(
             p.size for p in jax.tree_util.tree_leaves(plan.params)),
     }

@@ -93,6 +93,47 @@ def lif_bwd_kernel(drive_ref, g_ref, dx_ref, *, t_total: int, chain_len: int,
         dv = lam * du if t % chain_len != 0 else jnp.zeros_like(du)
 
 
+_WORD_BITS = 32
+
+
+def _pack_rows(spikes):
+    """Pack T spike rows (f32 {0,1}) into ``ceil(T/32)`` uint32 word rows.
+
+    The packing runs inside the kernel epilogue, so the spike train leaves
+    VMEM already packed -- HBM sees one uint32 word per neuron per 32 steps
+    instead of T f32 writes (the tentpole's traffic win starts here).
+    """
+    t_total = len(spikes)
+    words = []
+    for w in range(-(-t_total // _WORD_BITS)):
+        acc = jnp.zeros_like(spikes[0], dtype=jnp.uint32)
+        for t in range(w * _WORD_BITS, min((w + 1) * _WORD_BITS, t_total)):
+            acc = acc | (spikes[t].astype(jnp.uint32) << jnp.uint32(t % _WORD_BITS))
+        words.append(acc)
+    return words
+
+
+def lif_pack_fwd_kernel(drive_ref, out_ref, *, t_total: int, chain_len: int,
+                        lam: float, theta: float, reset: str):
+    """Unrolled LIF whose epilogue emits packed uint32 spike words."""
+    rows = [drive_ref[t, :] for t in range(t_total)]
+    spikes, _ = _chain(t_total, chain_len, lam, theta, reset, rows)
+    for w, word in enumerate(_pack_rows(spikes)):
+        out_ref[w, :] = word
+
+
+def lif_iand_pack_fwd_kernel(drive_ref, skip_ref, out_ref, *, t_total: int,
+                             chain_len: int, lam: float, theta: float,
+                             reset: str):
+    """Packed-in/packed-out fused LIF+IAND: the AND-NOT residual is a single
+    bitwise ``skip & ~spikes`` on the packed words (the paper's AND-NOT gate,
+    literally one gate per 32 time steps)."""
+    rows = [drive_ref[t, :] for t in range(t_total)]
+    spikes, _ = _chain(t_total, chain_len, lam, theta, reset, rows)
+    for w, word in enumerate(_pack_rows(spikes)):
+        out_ref[w, :] = skip_ref[w, :] & ~word
+
+
 def _block_n(n: int) -> int:
     for cand in (8192, 4096, 2048, 1024, 512, 256, 128):
         if n % cand == 0:
@@ -126,6 +167,43 @@ def lif_parallel_fwd(drive: jax.Array, *, chain_len: int, lam: float,
         in_specs=in_specs,
         out_specs=spec,
         out_shape=jax.ShapeDtypeStruct(drive.shape, drive.dtype),
+        interpret=interpret,
+    )(*args)
+
+
+def lif_parallel_pack_fwd(drive: jax.Array, *, chain_len: int, lam: float,
+                          theta: float, reset: str,
+                          skip_words: jax.Array | None,
+                          interpret: bool) -> jax.Array:
+    """drive: (T, N) -> packed spike words (W, N) uint32, W = ceil(T/32).
+
+    ``skip_words``: optional packed (W, N) residual; if given the epilogue is
+    the bitwise IAND ``skip & ~spikes`` (packed in, packed out).
+    """
+    t_total, n = drive.shape
+    w_total = -(-t_total // _WORD_BITS)
+    bn = _block_n(n)
+    grid = (n // bn,)
+    dspec = pl.BlockSpec((t_total, bn), lambda i: (0, i))
+    wspec = pl.BlockSpec((w_total, bn), lambda i: (0, i))
+    if skip_words is None:
+        kern = functools.partial(
+            lif_pack_fwd_kernel, t_total=t_total, chain_len=chain_len, lam=lam,
+            theta=theta, reset=reset)
+        in_specs = [dspec]
+        args = (drive,)
+    else:
+        kern = functools.partial(
+            lif_iand_pack_fwd_kernel, t_total=t_total, chain_len=chain_len,
+            lam=lam, theta=theta, reset=reset)
+        in_specs = [dspec, wspec]
+        args = (drive, skip_words)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=wspec,
+        out_shape=jax.ShapeDtypeStruct((w_total, n), jnp.uint32),
         interpret=interpret,
     )(*args)
 

@@ -108,3 +108,59 @@ def lif_iand_op(
         padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
         reset=reset, skip=skip_p, interpret=resolve_interpret(interpret))
     return out[:, :n].reshape(shape)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chain_len", "lam", "theta", "reset", "interpret"))
+def lif_pack_op(
+    drive: jax.Array,
+    *,
+    chain_len: int | None = None,
+    lam: float = 0.25,
+    theta: float = 0.5,
+    reset: str = "hard",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """LIF whose kernel epilogue packs the T-step train into uint32 words.
+
+    drive: (T, ...) -> words (ceil(T/32), ...) uint32 (see
+    ``repro.core.packing`` for the bit layout). Inference path.
+    """
+    t = drive.shape[0]
+    chain_len = chain_len or t
+    flat, shape = _flatten(drive)
+    padded, n = _pad_lanes(flat)
+    out = K.lif_parallel_pack_fwd(
+        padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
+        reset=reset, skip_words=None, interpret=resolve_interpret(interpret))
+    return out[:, :n].reshape((out.shape[0],) + shape[1:])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chain_len", "lam", "theta", "reset", "interpret"))
+def lif_iand_pack_op(
+    drive: jax.Array,
+    skip_words: jax.Array,
+    *,
+    chain_len: int | None = None,
+    lam: float = 0.25,
+    theta: float = 0.5,
+    reset: str = "hard",
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused LIF+IAND, packed in/packed out: the residual is the bitwise
+    ``skip & ~spikes`` on uint32 words inside the kernel epilogue.
+
+    drive: (T, ...) f32; skip_words: (ceil(T/32), ...) uint32 of the same
+    element shape -> words (ceil(T/32), ...) uint32.
+    """
+    t = drive.shape[0]
+    chain_len = chain_len or t
+    flat, shape = _flatten(drive)
+    skip_flat = skip_words.reshape(skip_words.shape[0], -1)
+    padded, n = _pad_lanes(flat)
+    skip_p, _ = _pad_lanes(skip_flat)
+    out = K.lif_parallel_pack_fwd(
+        padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
+        reset=reset, skip_words=skip_p, interpret=resolve_interpret(interpret))
+    return out[:, :n].reshape((out.shape[0],) + shape[1:])

@@ -44,6 +44,59 @@ def _tile(dim: int, prefs: tuple[int, ...]) -> int:
     return dim
 
 
+def packed_matmul_kernel(xw_ref, w_ref, o_ref, acc_ref, *, t_total: int):
+    """GEMM on bit-packed spike operands: unpack per-tile in VMEM.
+
+    ``xw_ref`` is a (bm, bk) tile of uint32 words -- bit t of each word is the
+    spike of that (row, k) element at time step t (one HBM read covers all T
+    time steps; the dense equivalent reads T f32 planes).  Each bitplane is
+    extracted in VMEM with a shift-and-mask and fed to the MXU; the f32
+    accumulator holds all T output planes so each weight tile is also read
+    once for every time step.
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    words = xw_ref[...]
+    w = w_ref[...]
+    for t in range(t_total):
+        xt = ((words >> jnp.uint32(t)) & jnp.uint32(1)).astype(jnp.float32)
+        acc_ref[t] += jnp.dot(xt, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def packed_spike_matmul_fwd(xw: jax.Array, w: jax.Array, *, t_total: int,
+                            interpret: bool) -> jax.Array:
+    """xw: (M, K) uint32 packed spike words (T <= 32 time steps per word),
+    w: (K, C) weights -> (T, M, C) f32 accumulated."""
+    if t_total > 32:
+        raise ValueError(f"packed GEMM holds T<=32 steps per word, got {t_total}")
+    m, k = xw.shape
+    _, c = w.shape
+    # T f32 output planes share the accumulator, so keep tiles MXU-minimal
+    bm = _tile(m, (256, 128, 64, 32, 16, 8))
+    bc = _tile(c, (256, 128))
+    bk = _tile(k, (512, 256, 128))
+    grid = (m // bm, c // bc, k // bk)
+    kern = functools.partial(packed_matmul_kernel, t_total=t_total)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bc), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((t_total, bm, bc), lambda i, j, l: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t_total, m, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t_total, bm, bc), jnp.float32)],
+        interpret=interpret,
+    )(xw, w)
+
+
 def spike_matmul_fwd(x: jax.Array, w: jax.Array, *, interpret: bool) -> jax.Array:
     """x: (M, K) spikes, w: (K, C) weights -> (M, C) f32 accumulated."""
     m, k = x.shape

@@ -20,6 +20,10 @@ from repro.kernels.lif_parallel.ops import resolve_interpret
 
 def _pad_to(x, axis, mult):
     size = x.shape[axis]
+    if size == 0:
+        raise ValueError(
+            f"zero-sized dim {axis} in operand of shape {x.shape}: a "
+            "degenerate GEMM tile cannot be padded into a kernel launch")
     pad = (-size) % mult
     if pad:
         widths = [(0, 0)] * x.ndim
@@ -31,13 +35,42 @@ def _pad_to(x, axis, mult):
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def spike_matmul_op(x: jax.Array, w: jax.Array, *,
                     interpret: bool | None = None) -> jax.Array:
-    """(M, K) spikes x (K, C) -> (M, C) f32. Pads all dims to 128 alignment."""
+    """(M, K) spikes x (K, C) -> (M, C) f32. Pads all dims to 128 alignment.
+
+    Zero-sized dims never reach the kernel: an empty M/C yields an empty
+    result, an empty K (summing over nothing) yields zeros.
+    """
+    (m, k), (_, c) = x.shape, w.shape
+    if 0 in (m, k, c):
+        return jnp.zeros((m, c), jnp.float32)
     xp, m = _pad_to(x, 0, 128)
     xp, k = _pad_to(xp, 1, 128)
     wp, _ = _pad_to(w, 0, 128)
     wp, c = _pad_to(wp, 1, 128)
     out = K.spike_matmul_fwd(xp, wp, interpret=resolve_interpret(interpret))
     return out[:m, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def packed_spike_matmul_op(xw: jax.Array, w: jax.Array, *, t: int,
+                           interpret: bool | None = None) -> jax.Array:
+    """Packed-operand GEMM: (M, K) uint32 spike words x (K, C) -> (T, M, C).
+
+    ``xw`` carries all ``t`` (<= 32) time steps of each spike bit-packed in
+    one word (``repro.core.packing`` layout), so the activation read from HBM
+    is 1/t of the dense tick-folded GEMM's; bitplanes are unpacked per-tile in
+    VMEM by the kernel.
+    """
+    (m, k), (_, c) = xw.shape, w.shape
+    if 0 in (m, k, c):
+        return jnp.zeros((t, m, c), jnp.float32)
+    xp, m = _pad_to(xw, 0, 128)
+    xp, k = _pad_to(xp, 1, 128)
+    wp, _ = _pad_to(w, 0, 128)
+    wp, c = _pad_to(wp, 1, 128)
+    out = K.packed_spike_matmul_fwd(
+        xp, wp, t_total=t, interpret=resolve_interpret(interpret))
+    return out[:, :m, :c]
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -73,3 +106,21 @@ def conv3x3_op(x: jax.Array, w: jax.Array, *,
     wmat = w.reshape(9 * c, cout)              # HWIO row-major matches im2col order
     out = spike_matmul_op(cols, wmat, interpret=interpret)
     return out.reshape(n, h, wd, cout)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def packed_conv3x3_op(xw: jax.Array, w: jax.Array, *, t: int,
+                      interpret: bool | None = None) -> jax.Array:
+    """3x3 conv on packed spike words. xw: (N, H, W, Cin) uint32 words
+    (t <= 32 time steps per word), w: (3, 3, Cin, Cout) -> (T, N, H, W, Cout).
+
+    Packing is elementwise over (N, H, W, C), so im2col commutes with it: the
+    patches are gathered as words (SAME zero padding is the all-zero word) and
+    the packed GEMM unpacks them per-tile.
+    """
+    n, h, wd, c = xw.shape
+    cout = w.shape[-1]
+    cols = _im2col(xw, 3)                      # (N*H*W, 9*Cin) uint32 words
+    wmat = w.reshape(9 * c, cout)
+    out = packed_spike_matmul_op(cols, wmat, t=t, interpret=interpret)
+    return out.reshape(t, n, h, wd, cout)

@@ -11,6 +11,14 @@ def spike_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     return jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
 
 
+def packed_spike_matmul_ref(xw: jax.Array, w: jax.Array, t: int) -> jax.Array:
+    """Oracle for the packed-operand GEMM: unpack the (M, K) uint32 words to
+    (T, M, K) bitplanes, then batch-matmul -> (T, M, C)."""
+    shifts = jnp.arange(t, dtype=jnp.uint32).reshape(t, 1, 1)
+    planes = ((xw[None] >> shifts) & jnp.uint32(1)).astype(jnp.float32)
+    return jnp.einsum("tmk,kc->tmc", planes, w.astype(jnp.float32))
+
+
 def conv1x1_ref(x: jax.Array, w: jax.Array) -> jax.Array:
     """x: (N, H, W, Cin), w: (Cin, Cout)."""
     return jnp.einsum("nhwc,cd->nhwd", x.astype(jnp.float32), w.astype(jnp.float32))

@@ -127,7 +127,8 @@ def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
               f"({num_requests/dt:.1f} img/s on {jax.default_backend()}; "
               f"deploy plan: {stats['folded_conv_bn'] + stats['folded_linear_bn']} "
               f"folded BN pairs, {stats['fused_lif_iand_dispatches']} fused "
-              f"LIF+IAND dispatches, backend={stats['backend']})")
+              f"LIF+IAND dispatches, backend={stats['backend']}"
+              f"{', packed spikes' if stats['packed'] else ''})")
     return done
 
 
@@ -140,8 +141,10 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--vision", action="store_true",
                     help="serve a vision Spikformer via the deploy engine")
-    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
-                    help="deploy-plan backend (vision mode)")
+    ap.add_argument("--backend", default="jnp",
+                    choices=("jnp", "pallas", "jnp+packed", "pallas+packed"),
+                    help="deploy-plan backend (vision mode); +packed serves "
+                         "bit-packed inter-layer spike activations")
     args = ap.parse_args()
     if args.vision:
         serve_vision(args.arch, num_requests=args.requests, slots=args.slots,

@@ -140,6 +140,88 @@ def test_engine_table1_configs(cfg):
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
 
 
+# -- packed spike datapath ----------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["jnp+packed", "pallas+packed"])
+def test_engine_packed_matches_dense_plan(tiny_trained, backend):
+    """The packed plan is bit-exact vs the unpacked plan: identical logits."""
+    params, state, img = tiny_trained
+    cfg = _tiny()
+    dense = engine.apply(engine.compile_plan(params, state, cfg), img)
+    packed = engine.apply(
+        engine.compile_plan(params, state, cfg, backend=backend), img)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(dense))
+
+
+def test_engine_packed_gemm_kernel_route(tiny_trained):
+    """Packed words fed straight to the packed spike-GEMM kernel (forced on,
+    interpret mode) still reproduce the dense plan's logits."""
+    params, state, img = tiny_trained
+    cfg = _tiny()
+    dense = engine.apply(engine.compile_plan(params, state, cfg), img)
+    be = engine.Backend("pallas", matmul_kernel=True, packed=True)
+    packed = engine.apply(
+        engine.compile_plan(params, state, cfg, backend=be), img)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(dense), atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", [
+    sf.SPIKFORMER_8_384, sf.SPIKFORMER_8_512, sf.SPIKFORMER_8_768,
+], ids=["8-384", "8-512", "8-768"])
+def test_engine_packed_table1_configs(cfg):
+    """Acceptance: packed deploy plan bit-exact vs the unpacked plan
+    (identical logits) on the Table-I configs."""
+    params, state = sf.init(KEY, cfg)
+    params = _perturb_bn(params, seed=8)
+    state = _perturb_bn(state, seed=9)
+    img = jax.random.uniform(jax.random.PRNGKey(10), (1, 32, 32, 3))
+    dense = engine.apply(
+        engine.compile_plan(params, state, cfg, backend="pallas"), img)
+    packed = engine.apply(
+        engine.compile_plan(params, state, cfg, backend="pallas+packed"), img)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(dense))
+
+
+def test_engine_packed_jit(tiny_trained):
+    params, state, img = tiny_trained
+    plan = engine.compile_plan(params, state, _tiny(), backend="jnp+packed")
+    fn = jax.jit(engine.make_apply_fn(plan))
+    dense = engine.apply(engine.compile_plan(params, state, _tiny()), img)
+    np.testing.assert_array_equal(np.asarray(fn(plan.params, img)),
+                                  np.asarray(dense))
+
+
+def test_engine_packed_rejects_add_residual(tiny_trained):
+    params, state, _ = tiny_trained
+    with pytest.raises(ValueError, match="residual"):
+        engine.compile_plan(params, state, _tiny(residual="add"),
+                            backend="jnp+packed")
+
+
+def test_spike_traffic_accounting(tiny_trained):
+    """T=8 moves 8x fewer inter-layer spike bytes; edge walk covers every
+    tokenizer stage and block unit."""
+    from repro.engine import analysis
+
+    cfg = _tiny()
+    tr8 = analysis.spike_traffic(
+        sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=8))
+    assert tr8["reduction"] == 8.0
+    tr4 = analysis.spike_traffic(cfg)
+    assert tr4["reduction"] == 4.0
+    names = [e["name"] for e in tr4["edges"]]
+    assert "tok0" in names and "block1.attn" in names and "block0.fc2" in names
+    # q/k/v are SSA-boundary edges: the conservative number prices them dense
+    assert all(e["ssa_boundary"] == (e["name"].split(".")[-1] in "qkv")
+               for e in tr4["edges"] if e["name"].startswith("block"))
+    assert tr4["packed_bytes"] < tr4["packed_bytes_ssa_dense"] < tr4["dense_bytes"]
+    assert tr4["reduction_ssa_dense"] < tr4["reduction"]
+    # doubling the batch doubles both sides, not the ratio
+    tr4b = analysis.spike_traffic(cfg, batch=2)
+    assert tr4b["dense_bytes"] == 2 * tr4["dense_bytes"]
+    assert tr4b["reduction"] == tr4["reduction"]
+
+
 # -- structural properties ----------------------------------------------------
 
 def test_no_bn_op_in_deploy_jaxpr(tiny_trained):
@@ -192,6 +274,27 @@ def test_backend_resolution():
     assert engine.resolve_backend(engine.PALLAS) is engine.PALLAS
     with pytest.raises(ValueError):
         engine.resolve_backend("cuda")
+
+
+def test_backend_resolution_edge_cases():
+    """Satellite coverage: legacy bools, packed suffixes, bad kinds/flags/types."""
+    assert engine.resolve_backend("jnp+packed") == engine.JNP_PACKED
+    assert engine.resolve_backend("pallas+packed") == engine.PALLAS_PACKED
+    assert engine.resolve_backend("pallas+packed").packed
+    assert not engine.resolve_backend("pallas").packed
+    assert not engine.resolve_backend(True).packed        # legacy bool: dense
+    with pytest.raises(ValueError):
+        engine.resolve_backend("pallas+quantized")        # unknown flag
+    with pytest.raises(ValueError):
+        engine.resolve_backend("pallas+")                 # dangling separator
+    with pytest.raises(ValueError):
+        engine.resolve_backend("+packed")                 # empty kind
+    with pytest.raises(ValueError):
+        engine.resolve_backend("cuda+packed")             # bad kind, good flag
+    with pytest.raises(TypeError):
+        engine.resolve_backend(3.14)
+    with pytest.raises(TypeError):
+        engine.resolve_backend(["pallas"])
 
 
 def test_vision_serve_path():

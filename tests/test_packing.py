@@ -1,0 +1,231 @@
+"""Bit-packed spike datapath: pack/unpack round-trips, packed LIF epilogues,
+the packed-operand GEMM kernel, and the Backend plumbing that carries packed
+activations through the deploy engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import packing
+from repro.core.lif import lif
+from repro.engine import backend as B
+from repro.kernels.lif_parallel.ops import lif_iand_pack_op, lif_pack_op
+from repro.kernels.spike_matmul.ops import (
+    conv3x3_op, packed_conv3x3_op, packed_spike_matmul_op, spike_matmul_op)
+from repro.kernels.spike_matmul.ref import packed_spike_matmul_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _spikes(key, shape, dtype=jnp.float32):
+    return (jax.random.uniform(key, shape) > 0.5).astype(dtype)
+
+
+# -- pack / unpack round-trips ------------------------------------------------
+
+@pytest.mark.parametrize("t", [1, 4, 8, 32])
+@pytest.mark.parametrize("shape", [(6,), (3, 5), (2, 3, 4)])
+def test_pack_roundtrip(t, shape):
+    """T in {1, 4, 8} leaves a ragged tail in the single word; T=32 fills it."""
+    s = _spikes(jax.random.PRNGKey(t), (t,) + shape)
+    ps = packing.pack(s)
+    assert ps.t == t
+    assert ps.words.dtype == jnp.uint32
+    assert ps.words.shape == (packing.num_words(t),) + shape
+    np.testing.assert_array_equal(np.asarray(packing.unpack(ps)), np.asarray(s))
+
+
+@pytest.mark.parametrize("t", [33, 40, 64])
+def test_pack_roundtrip_multiword(t):
+    """T > 32 spills into a second word (ragged tail in the last one)."""
+    s = _spikes(jax.random.PRNGKey(t), (t, 17))
+    ps = packing.pack(s)
+    assert ps.words.shape[0] == packing.num_words(t) == -(-t // 32)
+    np.testing.assert_array_equal(np.asarray(packing.unpack(ps)), np.asarray(s))
+
+
+def test_pack_roundtrip_bool_and_bf16():
+    s = _spikes(KEY, (4, 9), dtype=jnp.bfloat16)
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack(packing.pack(s), dtype=jnp.bfloat16)),
+        np.asarray(s))
+    sb = _spikes(KEY, (4, 9)) > 0
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack(packing.pack(sb))),
+        np.asarray(sb).astype(np.float32))
+
+
+def test_pack_ragged_tail_bits_zero():
+    """Bits beyond T stay zero -- iand/popcount rely on the invariant."""
+    ps = packing.pack(jnp.ones((3, 8)))
+    assert bool(jnp.all(ps.words == jnp.uint32(0b111)))
+
+
+def test_packed_iand_matches_dense():
+    skip = _spikes(jax.random.PRNGKey(1), (8, 33))
+    s = _spikes(jax.random.PRNGKey(2), (8, 33))
+    got = packing.unpack(packing.iand(packing.pack(skip), packing.pack(s)))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(skip * (1 - s)))
+
+
+def test_spike_counts_popcount():
+    s = _spikes(jax.random.PRNGKey(3), (40, 11))
+    np.testing.assert_array_equal(
+        np.asarray(packing.spike_counts(packing.pack(s))),
+        np.asarray(s.sum(0).astype(np.uint32)))
+
+
+def test_pack_validation():
+    with pytest.raises(ValueError):
+        packing.num_words(0)
+    with pytest.raises(ValueError):
+        packing.pack(jnp.ones((4, 3)), t=8)
+    with pytest.raises(TypeError):
+        packing.PackedSpikes(words=jnp.ones((1, 3)), t=4)  # not uint32
+    with pytest.raises(ValueError):
+        packing.iand(packing.pack(jnp.ones((4, 3))), packing.pack(jnp.ones((2, 3))))
+
+
+def test_packed_spikes_is_pytree():
+    ps = packing.pack(_spikes(KEY, (4, 6)))
+    out = jax.jit(lambda p: packing.iand(p, p))(ps)
+    assert isinstance(out, packing.PackedSpikes) and out.t == 4
+    assert bool(jnp.all(out.words == 0))  # s & ~s == 0
+
+
+def test_traffic_accounting_helpers():
+    assert packing.dense_nbytes(8, 100) == 8 * 100 * 4
+    assert packing.packed_nbytes(8, 100) == 100 * 4          # 8x at T=8
+    assert packing.packed_nbytes(33, 100) == 2 * 100 * 4
+
+
+# -- packed LIF kernel epilogues ---------------------------------------------
+
+@pytest.mark.parametrize("t,shape", [(4, (4, 300)), (8, (8, 128)), (1, (1, 130))])
+def test_lif_pack_kernel_matches_dense(t, shape):
+    drive = jax.random.normal(KEY, shape)
+    words = lif_pack_op(drive)
+    dense = lif(drive, use_kernel=True)
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack(packing.PackedSpikes(words, t))),
+        np.asarray(dense))
+
+
+@pytest.mark.parametrize("chain_len", [1, 2, 4])
+def test_lif_iand_pack_kernel_matches_dense(chain_len):
+    drive = jax.random.normal(KEY, (4, 260))
+    skip = _spikes(jax.random.PRNGKey(1), (4, 260))
+    words = lif_iand_pack_op(drive, packing.pack(skip).words,
+                             chain_len=chain_len)
+    want = skip * (1 - lif(drive, use_kernel=True, chain_len=chain_len))
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack(packing.PackedSpikes(words, 4))),
+        np.asarray(want))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_lif_dispatch_pack_output(use_kernel):
+    """The unified dispatch returns PackedSpikes on both routes, bit-equal."""
+    drive = jax.random.normal(KEY, (4, 3, 70))
+    skip = packing.pack(_spikes(jax.random.PRNGKey(1), (4, 3, 70)))
+    ps = lif(drive, use_kernel=use_kernel, pack_output=True, iand_skip=skip)
+    assert isinstance(ps, packing.PackedSpikes)
+    want = lif(drive, use_kernel=use_kernel, iand_skip=packing.unpack(skip))
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack(ps)), np.asarray(want))
+
+
+def test_lif_dispatch_pack_skip_type_errors():
+    drive = jax.random.normal(KEY, (4, 8))
+    skip = _spikes(jax.random.PRNGKey(1), (4, 8))
+    with pytest.raises(TypeError):
+        lif(drive, pack_output=True, iand_skip=skip)          # dense skip
+    with pytest.raises(TypeError):
+        lif(drive, iand_skip=packing.pack(skip))              # packed, no flag
+    short = packing.pack(_spikes(jax.random.PRNGKey(2), (2, 8)))
+    for uk in (False, True):  # T mismatch raises on BOTH routes (the kernel
+        with pytest.raises(ValueError):  # would silently AND missing bits as 0)
+            lif(drive, use_kernel=uk, pack_output=True, iand_skip=short)
+
+
+# -- packed spike GEMM kernel -------------------------------------------------
+
+@pytest.mark.parametrize("t,m,k,c", [
+    (4, 64, 96, 130), (8, 100, 128, 64), (1, 16, 48, 10), (32, 8, 96, 96),
+])
+def test_packed_matmul_vs_oracle(t, m, k, c):
+    x = _spikes(jax.random.PRNGKey(t), (t, m, k))
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, c))
+    words = packing.pack(x).words[0]
+    got = packed_spike_matmul_op(words, w, t=t)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(packed_spike_matmul_ref(words, w, t)),
+        rtol=1e-6, atol=1e-6)
+    dense = spike_matmul_op(x.reshape(t * m, k), w).reshape(t, m, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_packed_conv3x3_vs_dense():
+    t, b, h, w_, c, cout = 4, 2, 8, 8, 16, 24
+    x = _spikes(KEY, (t, b, h, w_, c))
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 3, c, cout))
+    got = packed_conv3x3_op(packing.pack(x).words[0], w, t=t)
+    dense = conv3x3_op(x.reshape(t * b, h, w_, c), w).reshape(t, b, h, w_, cout)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_packed_matmul_rejects_t_over_32():
+    words = jnp.zeros((8, 128), jnp.uint32)
+    w = jnp.zeros((128, 128))
+    with pytest.raises(ValueError):
+        packed_spike_matmul_op(words, w, t=33)
+
+
+# -- zero-sized-dim regression (satellite) ------------------------------------
+
+@pytest.mark.parametrize("shape_x,shape_w,want", [
+    ((0, 5), (5, 3), (0, 3)),      # empty M
+    ((4, 0), (0, 3), (4, 3)),      # empty K: zeros, not a degenerate launch
+    ((4, 5), (5, 0), (4, 0)),      # empty C
+])
+def test_spike_matmul_zero_dims(shape_x, shape_w, want):
+    out = spike_matmul_op(jnp.zeros(shape_x), jnp.zeros(shape_w))
+    assert out.shape == want
+    assert float(jnp.abs(out).sum()) == 0.0
+
+
+def test_packed_matmul_zero_dims():
+    out = packed_spike_matmul_op(
+        jnp.zeros((0, 5), jnp.uint32), jnp.zeros((5, 3)), t=4)
+    assert out.shape == (4, 0, 3)
+
+
+# -- backend plumbing ---------------------------------------------------------
+
+def test_backend_packed_apply_helpers_match_dense():
+    be_jnp = B.Backend("jnp", packed=True)
+    be_pl = B.Backend("pallas", matmul_kernel=True, packed=True)
+    p = {"w": jax.random.normal(KEY, (48, 32)),
+         "b": jax.random.normal(jax.random.PRNGKey(1), (32,))}
+    x = _spikes(jax.random.PRNGKey(2), (4, 2, 9, 48))
+    xp = packing.pack(x)
+    want = jnp.dot(x.reshape(-1, 48), p["w"]).reshape(4, 2, 9, 32) + p["b"]
+    for be in (be_jnp, be_pl):
+        got = B.linear_apply_packed(be, p, xp)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_backend_matmul_kernel_auto_default():
+    """None = auto: spike-GEMM routing follows pallas + compiled (TPU); an
+    explicit bool always wins."""
+    on_tpu = jax.default_backend() == "tpu"
+    assert B.Backend("pallas").use_matmul_kernel == on_tpu
+    assert not B.Backend("jnp").use_matmul_kernel
+    assert B.Backend("pallas", interpret=False).use_matmul_kernel
+    assert not B.Backend("pallas", interpret=True).use_matmul_kernel
+    assert B.Backend("pallas", matmul_kernel=True, interpret=True).use_matmul_kernel
+    assert not B.Backend("pallas", matmul_kernel=False, interpret=False).use_matmul_kernel
