@@ -1,4 +1,4 @@
-.PHONY: test test-fast bench
+.PHONY: test test-fast bench lint
 
 # Tier-1 verify: full suite, stop at first failure.
 test:
@@ -10,3 +10,7 @@ test-fast:
 
 bench:
 	PYTHONPATH=src python -m benchmarks.run
+
+# Lint gate (same invocation as CI).
+lint:
+	ruff check src tests benchmarks examples scripts

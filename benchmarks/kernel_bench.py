@@ -14,12 +14,9 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.lif_parallel.ops import lif_parallel_op
 from repro.kernels.lif_parallel.ref import lif_parallel_ref
 from repro.kernels.spike_matmul.ops import spike_matmul_op
-from repro.kernels.spike_matmul.ref import spike_matmul_ref
 from repro.kernels.spiking_attention.ops import ssa_op
-from repro.kernels.spiking_attention.ref import ssa_ref
 
 
 def _time(fn, *args, iters=3):

@@ -31,7 +31,6 @@ Writes artifacts/roofline/<arch>__<cell>.json and a markdown table.
 
 import argparse
 import json
-import math
 import time
 from pathlib import Path
 
@@ -269,8 +268,6 @@ def analyse_cell(arch: str, cell_name: str, *, use_cache=True,
 
     probe = probe_cell(arch, cell_name, preset=preset, cfg_override=cfg_override)
     coll_dev = sum(probe["coll"].values())
-    from repro.models import transformer as T
-
     shapes = jax.eval_shape(lambda c=cfg: __import__("repro.models.transformer",
                             fromlist=["init_lm"]).init_lm(jax.random.PRNGKey(0), c))
     total_params = sum(x.size for x in jax.tree_util.tree_leaves(shapes))

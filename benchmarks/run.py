@@ -35,16 +35,27 @@ def _run(name, fn):
 
 def write_bench_json(engine_result, packed_result) -> None:
     """Persist the engine perf trajectory machine-readably: per-config
-    tokens/s and inter-layer activation bytes, tracked across PRs."""
+    tokens/s and inter-layer activation bytes, tracked across PRs.
+
+    ``packed_reduction_ssa_dense`` prices the q/k/v attention edges under the
+    packed Pallas deploy backend in EVERY row: its ``packed_ssa_op`` kernel
+    consumes the words directly (``ssa_boundary_closed`` True), so the column
+    equals ``packed_reduction`` -- the full 8x/32x contract.
+    ``packed_reduction_ssa_open`` is the uniform companion column pricing
+    those edges dense (the jnp oracle unpacks at the attention op boundary).
+    ``@T32`` rows record the 32-steps-per-word ceiling."""
     configs = {}
-    for row in packed_result["table1_t8"]:
-        configs[row["config"]] = {
-            "t": row["t"],
-            "activation_bytes_dense": row["dense_bytes"],
-            "activation_bytes_packed": row["packed_bytes"],
-            "packed_reduction": row["reduction"],
-            "packed_reduction_ssa_dense": row["reduction_ssa_dense"],
-        }
+    for table, suffix in (("table1_t8", ""), ("table1_t32", "@T32")):
+        for row in packed_result.get(table, ()):
+            configs[f"{row['config']}{suffix}"] = {
+                "t": row["t"],
+                "activation_bytes_dense": row["dense_bytes"],
+                "activation_bytes_packed": row["packed_bytes"],
+                "packed_reduction": row["reduction"],
+                "ssa_boundary_closed": row["ssa_boundary_closed"],
+                "packed_reduction_ssa_dense": row["reduction_ssa_dense"],
+                "packed_reduction_ssa_open": row["reduction_ssa_open"],
+            }
     m = packed_result["measured"]
     measured_key = m["config"]
     configs[measured_key] = {
@@ -55,7 +66,9 @@ def write_bench_json(engine_result, packed_result) -> None:
         "activation_bytes_dense": m["dense_bytes"],
         "activation_bytes_packed": m["packed_bytes"],
         "packed_reduction": m["reduction"],
+        "ssa_boundary_closed": m["ssa_boundary_closed"],
         "packed_reduction_ssa_dense": m["reduction_ssa_dense"],
+        "packed_reduction_ssa_open": m["reduction_ssa_open"],
     }
     if engine_result is not None:
         # same small config, but the engine bench runs its own batch size --

@@ -21,7 +21,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.lif import lif_parallel, lif_serial
+from repro.core.lif import lif_parallel
 from repro.launch.compile_info import cost_analysis_dict
 
 T_STEPS = 4
@@ -76,8 +76,6 @@ def main():
     par_bytes, par_flops = _cost(parallel_schedule, spikes, w)
 
     reduction = 1.0 - par_bytes / serial_bytes
-    weight_reads_serial = T_STEPS * w_bytes
-    weight_reads_parallel = w_bytes
 
     sparsity = float(jnp.mean(spikes == 0))
     dense_macs = T_STEPS * N_TOK * C_IN * C_OUT

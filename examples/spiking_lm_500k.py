@@ -9,7 +9,6 @@ full-attention LMs must skip).
 """
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.models import spiking_lm as S

@@ -18,7 +18,7 @@ dataflow); only the LIF chains see the unfolded time axis.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -131,6 +131,19 @@ def _lif(cfg, drive, iand_skip=None):
     )
 
 
+def _ssa(cfg, q, k, v):
+    """SSA routing for the training graph: the same ``use_kernel`` flag that
+    selects the LIF kernel also selects the ``ssa_op`` Pallas kernel (whose
+    custom VJP differentiates the oracle, so training stays correct).  The
+    linear ordering always takes the einsum: the kernel is the quadratic
+    N^2 dataflow."""
+    if cfg.use_kernel and cfg.attn_ordering == "quadratic":
+        from repro.kernels.spiking_attention.ops import ssa_op
+
+        return ssa_op(q, k, v, scale=cfg.attn_scale)
+    return ssa(q, k, v, scale=cfg.attn_scale, ordering=cfg.attn_ordering)
+
+
 def _linear_bn_lif(cfg, p, s, x, *, train, iand_skip=None):
     """Tick-batched Linear -> BN -> (unfolded) LIF. x: (T, B, N, Din) spikes.
 
@@ -169,12 +182,11 @@ def block_apply(bp, bs, x, cfg: SpikformerConfig, *, train: bool):
             acts[u.name], ns[u.name] = _linear_bn_lif(cfg, bp[u.name], bs[u.name], x, train=train)
             continue
         if u.role == "attn_out":
-            attn = ssa(
+            attn = _ssa(
+                cfg,
                 split_heads(acts["q"], cfg.num_heads),
                 split_heads(acts["k"], cfg.num_heads),
                 split_heads(acts["v"], cfg.num_heads),
-                scale=cfg.attn_scale,
-                ordering=cfg.attn_ordering,
             )
             inp = _lif(cfg, merge_heads(attn))  # attn spikes
         elif u.role == "mlp_hidden":

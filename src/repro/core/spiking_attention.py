@@ -60,6 +60,21 @@ def merge_heads(x: jax.Array) -> jax.Array:
     return x.transpose(0, 1, 3, 2, 4).reshape(t, b, n, h * dh)
 
 
+def split_heads_packed(xp, h: int):
+    """Head split on a bit-packed spike train: words (W, B, N, D) ->
+    (W, B, H, N, D/H).
+
+    Packing is elementwise over (B, N, D), so the head split commutes with it
+    -- the word axis rides along unchanged and spikes stay packed through the
+    reshape/transpose (no unpack at the attention boundary).
+    """
+    from repro.core import packing
+
+    w, b, n, d = xp.words.shape
+    words = xp.words.reshape(w, b, n, h, d // h).transpose(0, 1, 3, 2, 4)
+    return packing.PackedSpikes(words=words, t=xp.t)
+
+
 def ssa_linear_state_init(b: int, h: int, dh: int, dtype=jnp.float32):
     """O(d^2) running state for linear-ordering spiking decode: sum_m k_m v_m^T."""
     return jnp.zeros((b, h, dh, dh), dtype)

@@ -13,7 +13,7 @@ iterate :func:`repro.engine.layout.tokenizer_layout`.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp

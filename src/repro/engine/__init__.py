@@ -23,7 +23,7 @@ inter-layer activations travel as uint32 bitplane words
 
 from repro.engine.backend import (
     JNP, JNP_PACKED, PALLAS, PALLAS_PACKED, Backend,
-    resolve as resolve_backend,
+    resolve as resolve_backend, ssa_apply, ssa_apply_packed,
 )
 from repro.engine.execute import apply, make_apply_fn
 from repro.engine.layout import (
@@ -33,7 +33,7 @@ from repro.engine.plan import DeployPlan, PlanMeta, compile_plan, plan_stats
 
 __all__ = [
     "JNP", "JNP_PACKED", "PALLAS", "PALLAS_PACKED", "Backend",
-    "resolve_backend",
+    "resolve_backend", "ssa_apply", "ssa_apply_packed",
     "apply", "make_apply_fn",
     "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "spike_edges",
     "tokenizer_layout",

@@ -51,7 +51,8 @@ def bn_op_count(fn, *args, **kwargs) -> int:
         n for name, n in hist.items() if name.startswith("batch_norm"))
 
 
-def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None) -> dict:
+def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
+                  backend=None) -> dict:
     """Inter-layer spike-activation bytes of one forward pass, dense vs
     packed.
 
@@ -59,15 +60,26 @@ def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None) -> dict:
     epilogue writes and the next consumer reads) and prices each edge two
     ways: dense f32 over T time steps (``4*T`` bytes/element) vs bit-packed
     uint32 bitplane words (``4*ceil(T/32)`` bytes/element).  ``packed_bytes``
-    / ``reduction`` are the datapath contract (every edge carried packed);
-    the SSA-boundary q/k/v edges are additionally priced dense in
-    ``packed_bytes_ssa_dense`` / ``reduction_ssa_dense`` -- the conservative
-    number while the attention kernel still consumes dense operands (unpacked
-    at its boundary; packed SSA is ROADMAP backlog).  Both are what
-    ``benchmarks/packed_traffic.py`` reports against the Table-I configs.
+    / ``reduction`` are the datapath contract (every edge carried packed).
+
+    The SSA-boundary q/k/v edges depend on the backend: under a backend whose
+    ``closes_ssa_boundary`` resolves True (packed Pallas route; quadratic
+    attention ordering) the packed SSA kernel consumes the words directly and
+    ``packed_bytes_ssa_dense`` / ``reduction_ssa_dense`` EQUAL the packed
+    contract; with ``backend=None`` (or any backend that unpacks at the
+    attention op's boundary) they conservatively price those edges dense.
+    Both are what ``benchmarks/packed_traffic.py`` reports against the
+    Table-I configs.
     """
     from repro.core import packing
+    from repro.engine.backend import resolve
     from repro.engine.layout import spike_edges
+
+    boundary_closed = False
+    if backend is not None:
+        be = resolve(backend)
+        boundary_closed = (be.closes_ssa_boundary
+                           and cfg.attn_ordering == "quadratic")
 
     edges = spike_edges(cfg, img_size=img_size)
     t = cfg.t
@@ -81,11 +93,13 @@ def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None) -> dict:
     dense = sum(e["dense_bytes"] for e in per_edge)
     packed = sum(e["packed_bytes"] for e in per_edge)
     packed_ssa_dense = sum(
-        e["dense_bytes"] if e["ssa_boundary"] else e["packed_bytes"]
+        e["dense_bytes"] if e["ssa_boundary"] and not boundary_closed
+        else e["packed_bytes"]
         for e in per_edge)
     return {
         "t": t,
         "batch": batch,
+        "ssa_boundary_closed": boundary_closed,
         "edges": per_edge,
         "dense_bytes": dense,
         "packed_bytes": packed,

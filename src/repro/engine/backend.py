@@ -19,6 +19,14 @@ from the legacy flag for the training path):
   (uint32 bitplane words, ``repro.core.packing``) -- LIF epilogues emit
   packed words, the IAND residual is a bitwise ``skip & ~s``, and GEMMs
   unpack per-tile in VMEM (or at the op boundary on the jnp oracle path).
+
+Every compute op of the deploy plan routes through this module -- including
+attention: :func:`ssa_apply` (jnp einsum oracle vs the ``ssa_op`` Pallas
+kernel, gated like the spike GEMMs) and :func:`ssa_apply_packed` (uint32
+bitplane words consumed directly by ``packed_ssa_op`` when
+``Backend.closes_ssa_boundary``; unpacked at the op boundary otherwise).
+The executor never calls a kernel or an oracle directly, so a plan's kernel
+route is a property of its Backend, with no silent exemptions.
 """
 
 from __future__ import annotations
@@ -53,6 +61,15 @@ class Backend:
 
             return self.kind == "pallas" and not resolve_interpret(self.interpret)
         return bool(self.matmul_kernel)
+
+    @property
+    def closes_ssa_boundary(self) -> bool:
+        """True when packed q/k/v words feed the packed SSA kernel directly:
+        no unpack at the attention boundary, so the q/k/v edges genuinely move
+        packed bytes (``engine.analysis.spike_traffic`` prices them packed
+        exactly under this condition).  Requires the packed datapath AND the
+        Pallas matmul-kernel route (the jnp oracle consumes dense operands)."""
+        return self.packed and self.kind == "pallas" and self.use_matmul_kernel
 
 
 JNP = Backend("jnp")
@@ -104,6 +121,48 @@ def linear_apply(backend: Backend, p, x2d: jax.Array) -> jax.Array:
     if "b" in p:
         y = y + p["b"]
     return y
+
+
+def ssa_apply(backend: Backend, q: jax.Array, k: jax.Array, v: jax.Array, *,
+              scale: float, ordering: str = "quadratic") -> jax.Array:
+    """Spiking self-attention on this backend. q/k/v: (T, B, H, N, Dh) binary
+    spikes -> (T, B, H, N, Dh) f32 drive (the caller re-spikes through LIF).
+
+    Routing mirrors :func:`linear_apply`: the Pallas ``ssa_op`` kernel on the
+    matmul-kernel route (quadratic ordering only -- the kernel IS the
+    quadratic N^2 dataflow), the jnp einsum oracle otherwise.  The linear
+    ordering Q(K^T V) always takes the oracle: it is the O(d^2) long-sequence
+    path whose whole point is avoiding the N x N score tile.
+    """
+    if (ordering == "quadratic" and backend.kind == "pallas"
+            and backend.use_matmul_kernel):
+        from repro.kernels.spiking_attention.ops import ssa_op
+
+        return ssa_op(q, k, v, scale=scale, interpret=backend.interpret)
+    from repro.core.spiking_attention import ssa
+
+    return ssa(q, k, v, scale=scale, ordering=ordering)
+
+
+def ssa_apply_packed(backend: Backend, qp: packing.PackedSpikes,
+                     kp: packing.PackedSpikes, vp: packing.PackedSpikes, *,
+                     scale: float, ordering: str = "quadratic") -> jax.Array:
+    """Spiking self-attention on packed q/k/v trains (words (W, B, H, N, Dh))
+    -> dense drive (T, B, H, N, Dh).
+
+    On the compiled Pallas matmul-kernel route the uint32 words are the
+    attention operands (bitplanes unpacked per-tile in VMEM by
+    ``packed_ssa_op`` -- multi-word trains supported), closing the last dense
+    spike hop of the packed datapath; otherwise the trains are unpacked at the
+    op boundary and the dense route runs -- the jnp oracle.
+    """
+    if ordering == "quadratic" and backend.closes_ssa_boundary:
+        from repro.kernels.spiking_attention.ops import packed_ssa_op
+
+        return packed_ssa_op(qp.words, kp.words, vp.words, t=qp.t,
+                             scale=scale, interpret=backend.interpret)
+    q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
+    return ssa_apply(backend, q, k, v, scale=scale, ordering=ordering)
 
 
 def conv3x3_apply(backend: Backend, p, x: jax.Array) -> jax.Array:

@@ -11,11 +11,14 @@ the accelerator's deploy view:
   weight read serves all time steps);
 * with ``Backend.packed``, spikes move between layers bit-packed along time
   (``repro.core.packing``): LIF epilogues emit uint32 bitplane words, the
-  IAND residual is the bitwise ``skip & ~s`` on words, GEMMs take the words
-  as operands (unpacked per-tile in VMEM on the compiled Pallas route), and
-  the head rate-decodes by popcount -- dense spike tensors only ever
-  materialise inside kernels (and at the SSA boundary, whose operands the
-  attention kernel consumes dense).
+  IAND residual is the bitwise ``skip & ~s`` on words, GEMMs AND the SSA take
+  the words as operands (unpacked per-tile in VMEM on the compiled Pallas
+  route), and the head rate-decodes by popcount -- dense spike tensors only
+  ever materialise inside kernels, tokenizer-to-head.
+
+All compute -- linears, convs, and attention alike -- goes through
+``repro.engine.backend``; the executor never calls a kernel or oracle
+directly, so the plan's backend fully decides the compute route.
 
 Executors are pure functions of (folded params, image); static plan metadata
 is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
@@ -31,7 +34,7 @@ import jax.numpy as jnp
 from repro.core import nn as cnn
 from repro.core import packing
 from repro.core.iand import connective
-from repro.core.spiking_attention import merge_heads, split_heads, ssa
+from repro.core.spiking_attention import merge_heads, split_heads, split_heads_packed
 from repro.engine import backend as B
 from repro.engine.plan import DeployPlan, PlanMeta
 
@@ -86,7 +89,8 @@ def _block_exec(meta: PlanMeta, bparams, x):
             acts[u.name] = _lif(meta, _unit_linear(meta, bparams[u.name], x))
             continue
         if u.role == "attn_out":
-            attn = ssa(
+            attn = B.ssa_apply(
+                meta.backend,
                 split_heads(acts["q"], cfg.num_heads),
                 split_heads(acts["k"], cfg.num_heads),
                 split_heads(acts["v"], cfg.num_heads),
@@ -148,11 +152,14 @@ def _block_exec_packed(meta: PlanMeta, bparams, xp: packing.PackedSpikes):
                 pack_output=True)
             continue
         if u.role == "attn_out":
-            # the SSA kernel consumes dense Q/K/V: unpack at its boundary
-            q, k, v = (packing.unpack(acts[nm]) for nm in ("q", "k", "v"))
-            attn = ssa(
-                split_heads(q, cfg.num_heads), split_heads(k, cfg.num_heads),
-                split_heads(v, cfg.num_heads),
+            # q/k/v stay packed through the head split; the backend feeds the
+            # words straight to the packed SSA kernel (or unpacks at ITS op
+            # boundary on the oracle route -- never here)
+            attn = B.ssa_apply_packed(
+                meta.backend,
+                split_heads_packed(acts["q"], cfg.num_heads),
+                split_heads_packed(acts["k"], cfg.num_heads),
+                split_heads_packed(acts["v"], cfg.num_heads),
                 scale=cfg.attn_scale, ordering=cfg.attn_ordering)
             attn_sp = _lif(meta, merge_heads(attn), pack_output=True)
             drive = _unit_linear_packed(meta, bparams[u.name], attn_sp)

@@ -68,9 +68,11 @@ class SpikeEdge:
     written by a LIF epilogue and read by the next consumer (the tensors the
     packed datapath compresses).  ``elems`` counts elements per image per
     time step.  ``ssa_boundary`` marks the q/k/v edges whose consumer is the
-    SSA: they are carried packed but unpacked dense at the attention kernel's
-    boundary (a packed-SSA kernel is ROADMAP backlog), so conservative
-    traffic accounting prices them dense."""
+    SSA: whether they move packed or dense depends on the backend -- under
+    ``Backend.closes_ssa_boundary`` the packed SSA kernel consumes the words
+    directly (priced packed); otherwise they are unpacked at the attention
+    op's boundary (priced dense by the conservative accounting in
+    ``engine.analysis.spike_traffic``)."""
 
     name: str
     elems: int

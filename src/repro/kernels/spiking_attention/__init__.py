@@ -1,1 +1,3 @@
-from repro.kernels.spiking_attention.ops import ssa_op
+from repro.kernels.spiking_attention.ops import packed_ssa_op, ssa_op
+
+__all__ = ["packed_ssa_op", "ssa_op"]

@@ -13,6 +13,11 @@ Query rows are blocked (block_q x D tiles); K/V for one g live in VMEM whole
 (vision-scale N; the long-sequence path uses the LINEAR ordering Q(K^T V) in
 ``repro.core.spiking_attention`` -- legal only because there is no softmax).
 VMEM per program ~= block_q*D + 2*M*D + block_q*M floats.
+
+``packed_ssa_fwd`` is the packed-operand variant: q/k/v arrive as uint32
+bitplane words (G = B*H, time lives in the bits), each bitplane is unpacked
+per-tile in VMEM, and the output is the dense (T, G, N, D) drive -- spikes
+never materialise dense outside VMEM on the operand side.
 """
 
 from __future__ import annotations
@@ -34,10 +39,12 @@ def ssa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
 
 
 def _block_q(n: int) -> int:
+    """Query block size: ``n`` must already be sublane-aligned (ops.py pads
+    ragged token counts), so the fallback never launches an unaligned block."""
     for cand in (512, 256, 128, 64, 32, 16, 8):
         if n % cand == 0:
             return cand
-    return n
+    raise ValueError(f"query token count {n} is not sublane-aligned (pad to 8)")
 
 
 def ssa_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
@@ -58,3 +65,48 @@ def ssa_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
         out_shape=jax.ShapeDtypeStruct((g, n, d), q.dtype),
         interpret=interpret,
     )(q, k, v)
+
+
+def packed_ssa_kernel(qw_ref, kw_ref, vw_ref, o_ref, *, t_total: int,
+                      scale: float):
+    """SSA on bit-packed operands: unpack q/k/v bitplanes per-tile in VMEM.
+
+    ``qw_ref``/``kw_ref``/``vw_ref`` are uint32 word tiles -- bit ``t % 32``
+    of word ``t // 32`` is the spike at time step ``t`` (the
+    ``repro.core.packing`` layout), so one HBM read of each operand tile
+    covers ALL T time steps; the dense kernel reads T f32 planes.  Each
+    bitplane is extracted with a shift-and-mask (exactly as
+    ``packed_matmul_kernel`` does) and fed to the two MXU contractions; the
+    T output planes share the q/k/v words already resident in VMEM.
+    """
+    for t in range(t_total):
+        wi, bit = divmod(t, 32)
+        qt = ((qw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+        kt = ((kw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+        vt = ((vw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+        scores = jnp.dot(qt, kt.T, preferred_element_type=jnp.float32)
+        out = jnp.dot(scores, vt, preferred_element_type=jnp.float32) * scale
+        o_ref[t, 0] = out.astype(o_ref.dtype)
+
+
+def packed_ssa_fwd(qw: jax.Array, kw: jax.Array, vw: jax.Array, *,
+                   t_total: int, scale: float, interpret: bool) -> jax.Array:
+    """qw (W, G, N, D), kw/vw (W, G, M, D) uint32 spike words (W = ceil(T/32)
+    words per train -- multi-word trains supported) -> (T, G, N, D) f32 drive.
+    """
+    w, g, n, d = qw.shape
+    m = kw.shape[2]
+    bq = _block_q(n)
+    grid = (g, n // bq)
+    return pl.pallas_call(
+        functools.partial(packed_ssa_kernel, t_total=t_total, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((w, 1, bq, d), lambda gi, qi: (0, gi, qi, 0)),
+            pl.BlockSpec((w, 1, m, d), lambda gi, qi: (0, gi, 0, 0)),
+            pl.BlockSpec((w, 1, m, d), lambda gi, qi: (0, gi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_total, 1, bq, d), lambda gi, qi: (0, gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_total, g, n, d), jnp.float32),
+        interpret=interpret,
+    )(qw, kw, vw)

@@ -1,10 +1,17 @@
-"""Jitted wrapper for the spiking_attention Pallas kernel.
+"""Jitted wrappers for the spiking_attention Pallas kernels.
 
-Folds (T, B, H, N, Dh) -> (G, N, Dh), pads Dh to lane alignment (zero padding
-is exact for SSA: padded lanes contribute 0 to both contractions), and calls
-the kernel. Backward: SSA is bilinear with no softmax, so the VJP is two more
-SSA-shaped contractions -- we let JAX differentiate the kernel-free oracle via
-a custom VJP to keep training correct while the forward uses the kernel.
+Folds (T, B, H, N, Dh) -> (G, N, Dh), pads Dh to lane alignment and the token
+axes to sublane alignment (zero padding is exact for SSA: padded lanes/rows
+contribute 0 to both contractions), and calls the kernel.  Backward: SSA is
+bilinear with no softmax, so the VJP is two more SSA-shaped contractions -- we
+let JAX differentiate the kernel-free oracle via a custom VJP to keep training
+correct while the forward uses the kernel.
+
+``packed_ssa_op`` is the packed-operand entry point: q/k/v arrive as uint32
+bitplane words (``repro.core.packing`` layout, multi-word trains supported),
+so the attention operands stay packed end to end -- the kernel unpacks
+bitplanes per-tile in VMEM.  Inference-only (packed trains do not carry
+gradients).
 """
 
 from __future__ import annotations
@@ -27,13 +34,29 @@ def _pad_d(x):
     return x, d
 
 
+def _pad_tokens(x, axis: int):
+    """Pad a token axis to sublane alignment (8): zero rows are exact for SSA
+    (padded queries write zero rows that are sliced away; padded keys/values
+    contribute 0 to both contractions)."""
+    n = x.shape[axis]
+    pad = (-n) % 8
+    if pad:
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, pad)
+        x = jnp.pad(x, widths)
+    return x, n
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _ssa(q, k, v, scale, interpret):
     qp, d = _pad_d(q)
     kp, _ = _pad_d(k)
     vp, _ = _pad_d(v)
+    qp, n = _pad_tokens(qp, 1)
+    kp, _ = _pad_tokens(kp, 1)
+    vp, _ = _pad_tokens(vp, 1)
     out = K.ssa_fwd(qp, kp, vp, scale=scale, interpret=interpret)
-    return out[..., :d]
+    return out[:, :n, :d]
 
 
 def _ssa_fwd(q, k, v, scale, interpret):
@@ -55,7 +78,31 @@ def ssa_op(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125,
            interpret: bool | None = None) -> jax.Array:
     """Tick-batched spiking attention. q,k,v: (T, B, H, N, Dh) -> same shape."""
     t, b, h, n, dh = q.shape
-    m = k.shape[3]
     fold = lambda x: x.reshape(t * b * h, x.shape[3], dh)
     out = _ssa(fold(q), fold(k), fold(v), float(scale), resolve_interpret(interpret))
     return out.reshape(t, b, h, n, dh)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "scale", "interpret"))
+def packed_ssa_op(qw: jax.Array, kw: jax.Array, vw: jax.Array, *, t: int,
+                  scale: float = 0.125,
+                  interpret: bool | None = None) -> jax.Array:
+    """Packed-operand tick-batched spiking attention.
+
+    qw/kw/vw: (W, B, H, N, Dh) uint32 spike words carrying all ``t`` time
+    steps bit-packed along the word axis (W = ceil(t/32); multi-word trains
+    are unrolled inside the kernel) -> dense drive (T, B, H, N, Dh) f32.
+    The operand read from HBM is 1/min(t,32) of the dense kernel's; bitplanes
+    are unpacked per-tile in VMEM.
+    """
+    w, b, h, n, dh = qw.shape
+    fold = lambda x: x.reshape(w, b * h, x.shape[3], dh)
+    qf, d = _pad_d(fold(qw))
+    kf, _ = _pad_d(fold(kw))
+    vf, _ = _pad_d(fold(vw))
+    qf, n = _pad_tokens(qf, 2)
+    kf, _ = _pad_tokens(kf, 2)
+    vf, _ = _pad_tokens(vf, 2)
+    out = K.packed_ssa_fwd(qf, kf, vf, t_total=t, scale=float(scale),
+                           interpret=resolve_interpret(interpret))
+    return out[:, :, :n, :d].reshape(t, b, h, n, dh)

@@ -36,7 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.sharding import make_rules, use_rules
 from repro.launch.compile_info import cost_analysis_dict
-from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.mesh import make_production_mesh
 from repro.models import lm, transformer as T
 from repro.models.config import SHAPE_CELLS, cell_by_name, cell_supported
 from repro.optim.optimizer import OptimizerConfig, make_optimizer

@@ -33,12 +33,21 @@ def greedy_sample(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def _warm_sizes(slots: int, num_requests: int) -> set[int]:
+    """Every batch shape the slot loop will see: the full slot plus the
+    ragged final batch -- warming both keeps reported throughput free of
+    mid-serving recompiles."""
+    sizes = {min(slots, num_requests)}
+    if num_requests % slots:
+        sizes.add(num_requests % slots)
+    return sizes
+
+
 def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
           slots: int = 4, seed: int = 0, verbose: bool = True):
     cfg = lm.get_config(arch)
     assert cfg.modality == "text", "serving demo targets text archs"
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
-    prefill = jax.jit(lm.make_prefill_step(cfg))
     serve_step = jax.jit(lm.make_serve_step(cfg))
 
     cap = prompt_len + max_new
@@ -46,15 +55,19 @@ def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
                       global_batch=num_requests)
     prompts = make_batch(dcfg, 0)["tokens"]
 
+    for b in _warm_sizes(slots, num_requests):
+        jax.block_until_ready(serve_step(
+            params, T.cache_init(cfg, b, cap),
+            {"token": jnp.zeros((b, 1), jnp.int32)}, jnp.asarray(0))[0])
+
     done, t0 = [], time.perf_counter()
     for start in range(0, num_requests, slots):
         batch_prompts = jnp.asarray(prompts[start : start + slots])
         b = batch_prompts.shape[0]
-        # prefill into a decode cache of full capacity
-        logits_last, _ = prefill(params, {"tokens": batch_prompts})
         cache = T.cache_init(cfg, b, cap)
-        # replay prompt through serve_step to fill the cache (keeps one code
-        # path; production would reshard the prefill cache instead)
+        # feed the prompt through serve_step to fill the decode cache (one
+        # code path for prompt and generation; production would run a batched
+        # prefill and reshard its cache instead)
         for t in range(prompt_len):
             logits, cache = serve_step(
                 params, cache, {"token": batch_prompts[:, t : t + 1]},
@@ -102,12 +115,9 @@ def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
         jax.random.PRNGKey(seed + 1),
         (num_requests, cfg.img_size, cfg.img_size, cfg.in_channels))
 
-    # warm both batch shapes (full slot + ragged tail) so the reported
-    # throughput is steady-state inference, not trace+compile time
-    warm_sizes = {min(slots, num_requests)}
-    if num_requests % slots:
-        warm_sizes.add(num_requests % slots)
-    for b in warm_sizes:
+    # warm so the reported throughput is steady-state inference, not
+    # trace+compile time
+    for b in _warm_sizes(slots, num_requests):
         jax.block_until_ready(step(plan.params, imgs[:b]))
 
     done, t0 = [], time.perf_counter()

@@ -23,9 +23,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
-import time
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

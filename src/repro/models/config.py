@@ -8,7 +8,7 @@ Configs for the 10 assigned architectures live in ``repro.configs``.
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

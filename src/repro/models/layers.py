@@ -14,7 +14,6 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 # ---------------------------------------------------------------------------

@@ -7,8 +7,7 @@ These are the functions the launcher jits.  Each step is a pure function of
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -23,8 +23,6 @@ weight read for all T); only the LIF chains see the unfolded T axis.
 
 from __future__ import annotations
 
-import functools
-import math
 
 import jax
 import jax.numpy as jnp

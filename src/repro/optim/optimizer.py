@@ -9,7 +9,6 @@ decay; the LR schedule is linear-warmup + cosine decay.
 
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Any, Callable
 

@@ -4,6 +4,6 @@ import os
 # placeholder devices (and does so in its own process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
-import jax
+import jax  # noqa: E402  (JAX_PLATFORMS must be set before importing jax)
 
 jax.config.update("jax_enable_x64", False)

@@ -87,7 +87,7 @@ def test_qk_norm_and_bias_paths():
     for arch in ("qwen3-8b_smoke", "qwen1.5-4b_smoke"):
         cfg = get_config(arch)
         params = T.init_lm(KEY, cfg)
-        kinds = T.layer_kinds(cfg)
+        T.layer_kinds(cfg)
         attn = jax.tree_util.tree_map(lambda x: x[0], params["layers"])["attn"]
         if cfg.qk_norm:
             assert "q_norm" in attn

@@ -8,7 +8,6 @@ from pathlib import Path
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import PartitionSpec as P
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
 
@@ -31,7 +30,6 @@ def test_collective_parser():
 
 def test_lower_on_host_mesh():
     """The full build_cell path lowers on a 1-device mesh (no 512-dev fork)."""
-    from repro.distributed.sharding import make_rules, use_rules
     from repro.models import lm, transformer as T
     from repro.models.config import ShapeCell
 

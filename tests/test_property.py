@@ -8,7 +8,7 @@ import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from hypothesis import given
 
 from repro.core.iand import iand, is_binary
 from repro.core.lif import lif_parallel, lif_serial

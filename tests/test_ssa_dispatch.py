@@ -1,0 +1,288 @@
+"""SSA backend-dispatch suite (ISSUE 3): attention rides the plan's kernels.
+
+Covers the dispatch-gap fix and the packed-operand SSA kernel:
+  * ``packed_ssa_op`` bit-exact vs the dense oracle for T in {1, 8, 32, 40}
+    (multi-word trains) and at a ragged token count,
+  * ``ssa_op`` at a ragged N (65): the query block is padded to sublane
+    alignment instead of launching unaligned,
+  * engine plans route attention through ``backend.ssa_apply`` /
+    ``ssa_apply_packed`` (regression: the executor used to call the jnp
+    einsum directly, leaving the Pallas kernel dead code),
+  * plan logits agree across jnp / pallas / +packed backends on the Table-I
+    head shapes and for both ``attn_ordering`` values,
+  * under ``Backend.closes_ssa_boundary`` nothing in the deploy path ever
+    unpacks a spike train (tokenizer-to-head packed),
+  * traffic accounting flips the conservative SSA-dense column exactly when
+    the backend closes the boundary,
+  * text ``serve()`` regression: output matches a full-forward greedy
+    reference after dropping the dead prefill compile.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import packing
+from repro.core import spikformer as sf
+from repro.engine import analysis
+from repro.kernels.spiking_attention.ops import packed_ssa_op, ssa_op
+from repro.kernels.spiking_attention.ref import ssa_ref
+
+KEY = jax.random.PRNGKey(0)
+
+# forced-on kernel routes (the ``None`` auto keeps kernels off in interpret
+# mode off-TPU, which would route everything to the oracle and test nothing)
+PALLAS_KERNEL = engine.Backend("pallas", matmul_kernel=True)
+PALLAS_PACKED_KERNEL = engine.Backend("pallas", matmul_kernel=True, packed=True)
+
+
+def _spikes(key, shape):
+    return (jax.random.uniform(key, shape) > 0.5).astype(jnp.float32)
+
+
+def _fold(x):
+    t, b, h, n, dh = x.shape
+    return x.reshape(t * b * h, n, dh)
+
+
+def _tiny(**kw):
+    return sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=4, **kw)
+
+
+@pytest.fixture(scope="module")
+def tiny_model():
+    cfg = _tiny()
+    params, state = sf.init(KEY, cfg)
+    img = jax.random.uniform(jax.random.PRNGKey(3), (2, 32, 32, 3))
+    return params, state, img
+
+
+# -- packed SSA kernel vs dense oracle ---------------------------------------
+
+@pytest.mark.parametrize("t", [1, 8, 32, 40], ids=lambda t: f"T{t}")
+def test_packed_ssa_op_bit_exact(t):
+    """Word-operand SSA == dense oracle, bit-for-bit, including multi-word
+    trains (T=40 -> 2 words) -- binary operands make SSA exact integer
+    arithmetic, so there is no tolerance to hide behind."""
+    b, h, n, dh = 2, 3, 64, 48
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    qw, kw, vw = (packing.pack(x).words for x in (q, k, v))
+    got = packed_ssa_op(qw, kw, vw, t=t)
+    want = ssa_ref(_fold(q), _fold(k), _fold(v)).reshape(t, b, h, n, dh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [65, 196], ids=["N65", "N196"])
+def test_ssa_op_ragged_token_count(n):
+    """Regression: N not a multiple of 8 used to launch an unaligned query
+    block; the token axis is now padded to sublane alignment and sliced."""
+    t, b, h, dh = 2, 1, 2, 24
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    got = ssa_op(q, k, v)
+    want = ssa_ref(_fold(q), _fold(k), _fold(v)).reshape(t, b, h, n, dh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_packed_ssa_op_ragged_token_count():
+    t, b, h, n, dh = 8, 1, 2, 65, 24
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    got = packed_ssa_op(*(packing.pack(x).words for x in (q, k, v)), t=t)
+    want = ssa_ref(_fold(q), _fold(k), _fold(v)).reshape(t, b, h, n, dh)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- backend ssa_apply routing ------------------------------------------------
+
+TABLE1_HEAD_SHAPES = [  # (H, Dh) of the Table-I configs, N = 64 tokens
+    pytest.param(12, 32, id="8-384"),
+    pytest.param(8, 64, id="8-512"),
+    pytest.param(12, 64, id="8-768"),
+]
+
+
+@pytest.mark.parametrize("h,dh", TABLE1_HEAD_SHAPES)
+def test_ssa_apply_identical_across_backends(h, dh):
+    """jnp oracle, Pallas kernel, and packed-operand kernel produce identical
+    drives on the Table-I head shapes (T=8, N=64)."""
+    t, b, n = 8, 2, 64
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    want = engine.ssa_apply(engine.JNP, q, k, v, scale=0.125)
+    kern = engine.ssa_apply(PALLAS_KERNEL, q, k, v, scale=0.125)
+    qp, kp, vp = (packing.pack(x) for x in (q, k, v))
+    packed = engine.ssa_apply_packed(
+        PALLAS_PACKED_KERNEL, qp, kp, vp, scale=0.125)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(want))
+
+
+def test_engine_routes_attention_through_ssa_kernel(tiny_model, monkeypatch):
+    """Regression for the dispatch gap: a pallas plan with the kernel route
+    on must actually invoke ``ssa_op`` (it used to call the jnp einsum
+    directly, leaving the kernel dead code outside tests/benches)."""
+    import repro.kernels.spiking_attention.ops as aops
+
+    params, state, img = tiny_model
+    cfg = _tiny()
+    calls = {"n": 0}
+    orig = aops.ssa_op
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(aops, "ssa_op", counting)
+    plan = engine.compile_plan(params, state, cfg, backend=PALLAS_KERNEL)
+    engine.apply(plan, img)
+    assert calls["n"] == cfg.num_layers  # one SSA per block
+
+    calls["n"] = 0
+    engine.apply(engine.compile_plan(params, state, cfg), img)  # jnp oracle
+    assert calls["n"] == 0
+
+
+def test_engine_routes_packed_attention_through_packed_kernel(tiny_model, monkeypatch):
+    import repro.kernels.spiking_attention.ops as aops
+
+    params, state, img = tiny_model
+    cfg = _tiny()
+    calls = {"n": 0}
+    orig = aops.packed_ssa_op
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(aops, "packed_ssa_op", counting)
+    plan = engine.compile_plan(params, state, cfg, backend=PALLAS_PACKED_KERNEL)
+    engine.apply(plan, img)
+    assert calls["n"] == cfg.num_layers
+
+
+def test_packed_plan_never_unpacks_under_closed_boundary(tiny_model, monkeypatch):
+    """Acceptance: with the packed SSA kernel closing the last dense hop,
+    NOTHING in the deploy path unpacks a spike train -- spikes stay packed
+    tokenizer-to-head (the head rate-decodes by popcount)."""
+    params, state, img = tiny_model
+    cfg = _tiny()
+    dense = engine.apply(engine.compile_plan(params, state, cfg), img)
+
+    def boom(*a, **kw):
+        raise AssertionError("packing.unpack called in the closed-boundary path")
+
+    monkeypatch.setattr(packing, "unpack", boom)
+    plan = engine.compile_plan(params, state, cfg, backend=PALLAS_PACKED_KERNEL)
+    got = engine.apply(plan, img)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(dense), atol=1e-4)
+
+
+# -- engine-level equivalence across backends and orderings -------------------
+
+@pytest.mark.parametrize("ordering", ["quadratic", "linear"])
+def test_engine_ssa_equivalence_across_backends(tiny_model, ordering):
+    """Plan logits agree across jnp / pallas(kernel) / +packed for both
+    attention orderings; the packed plan is bit-identical to its dense
+    counterpart on the same route."""
+    params, state, img = tiny_model
+    cfg = _tiny(attn_ordering=ordering)
+    base = engine.apply(engine.compile_plan(params, state, cfg), img)
+    jnp_packed = engine.apply(
+        engine.compile_plan(params, state, cfg, backend="jnp+packed"), img)
+    np.testing.assert_array_equal(np.asarray(jnp_packed), np.asarray(base))
+    kern = engine.apply(
+        engine.compile_plan(params, state, cfg, backend=PALLAS_KERNEL), img)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(base), atol=1e-4)
+    kern_packed = engine.apply(
+        engine.compile_plan(params, state, cfg, backend=PALLAS_PACKED_KERNEL),
+        img)
+    np.testing.assert_allclose(np.asarray(kern_packed), np.asarray(base),
+                               atol=1e-4)
+
+
+def test_train_graph_use_kernel_routes_ssa(tiny_model, monkeypatch):
+    """The legacy ``use_kernel`` flag now also selects the SSA kernel in the
+    training graph, with logits unchanged (the kernel's custom VJP keeps the
+    oracle backward)."""
+    import repro.kernels.spiking_attention.ops as aops
+
+    params, state, img = tiny_model
+    calls = {"n": 0}
+    orig = aops.ssa_op
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(aops, "ssa_op", counting)
+    cfg = _tiny(use_kernel=True)
+    want, _ = sf.apply(params, state, img, _tiny(), train=False)
+    got, _ = sf.apply(params, state, img, cfg, train=False)
+    assert calls["n"] == cfg.num_layers
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-4)
+
+
+# -- traffic accounting -------------------------------------------------------
+
+def test_spike_traffic_boundary_flip():
+    """The conservative SSA-dense column collapses onto the packed contract
+    exactly when the backend closes the boundary."""
+    cfg = sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=8)
+    open_tr = analysis.spike_traffic(cfg)
+    assert not open_tr["ssa_boundary_closed"]
+    assert open_tr["reduction_ssa_dense"] < open_tr["reduction"] == 8.0
+
+    closed = analysis.spike_traffic(cfg, backend=PALLAS_PACKED_KERNEL)
+    assert closed["ssa_boundary_closed"]
+    assert closed["packed_bytes_ssa_dense"] == closed["packed_bytes"]
+    assert closed["reduction_ssa_dense"] == closed["reduction"] == 8.0
+
+    # backends that unpack at the attention op boundary stay conservative
+    for be in ("jnp+packed", engine.PALLAS):
+        tr = analysis.spike_traffic(cfg, backend=be)
+        assert not tr["ssa_boundary_closed"]
+        assert tr["reduction_ssa_dense"] == open_tr["reduction_ssa_dense"]
+
+    # the linear ordering never rides the quadratic kernel: boundary open
+    lin = analysis.spike_traffic(
+        sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=8,
+                            attn_ordering="linear"),
+        backend=PALLAS_PACKED_KERNEL)
+    assert not lin["ssa_boundary_closed"]
+
+
+def test_spike_traffic_closed_t32():
+    cfg = sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=32)
+    closed = analysis.spike_traffic(cfg, backend=PALLAS_PACKED_KERNEL)
+    assert closed["reduction_ssa_dense"] == closed["reduction"] == 32.0
+
+
+# -- text serve(): dead-prefill removal regression ----------------------------
+
+def test_serve_text_matches_full_forward_greedy():
+    """``serve()`` output is unchanged by dropping the dead prefill: every
+    generated token matches a teacher-forced full-forward greedy decode
+    (also exercises the ragged final slot batch, which is now warmed)."""
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.launch.serve import serve
+    from repro.models import lm, transformer as T
+
+    n_req, p_len, max_new = 3, 8, 4
+    done = serve("llama3.2-1b_smoke", num_requests=n_req, prompt_len=p_len,
+                 max_new=max_new, slots=2, verbose=False)
+    assert len(done) == n_req
+
+    cfg = lm.get_config("llama3.2-1b_smoke")
+    params = T.init_lm(jax.random.PRNGKey(0), cfg)
+    dcfg = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=p_len,
+                      global_batch=n_req)
+    seq = jnp.asarray(make_batch(dcfg, 0)["tokens"])
+    outs = []
+    for _ in range(max_new):
+        logits, _, _ = T.forward(params, {"tokens": seq}, cfg)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        outs.append(tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+    ref = np.asarray(jnp.stack(outs, axis=1))
+    got = np.stack([gen for _, gen in sorted(done)])
+    np.testing.assert_array_equal(got, ref)

@@ -127,7 +127,6 @@ def test_checkpoint_keep_k_gc(tmp_path):
 
 def test_checkpoint_elastic_remesh(tmp_path):
     """Save on a (2,) mesh layout, restore onto a different sharding."""
-    devs = jax.devices()
     mesh1 = jax.make_mesh((1,), ("data",))
     x = jax.device_put(jnp.arange(8.0), NamedSharding(mesh1, P("data")))
     ckpt.save(tmp_path, 0, {"x": x})
@@ -191,10 +190,7 @@ def test_rules_and_specs():
 
 
 def test_sanitize_spec():
-    import os
     from repro.launch.dryrun import sanitize_spec
-
-    mesh = jax.make_mesh((1,), ("data",))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}

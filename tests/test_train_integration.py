@@ -2,9 +2,7 @@
 checkpoint/restart is exact, grad compression trains, serving generates."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.launch.serve import serve
 from repro.launch.train import train
