@@ -1,0 +1,144 @@
+"""Spiking-LM deploy-plan benchmark: tokens/s + activation bytes, dense vs
+packed (the LM rows of ``BENCH_engine.json``).
+
+The LM counterpart of ``benchmarks/packed_traffic.py``: a smoke-scale spiking
+LM is folded into deploy plans (RMSNorm gains into the GEMM weights, embed
+norm into the table, causal SSA on the plan's backend) and executed dense vs
+bit-packed -- the two plans must produce IDENTICAL logits -- while the
+inter-layer spike traffic is priced analytically at the measured sequence
+length and, analytically only, at the 500k-token decode length that motivates
+the chunked-linear ordering.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+from repro.engine import analysis
+from repro.models import spiking_lm as slm
+from repro.models.lm import get_config
+
+BATCH, SEQ = 4, 64
+LONG_SEQ = 524_288            # the long_500k decode cell (analytic pricing)
+
+# the deploy backend that closes the SSA boundary (quadratic ordering); the
+# chunked-linear ordering stays open -- its packed operand path is a ROADMAP
+# item
+CLOSED_BACKEND = engine.Backend("pallas", matmul_kernel=True, packed=True)
+
+
+def _cfg(t: int):
+    return get_config("llama3.2-1b_smoke").replace(
+        spiking=True, spike_t=t, num_heads=4, head_dim=None)
+
+
+def _wall(fn, *args, iters=3):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return np.asarray(out), (time.perf_counter() - t0) / iters
+
+
+def analytic_rows(t: int) -> list[dict]:
+    cfg = _cfg(t)
+    rows = []
+    for name, seq, ordering in (
+            (f"spiking-lm-smoke@S{SEQ}", SEQ, "quadratic"),
+            ("spiking-lm-smoke@S500k", LONG_SEQ, "linear")):
+        tr = analysis.lm_spike_traffic(cfg, seq_len=seq, ordering=ordering,
+                                       backend=CLOSED_BACKEND)
+        tr_open = analysis.lm_spike_traffic(cfg, seq_len=seq,
+                                            ordering=ordering)
+        rows.append({
+            "config": name, "t": t, "seq_len": seq, "ordering": ordering,
+            "dense_bytes": tr["dense_bytes"],
+            "packed_bytes": tr["packed_bytes"],
+            "reduction": tr["reduction"],
+            "ssa_boundary_closed": tr["ssa_boundary_closed"],
+            "reduction_ssa_dense": tr["reduction_ssa_dense"],
+            "reduction_ssa_open": tr_open["reduction_ssa_dense"],
+        })
+    return rows
+
+
+def measured_small(t: int = 8) -> dict:
+    cfg = _cfg(t)
+    params = slm.init_spiking_lm(jax.random.PRNGKey(0), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                                cfg.vocab_size)
+
+    dense_plan = engine.compile_plan(params, None, cfg, backend="jnp")
+    packed_plan = engine.compile_plan(params, None, cfg, backend="jnp+packed")
+    dense_out, dense_s = _wall(jax.jit(engine.make_apply_fn(dense_plan)),
+                               dense_plan.params, tokens)
+    packed_out, packed_s = _wall(jax.jit(engine.make_apply_fn(packed_plan)),
+                                 packed_plan.params, tokens)
+    np.testing.assert_array_equal(packed_out, dense_out)  # identical logits
+
+    oracle = np.asarray(slm.forward(params, {"tokens": jnp.asarray(tokens)},
+                                    cfg))
+    np.testing.assert_array_equal(dense_out, oracle)      # plan == oracle
+
+    tr = analysis.lm_spike_traffic(cfg, seq_len=SEQ, batch=BATCH,
+                                   backend=CLOSED_BACKEND)
+    tr_open = analysis.lm_spike_traffic(cfg, seq_len=SEQ, batch=BATCH,
+                                        backend="jnp+packed")
+    return {
+        "config": "spiking-lm-smoke", "t": t, "batch": BATCH, "seq_len": SEQ,
+        "dense_wall_s": dense_s, "packed_wall_s": packed_s,
+        "dense_tokens_per_s": BATCH * SEQ / dense_s,
+        "packed_tokens_per_s": BATCH * SEQ / packed_s,
+        "dense_bytes": tr["dense_bytes"],
+        "packed_bytes": tr["packed_bytes"],
+        "reduction": tr["reduction"],
+        "ssa_boundary_closed": tr["ssa_boundary_closed"],
+        "reduction_ssa_dense": tr["reduction_ssa_dense"],
+        "reduction_ssa_open": tr_open["reduction_ssa_dense"],
+    }
+
+
+def main():
+    rows8 = analytic_rows(t=8)
+    rows32 = analytic_rows(t=32)
+    measured = measured_small(t=8)
+
+    print("lm_plan: spiking-LM deploy plan -- inter-layer spike bytes per "
+          "sequence, dense f32 vs bit-packed uint32 words ('ssa closed' "
+          "prices q/k/v under the packed Pallas backend; the chunked-linear "
+          "500k rows stay open: packed linear-ordering operands are a "
+          "ROADMAP item)")
+    print(f"{'config':24s} {'T':>3s} {'order':>6s} {'dense MB':>10s} "
+          f"{'packed MB':>10s} {'reduction':>10s} {'ssa col':>9s}")
+    for row in rows8 + rows32:
+        print(f"{row['config']:24s} {row['t']:3d} {row['ordering'][:6]:>6s} "
+              f"{row['dense_bytes']/1e6:10.2f} "
+              f"{row['packed_bytes']/1e6:10.2f} {row['reduction']:9.1f}x "
+              f"{row['reduction_ssa_dense']:8.1f}x")
+    assert all(r["reduction"] >= 8.0 for r in rows8)
+    assert all(r["reduction"] >= 32.0 for r in rows32)
+    quad = [r for r in rows8 + rows32 if r["ordering"] == "quadratic"]
+    assert all(r["reduction_ssa_dense"] == r["reduction"] for r in quad)
+
+    m = measured
+    print(f"\nexecuted (jnp backend, {m['config']}, T={m['t']}, batch "
+          f"{m['batch']}, S={m['seq_len']}; packed == dense == oracle "
+          f"logits, bit-for-bit):")
+    print(f"  dense : {m['dense_wall_s']*1e3:8.1f} ms  "
+          f"{m['dense_tokens_per_s']:10.0f} tokens/s  "
+          f"{m['dense_bytes']/1e6:8.3f} MB spikes")
+    print(f"  packed: {m['packed_wall_s']*1e3:8.1f} ms  "
+          f"{m['packed_tokens_per_s']:10.0f} tokens/s  "
+          f"{m['packed_bytes']/1e6:8.3f} MB spikes "
+          f"({m['reduction']:.1f}x fewer inter-layer bytes)")
+    return {"lm_t8": rows8, "lm_t32": rows32, "measured": measured}
+
+
+if __name__ == "__main__":
+    main()

@@ -5,6 +5,8 @@ each benchmark's own detailed report.
 
   engine  -- deploy plan (BN folded, IAND fused) vs naive eval graph
   packed  -- bit-packed spike datapath: inter-layer bytes + wall clock
+  lm      -- spiking-LM deploy plan: tokens/s + activation bytes, dense vs
+             packed (RMSNorm folded, backend-dispatched causal SSA)
   table1  -- IAND vs ADD residual training proxy (paper Table I)
   table2  -- serial vs parallel tick-batching weight traffic (Table II /
              the -43.2% weight-access claim)
@@ -33,7 +35,7 @@ def _run(name, fn):
     return out
 
 
-def write_bench_json(engine_result, packed_result) -> None:
+def write_bench_json(engine_result, packed_result, lm_result=None) -> None:
     """Persist the engine perf trajectory machine-readably: per-config
     tokens/s and inter-layer activation bytes, tracked across PRs.
 
@@ -83,13 +85,44 @@ def write_bench_json(engine_result, packed_result) -> None:
             "hlo_bytes_fused": engine_result["fused"]["bytes"],
             "hlo_bytes_naive": engine_result["naive"]["bytes"],
         }
+    if lm_result is not None:
+        # LM deploy-plan rows (benchmarks/lm_plan.py): analytic traffic at
+        # the measured and 500k-token lengths per T, plus the measured
+        # tokens/s row -- same column names as the vision rows
+        for table, suffix in (("lm_t8", ""), ("lm_t32", "@T32")):
+            for row in lm_result.get(table, ()):
+                configs[f"{row['config']}{suffix}"] = {
+                    "t": row["t"],
+                    "seq_len": row["seq_len"],
+                    "attn_ordering": row["ordering"],
+                    "activation_bytes_dense": row["dense_bytes"],
+                    "activation_bytes_packed": row["packed_bytes"],
+                    "packed_reduction": row["reduction"],
+                    "ssa_boundary_closed": row["ssa_boundary_closed"],
+                    "packed_reduction_ssa_dense": row["reduction_ssa_dense"],
+                    "packed_reduction_ssa_open": row["reduction_ssa_open"],
+                }
+        lm = lm_result["measured"]
+        configs[lm["config"]] = {
+            "t": lm["t"],
+            "batch": lm["batch"],
+            "seq_len": lm["seq_len"],
+            "tokens_per_s_dense": lm["dense_tokens_per_s"],
+            "tokens_per_s_packed": lm["packed_tokens_per_s"],
+            "activation_bytes_dense": lm["dense_bytes"],
+            "activation_bytes_packed": lm["packed_bytes"],
+            "packed_reduction": lm["reduction"],
+            "ssa_boundary_closed": lm["ssa_boundary_closed"],
+            "packed_reduction_ssa_dense": lm["reduction_ssa_dense"],
+            "packed_reduction_ssa_open": lm["reduction_ssa_open"],
+        }
     BENCH_JSON.write_text(json.dumps({"configs": configs}, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
 
 
 def main() -> None:
     from benchmarks import (engine_fused_vs_naive, int8_decode, kernel_bench,
-                            linear_attention_scaling, packed_traffic,
+                            linear_attention_scaling, lm_plan, packed_traffic,
                             perf_spiking, table1_iand_vs_add,
                             table2_weight_traffic)
 
@@ -97,7 +130,9 @@ def main() -> None:
     engine_result = _run("engine_fused_vs_naive", engine_fused_vs_naive.main)
     print()
     packed_result = _run("packed_traffic", packed_traffic.main)
-    write_bench_json(engine_result, packed_result)
+    print()
+    lm_result = _run("lm_plan", lm_plan.main)
+    write_bench_json(engine_result, packed_result, lm_result)
     print()
     _run("table2_weight_traffic", table2_weight_traffic.main)
     print()

@@ -126,6 +126,56 @@ def fold_linear_bn(lin_p, bn_p, bn_state, eps: float = 1e-5):
     return {"w": w, "b": b}
 
 
+def fold_linear_rmsnorm(lin_p, norm_p):
+    """Deploy-time Linear+RMSNorm folding (the LM counterpart of
+    :func:`fold_linear_bn`).
+
+    RMSNorm splits into a data-dependent normalizer and a per-feature affine
+    gain: ``rmsnorm(y; g) = y * rsqrt(mean(y^2) + eps) * g``.  The gain is the
+    only parameterised part, and it folds into the preceding linear exactly:
+
+        y' = x @ (w * g)            (one pre-scaled weight read)
+        mean(y^2) = sum_j y'_j^2 / (d * g_j^2)
+
+    so the folded unit carries ``w' = w * g`` plus the precomputed coefficient
+    vector ``nrm = 1 / (d * g^2)``; the deploy graph applies one GEMM and a
+    gain-free normalizer epilogue (:func:`normed_linear_apply`) -- the
+    standalone RMSNorm layer disappears.  Unlike BN, the normalizer itself is
+    data-dependent and irreducible: what folding removes is the separate
+    scale-parameter pass, not the rsqrt.
+
+    Exact in real arithmetic for any nonzero gain; the ~1-ulp FP reassociation
+    is absorbed by the downstream LIF re-binarisation (the engine test suite
+    pins the deploy plan bit-exact against the train graph).
+    """
+    g = norm_p["scale"]
+    d = lin_p["w"].shape[-1]
+    folded = {"w": lin_p["w"] * g, "nrm": 1.0 / (d * jnp.square(g))}
+    if "b" in lin_p:
+        folded["b"] = lin_p["b"] * g
+    return folded
+
+
+def normed_linear_apply(p, x, *, eps: float = 1e-6):
+    """Folded Linear+RMSNorm unit: GEMM on pre-scaled weights, then the
+    gain-free normalizer epilogue (see :func:`fold_linear_rmsnorm`)."""
+    y = jnp.dot(x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return rms_epilogue(p["nrm"], y, eps=eps)
+
+
+def rms_epilogue(nrm, y, *, eps: float = 1e-6):
+    """Gain-free dynamic normalizer of a folded Linear+RMSNorm unit:
+    ``y * rsqrt(sum(y^2 * nrm) + eps)`` with ``nrm = 1/(d * g^2)`` precomputed
+    at fold time -- equal to ``rsqrt(mean(y_unscaled^2) + eps)``."""
+    dtype = y.dtype
+    y32 = y.astype(jnp.float32)
+    var = jnp.sum(jnp.square(y32) * nrm.astype(jnp.float32), axis=-1,
+                  keepdims=True)
+    return (y32 * jax.lax.rsqrt(var + eps)).astype(dtype)
+
+
 # -- tick-batch reshaping helpers ---------------------------------------------
 
 def fold_time(x):

@@ -14,6 +14,11 @@ Two algebraically identical orderings:
   to 500k-token sequences with an O(d^2) decode state, which the paper's ASIC
   (vision, N=64) never needed.
 
+``causal=True`` is the LM adaptation (DESIGN.md S8): the spike score matrix is
+masked to the lower triangle -- with no softmax, masking is just writing 0.
+The linear ordering stays causal-exact via a chunked running K^T V state (the
+scan in :func:`ssa`), which is also the O(d^2)-state 500k-token decode path.
+
 All T time steps are tick-batched: T folds into the contraction batch, so the
 MXU reads each weight/score tile once for all time steps.
 """
@@ -24,6 +29,52 @@ import jax
 import jax.numpy as jnp
 
 
+def _causal_linear(q, k, v, *, chunk: int):
+    """Chunked running-state causal linear ordering: O(S d^2), exactly equal
+    to the masked quadratic product (no softmax, so chunking is exact).
+
+    Ragged lengths are zero-padded up to the chunk multiple -- exact, not
+    approximate: padded keys/values are all-zero spikes (their products
+    contribute 0.0 to every sum, bit-for-bit), and the padded query rows are
+    sliced away.  Greedy decode grows the sequence one token at a time, so
+    this is the path every long decode rides."""
+    s = q.shape[3]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        widths = [(0, 0)] * q.ndim
+        widths[3] = (0, pad)
+        q, k, v = (jnp.pad(x, widths) for x in (q, k, v))
+    out = _causal_linear_aligned(q, k, v, chunk=chunk)
+    return out[:, :, :, :s] if pad else out
+
+
+def _causal_linear_aligned(q, k, v, *, chunk: int):
+    s = q.shape[3]
+    nc = s // chunk
+    qc = q.reshape(q.shape[:3] + (nc, chunk, q.shape[-1]))
+    kc = k.reshape(k.shape[:3] + (nc, chunk, k.shape[-1]))
+    vc = v.reshape(v.shape[:3] + (nc, chunk, v.shape[-1]))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        q_i, k_i, v_i = inp
+        intra = jnp.einsum("tbhnd,tbhmd->tbhnm", q_i, k_i)
+        intra = jnp.where(mask, intra, 0.0)
+        y = jnp.einsum("tbhnm,tbhmd->tbhnd", intra, v_i)
+        y = y + jnp.einsum("tbhnd,tbhde->tbhne", q_i, state)
+        state = state + jnp.einsum("tbhmd,tbhme->tbhde", k_i, v_i)
+        return state, y
+
+    dh = q.shape[-1]
+    state0 = jnp.zeros(q.shape[:3] + (dh, dh), q.dtype)
+    _, ys = jax.lax.scan(
+        step, state0,
+        (qc.transpose(3, 0, 1, 2, 4, 5), kc.transpose(3, 0, 1, 2, 4, 5),
+         vc.transpose(3, 0, 1, 2, 4, 5)))
+    return ys.transpose(1, 2, 3, 0, 4, 5).reshape(q.shape)
+
+
 def ssa(
     q: jax.Array,
     k: jax.Array,
@@ -31,18 +82,31 @@ def ssa(
     *,
     scale: float = 0.125,
     ordering: str = "quadratic",
+    causal: bool = False,
+    chunk: int = 512,
 ) -> jax.Array:
     """Softmax-free spiking attention.
 
     q, k, v: (T, B, H, N, Dh) binary spikes. Returns (T, B, H, N, Dh) real-valued
     attention drive (fed to BN+LIF by the caller to re-spike).
+
+    ``causal`` masks the score matrix to the lower triangle (LM decode order);
+    in the linear ordering causality runs as a chunked K^T V state scan
+    (``chunk`` tokens per step) with the same exact result.
     """
     if ordering == "quadratic":
         scores = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
+        if causal:
+            s = q.shape[3]
+            mask = jnp.tril(jnp.ones((s, s), bool))
+            scores = jnp.where(mask, scores, 0.0)   # no softmax: mask -> 0
         out = jnp.einsum("tbhnm,tbhmd->tbhnd", scores, v)
     elif ordering == "linear":
-        kv = jnp.einsum("tbhmd,tbhme->tbhde", k, v)
-        out = jnp.einsum("tbhnd,tbhde->tbhne", q, kv)
+        if causal:
+            out = _causal_linear(q, k, v, chunk=chunk)
+        else:
+            kv = jnp.einsum("tbhmd,tbhme->tbhde", k, v)
+            out = jnp.einsum("tbhnd,tbhde->tbhne", q, kv)
     else:
         raise ValueError(f"unknown ordering: {ordering}")
     return out * scale

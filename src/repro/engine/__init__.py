@@ -27,15 +27,18 @@ from repro.engine.backend import (
 )
 from repro.engine.execute import apply, make_apply_fn
 from repro.engine.layout import (
-    ProjUnit, SpikeEdge, TokStage, block_layout, spike_edges, tokenizer_layout,
+    ProjUnit, SpikeEdge, TokStage, block_layout, lm_block_layout,
+    lm_spike_edges, spike_edges, tokenizer_layout,
 )
-from repro.engine.plan import DeployPlan, PlanMeta, compile_plan, plan_stats
+from repro.engine.plan import (
+    DeployPlan, LMDeployCfg, PlanMeta, compile_plan, plan_stats,
+)
 
 __all__ = [
     "JNP", "JNP_PACKED", "PALLAS", "PALLAS_PACKED", "Backend",
     "resolve_backend", "ssa_apply", "ssa_apply_packed",
     "apply", "make_apply_fn",
-    "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "spike_edges",
-    "tokenizer_layout",
-    "DeployPlan", "PlanMeta", "compile_plan", "plan_stats",
+    "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "lm_block_layout",
+    "lm_spike_edges", "spike_edges", "tokenizer_layout",
+    "DeployPlan", "LMDeployCfg", "PlanMeta", "compile_plan", "plan_stats",
 ]

@@ -16,8 +16,11 @@ import jax
 from jax import core as jcore
 
 
-_BN_PRIMS = ("rsqrt",)  # eval-mode BN lowers to rsqrt(var+eps); nothing else
-                        # in the spiking model uses rsqrt
+_BN_PRIMS = ("rsqrt",)  # eval-mode BN lowers to rsqrt(var+eps); VISION-ONLY
+                        # signature: nothing else in the vision model uses
+                        # rsqrt, but LM graphs do (RMSNorm / the folded
+                        # units' dynamic normalizer) -- LM plans are checked
+                        # with rmsnorm_op_count, never bn_op_count
 
 
 def _walk(jaxpr, counts: Counter):
@@ -45,10 +48,40 @@ def op_histogram(fn, *args, **kwargs) -> Counter:
 
 
 def bn_op_count(fn, *args, **kwargs) -> int:
-    """Number of BatchNorm-signature ops in ``fn``'s jaxpr."""
+    """Number of BatchNorm-signature ops in ``fn``'s jaxpr (vision graphs
+    only -- LM graphs legitimately use rsqrt in their dynamic normalizers;
+    count those with :func:`rmsnorm_op_count` instead)."""
     hist = op_histogram(fn, *args, **kwargs)
     return sum(hist[p] for p in _BN_PRIMS) + sum(
         n for name, n in hist.items() if name.startswith("batch_norm"))
+
+
+def _walk_named(jaxpr, name: str) -> int:
+    count = 0
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "pjit" and eqn.params.get("name") == name:
+            count += 1
+        for v in eqn.params.values():
+            items = v if isinstance(v, (tuple, list)) else (v,)
+            for item in items:
+                if isinstance(item, jcore.ClosedJaxpr):
+                    count += _walk_named(item.jaxpr, name)
+                elif isinstance(item, jcore.Jaxpr):
+                    count += _walk_named(item, name)
+    return count
+
+
+def rmsnorm_op_count(fn, *args, **kwargs) -> int:
+    """Number of standalone RMSNorm applications in ``fn``'s jaxpr.
+
+    ``models.layers.rmsnorm_apply`` is jitted, so every application is a
+    named ``pjit`` node -- the RMSNorm counterpart of :func:`bn_op_count`
+    (RMSNorm's rsqrt cannot be the signature here: the folded units keep a
+    gain-free data-dependent normalizer, which also uses rsqrt; what folding
+    removes is the parameterised norm LAYER, counted by name).
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _walk_named(closed.jaxpr, "rmsnorm_apply")
 
 
 def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
@@ -71,18 +104,36 @@ def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
     Both are what ``benchmarks/packed_traffic.py`` reports against the
     Table-I configs.
     """
-    from repro.core import packing
-    from repro.engine.backend import resolve
     from repro.engine.layout import spike_edges
 
-    boundary_closed = False
-    if backend is not None:
-        be = resolve(backend)
-        boundary_closed = (be.closes_ssa_boundary
-                           and cfg.attn_ordering == "quadratic")
+    boundary_closed = _boundary_closed(backend, cfg.attn_ordering)
+    return _price_edges(spike_edges(cfg, img_size=img_size), cfg.t,
+                        batch=batch, boundary_closed=boundary_closed)
 
-    edges = spike_edges(cfg, img_size=img_size)
-    t = cfg.t
+
+def lm_spike_traffic(cfg, *, seq_len: int, batch: int = 1, backend=None,
+                     ordering: str = "quadratic") -> dict:
+    """Inter-layer spike-activation bytes of one spiking-LM forward pass at
+    ``seq_len`` tokens (``cfg`` is an ``ArchConfig``; same pricing and
+    SSA-boundary semantics as :func:`spike_traffic`)."""
+    from repro.engine.layout import lm_spike_edges
+
+    boundary_closed = _boundary_closed(backend, ordering)
+    return _price_edges(lm_spike_edges(cfg, seq_len=seq_len), cfg.spike_t,
+                        batch=batch, boundary_closed=boundary_closed)
+
+
+def _boundary_closed(backend, ordering: str) -> bool:
+    from repro.engine.backend import resolve
+
+    if backend is None:
+        return False
+    return resolve(backend).closes_ssa_boundary and ordering == "quadratic"
+
+
+def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool) -> dict:
+    from repro.core import packing
+
     per_edge = [{
         "name": e.name,
         "elems": e.elems * batch,

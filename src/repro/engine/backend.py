@@ -124,7 +124,8 @@ def linear_apply(backend: Backend, p, x2d: jax.Array) -> jax.Array:
 
 
 def ssa_apply(backend: Backend, q: jax.Array, k: jax.Array, v: jax.Array, *,
-              scale: float, ordering: str = "quadratic") -> jax.Array:
+              scale: float, ordering: str = "quadratic",
+              causal: bool = False) -> jax.Array:
     """Spiking self-attention on this backend. q/k/v: (T, B, H, N, Dh) binary
     spikes -> (T, B, H, N, Dh) f32 drive (the caller re-spikes through LIF).
 
@@ -133,20 +134,26 @@ def ssa_apply(backend: Backend, q: jax.Array, k: jax.Array, v: jax.Array, *,
     quadratic N^2 dataflow), the jnp einsum oracle otherwise.  The linear
     ordering Q(K^T V) always takes the oracle: it is the O(d^2) long-sequence
     path whose whole point is avoiding the N x N score tile.
+
+    ``causal`` (the LM decode order) masks the spike score matrix to the
+    lower triangle -- in-kernel on the Pallas route, as the chunked running
+    K^T V scan in the linear ordering.
     """
     if (ordering == "quadratic" and backend.kind == "pallas"
             and backend.use_matmul_kernel):
         from repro.kernels.spiking_attention.ops import ssa_op
 
-        return ssa_op(q, k, v, scale=scale, interpret=backend.interpret)
+        return ssa_op(q, k, v, scale=scale, interpret=backend.interpret,
+                      causal=causal)
     from repro.core.spiking_attention import ssa
 
-    return ssa(q, k, v, scale=scale, ordering=ordering)
+    return ssa(q, k, v, scale=scale, ordering=ordering, causal=causal)
 
 
 def ssa_apply_packed(backend: Backend, qp: packing.PackedSpikes,
                      kp: packing.PackedSpikes, vp: packing.PackedSpikes, *,
-                     scale: float, ordering: str = "quadratic") -> jax.Array:
+                     scale: float, ordering: str = "quadratic",
+                     causal: bool = False) -> jax.Array:
     """Spiking self-attention on packed q/k/v trains (words (W, B, H, N, Dh))
     -> dense drive (T, B, H, N, Dh).
 
@@ -160,9 +167,33 @@ def ssa_apply_packed(backend: Backend, qp: packing.PackedSpikes,
         from repro.kernels.spiking_attention.ops import packed_ssa_op
 
         return packed_ssa_op(qp.words, kp.words, vp.words, t=qp.t,
-                             scale=scale, interpret=backend.interpret)
+                             scale=scale, interpret=backend.interpret,
+                             causal=causal)
     q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
-    return ssa_apply(backend, q, k, v, scale=scale, ordering=ordering)
+    return ssa_apply(backend, q, k, v, scale=scale, ordering=ordering,
+                     causal=causal)
+
+
+def normed_linear_apply(backend: Backend, p, x2d: jax.Array, *,
+                        eps: float) -> jax.Array:
+    """Folded Linear+RMSNorm unit (``fold_linear_rmsnorm``) on tick-folded
+    2-D spikes: the GEMM rides the backend's spike-matmul route exactly like
+    :func:`linear_apply`; the gain-free normalizer runs as the epilogue."""
+    from repro.core import nn as cnn
+
+    return cnn.rms_epilogue(p["nrm"], linear_apply(backend, p, x2d), eps=eps)
+
+
+def normed_linear_apply_packed(backend: Backend, p,
+                               xp: packing.PackedSpikes, *,
+                               eps: float) -> jax.Array:
+    """Folded Linear+RMSNorm on a packed spike train (W, ..., Din) -> dense
+    normalized drive (T, ..., Dout); GEMM routing as in
+    :func:`linear_apply_packed`."""
+    from repro.core import nn as cnn
+
+    return cnn.rms_epilogue(p["nrm"], linear_apply_packed(backend, p, xp),
+                            eps=eps)
 
 
 def conv3x3_apply(backend: Backend, p, x: jax.Array) -> jax.Array:

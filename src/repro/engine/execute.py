@@ -20,6 +20,13 @@ All compute -- linears, convs, and attention alike -- goes through
 ``repro.engine.backend``; the executor never calls a kernel or oracle
 directly, so the plan's backend fully decides the compute route.
 
+LM plans (``PlanMeta.family == "lm"``) walk the same structure with the LM
+specifics: folded Linear+RMSNorm units (GEMM on gain-folded weights + the
+gain-free normalizer epilogue), causal SSA, every residual join fused
+(all-spike IAND), a pre-normalized embedding table in place of the
+tokenizer, and the rate-decoded head whose inline normalization is the one
+irreducible norm of the plan.
+
 Executors are pure functions of (folded params, image); static plan metadata
 is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
 """
@@ -184,13 +191,118 @@ def _head_packed(meta: PlanMeta, head_params, xp: packing.PackedSpikes):
     return cnn.linear_apply(head_params, feats)
 
 
-def _execute(meta: PlanMeta, params, image):
+# -- spiking LM ---------------------------------------------------------------
+
+def _lm_unit(meta: PlanMeta, p, x):
+    """Tick-batched folded Linear+RMSNorm unit on (T, B, S, Din) spikes."""
+    t, b, s, _ = x.shape
+    y = B.normed_linear_apply(meta.backend, p, x.reshape(t * b * s, -1),
+                              eps=meta.cfg.norm_eps)
+    return y.reshape(t, b, s, -1)
+
+
+def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool):
+    """One spiking-LM decoder block in deploy form: x is (T, B, S, D) spikes
+    dense, a ``PackedSpikes`` (words (W, B, S, D)) when ``packed``.
+
+    ONE walker for both datapaths -- same unit walk as the vision block,
+    with causal SSA and every residual join fused (the LM is all-spike:
+    IAND only); ``packed`` only swaps the unit/split/SSA ops and makes the
+    LIF epilogues emit words, so the two plans cannot structurally diverge."""
+    cfg = meta.cfg
+    unit = _lm_unit_packed if packed else _lm_unit
+    split = split_heads_packed if packed else split_heads
+    ssa = B.ssa_apply_packed if packed else B.ssa_apply
+    acts: dict = {}
+    h = None
+    for u in meta.block_units:
+        if u.role == "qkv":
+            acts[u.name] = _lif(meta, unit(meta, bparams[u.name], x),
+                                pack_output=packed)
+            continue
+        if u.role == "attn_out":
+            attn = ssa(
+                meta.backend,
+                split(acts["q"], cfg.num_heads),
+                split(acts["k"], cfg.num_heads),
+                split(acts["v"], cfg.num_heads),
+                scale=cfg.attn_scale, ordering=cfg.attn_ordering, causal=True)
+            attn_sp = _lif(meta, merge_heads(attn), pack_output=packed)
+            drive = unit(meta, bparams[u.name], attn_sp)
+        elif u.role == "mlp_hidden":
+            h = _lif(meta, unit(meta, bparams[u.name], x), pack_output=packed)
+            continue
+        elif u.role == "mlp_out":
+            drive = unit(meta, bparams[u.name], h)
+        else:
+            raise ValueError(f"unknown unit role: {u.role}")
+        # AND-NOT inside the LIF epilogue (bitwise ``skip & ~s`` on words)
+        x = _lif(meta, drive, iand_skip=x, pack_output=packed)
+    return x
+
+
+def _lm_unit_packed(meta: PlanMeta, p, xp: packing.PackedSpikes):
+    """Packed-operand folded Linear+RMSNorm: words (W, B, S, Din) -> drive
+    (T, B, S, Dout)."""
+    return B.normed_linear_apply_packed(meta.backend, p, xp,
+                                        eps=meta.cfg.norm_eps)
+
+
+def _lm_head(meta: PlanMeta, params, rate):
+    """Rate (B, S, D) -> logits (B, S, V).
+
+    The head normalization is the one irreducible norm of the LM plan: its
+    input is the analog rate code (produced by the mean over T, not by a
+    linear), so there is no weight read to fold the gain into without
+    perturbing the logits bitwise.  It executes inline in the head epilogue
+    via ``rmsnorm_raw`` -- the same arithmetic the train graph's (jitted,
+    jaxpr-counted) ``rmsnorm_apply`` wraps."""
+    from repro.models.layers import rmsnorm_raw
+
+    normed = rmsnorm_raw(params["final_norm"], rate, eps=meta.cfg.norm_eps)
+    return normed @ params["head"]["w"].astype(normed.dtype)
+
+
+def _lm_embed_drive(meta: PlanMeta, embed_params, tokens):
+    """tokens (B, S) -> LIF drive (T, B, S, D) from the pre-normalized
+    embedding table (the embed RMSNorm was folded into the table rows at
+    plan-compile time -- no norm runs here)."""
+    emb = jnp.take(embed_params["table"], tokens, axis=0)
+    return jnp.broadcast_to(emb[None], (meta.cfg.t,) + emb.shape)
+
+
+def _lm_exec(meta: PlanMeta, params, tokens):
+    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens))
+    for bparams in params["blocks"]:
+        x = _lm_block_exec(meta, bparams, x, packed=False)
+    rate = x.mean(axis=0)                    # rate decoding over T
+    return _lm_head(meta, params, rate)
+
+
+def _lm_exec_packed(meta: PlanMeta, params, tokens):
+    xp = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
+              pack_output=True)
+    for bparams in params["blocks"]:
+        xp = _lm_block_exec(meta, bparams, xp, packed=True)
+    # rate decoding by popcount: counts are exact integers <= T, and T is a
+    # power of two on the supported configs, so counts/T == mean bit-for-bit
+    dtype = params["embed"]["table"].dtype
+    rate = packing.spike_counts(xp).astype(dtype) / jnp.asarray(xp.t, dtype)
+    return _lm_head(meta, params, rate)
+
+
+def _execute(meta: PlanMeta, params, batch):
+    if meta.family == "lm":
+        tokens = batch["tokens"] if isinstance(batch, dict) else batch
+        if meta.backend.packed:
+            return _lm_exec_packed(meta, params, tokens)
+        return _lm_exec(meta, params, tokens)
     if meta.backend.packed:
-        xp = _tokenizer_exec_packed(meta, params["tokenizer"], image)
+        xp = _tokenizer_exec_packed(meta, params["tokenizer"], batch)
         for bparams in params["blocks"]:
             xp = _block_exec_packed(meta, bparams, xp)
         return _head_packed(meta, params["head"], xp)
-    x = _tokenizer_exec(meta, params["tokenizer"], image)
+    x = _tokenizer_exec(meta, params["tokenizer"], batch)
     for bparams in params["blocks"]:
         x = _block_exec(meta, bparams, x)
     feats = x.mean(axis=(0, 2))              # rate decoding over (T, tokens)
@@ -198,11 +310,13 @@ def _execute(meta: PlanMeta, params, image):
 
 
 def make_apply_fn(plan: DeployPlan):
-    """Pure ``fn(params, image) -> logits`` with the plan's static metadata
-    closed over (jit-friendly: arrays stay arguments, not constants)."""
+    """Pure ``fn(params, batch) -> logits`` with the plan's static metadata
+    closed over (jit-friendly: arrays stay arguments, not constants).
+    ``batch`` is an image batch for vision plans, a (B, S) token array (or a
+    ``{"tokens": ...}`` dict) for LM plans."""
     return functools.partial(_execute, plan.meta)
 
 
-def apply(plan: DeployPlan, image) -> jax.Array:
-    """One-shot convenience: run the plan on a batch of images."""
-    return _execute(plan.meta, plan.params, image)
+def apply(plan: DeployPlan, batch) -> jax.Array:
+    """One-shot convenience: run the plan on a batch (images or tokens)."""
+    return _execute(plan.meta, plan.params, batch)

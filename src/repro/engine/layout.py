@@ -133,3 +133,39 @@ def block_layout(cfg) -> tuple[ProjUnit, ...]:
         ProjUnit("fc1", d, hidden, "mlp_hidden", False),
         ProjUnit("fc2", hidden, d, "mlp_out", fuse),
     )
+
+
+def lm_block_layout(cfg) -> tuple[ProjUnit, ...]:
+    """Unit list of one spiking-LM decoder block for an ``ArchConfig``-shaped
+    object (``d_model``/``d_ff`` attributes).
+
+    Structurally the same six Linear->norm->LIF units as the vision block --
+    the norm is RMSNorm instead of BatchNorm (folded by
+    ``fold_linear_rmsnorm`` rather than ``fold_linear_bn``) and the SSA
+    between ``qkv`` and ``attn_out`` is causal-masked.  The LM always uses
+    the IAND residual (spikes stay binary), so both joins fuse."""
+    d, f = cfg.d_model, cfg.d_ff
+    return (
+        ProjUnit("q", d, d, "qkv", False),
+        ProjUnit("k", d, d, "qkv", False),
+        ProjUnit("v", d, d, "qkv", False),
+        ProjUnit("proj", d, d, "attn_out", True),
+        ProjUnit("fc1", d, f, "mlp_hidden", False),
+        ProjUnit("fc2", f, d, "mlp_out", True),
+    )
+
+
+def lm_spike_edges(cfg, *, seq_len: int) -> tuple[SpikeEdge, ...]:
+    """Every inter-layer spike tensor of one spiking-LM forward pass at
+    ``seq_len`` tokens, in execution order (the LM analogue of
+    :func:`spike_edges`; elems counted per sequence per time step)."""
+    d = cfg.d_model
+    edges = [SpikeEdge("embed", seq_len * d)]
+    for i in range(cfg.num_layers):
+        for u in lm_block_layout(cfg):
+            if u.role == "attn_out":   # spikes of the causal SSA output
+                edges.append(SpikeEdge(f"block{i}.attn", seq_len * d))
+            edges.append(SpikeEdge(
+                f"block{i}.{u.name}", seq_len * u.d_out,
+                ssa_boundary=(u.role == "qkv")))
+    return tuple(edges)

@@ -1,15 +1,24 @@
 """Deploy-plan compiler: (params, state, cfg) -> the accelerator's view.
 
 ``compile_plan`` performs the paper's deploy-time transformations once, ahead
-of serving:
+of serving.  It covers two config families:
 
-* every Conv+BN pair of the tokenizer is folded into a single (w, b) via
-  ``fold_conv_bn`` -- the BN disappears from the graph entirely;
-* every Linear+BN pair of every block is folded via ``fold_linear_bn``;
-* the block layout records which LIFs fuse the AND-NOT residual into their
-  epilogue, so execution never runs a standalone IAND pass;
-* the backend (jnp oracle vs Pallas kernels, interpret vs compiled) is a plan
-  property, not a per-call-site flag.
+* vision (``SpikformerConfig``-shaped, anything with ``tokenizer_config``):
+  every Conv+BN pair of the tokenizer is folded into a single (w, b) via
+  ``fold_conv_bn``, every Linear+BN pair of every block via
+  ``fold_linear_bn`` -- the BN disappears from the graph entirely;
+* spiking LM (``ArchConfig`` with ``spiking=True``): every Linear+RMSNorm
+  unit is folded via ``fold_linear_rmsnorm`` (gain into the GEMM weights,
+  gain-free normalizer left as the unit epilogue), the embedding norm is
+  folded INTO the embedding table at compile time (rows are normalized
+  independently, so the whole table pre-normalizes exactly), and the SSA is
+  causal-masked with the plan-level ``ordering`` choosing quadratic
+  (QK^T)V vs chunked-linear Q(K^TV) dataflow.
+
+In both families the block layout records which LIFs fuse the AND-NOT
+residual into their epilogue (execution never runs a standalone IAND pass)
+and the backend (jnp oracle vs Pallas kernels, interpret vs compiled, packed
+spikes) is a plan property, not a per-call-site flag.
 
 The plan splits into hashable static metadata (:class:`PlanMeta`) and a plain
 pytree of folded arrays, so executors jit cleanly with the metadata closed
@@ -25,18 +34,86 @@ import jax
 
 from repro.core import nn as cnn
 from repro.engine.backend import Backend, resolve
-from repro.engine.layout import ProjUnit, TokStage, block_layout, tokenizer_layout
+from repro.engine.layout import (
+    ProjUnit, TokStage, block_layout, lm_block_layout, tokenizer_layout,
+)
+
+
+@dataclass(frozen=True)
+class LMDeployCfg:
+    """Deploy view of a spiking-LM ``ArchConfig``: exposes the attribute
+    names the executor shares with ``SpikformerConfig`` (``t``,
+    ``chain_len``, ``theta``, ...), plus the plan-level attention ordering.
+    The wrapped ``ArchConfig`` stays reachable as ``arch``."""
+
+    arch: Any                          # ArchConfig (frozen dataclass)
+    attn_ordering: str = "quadratic"   # "quadratic" | "linear" (chunked scan)
+
+    @property
+    def t(self) -> int:
+        return self.arch.spike_t
+
+    @property
+    def chain_len(self):
+        return self.arch.spike_chain_len
+
+    @property
+    def theta(self) -> float:
+        from repro.core.lif import THETA_DEFAULT
+
+        return THETA_DEFAULT
+
+    @property
+    def lam(self) -> float:
+        from repro.core.lif import LAM_DEFAULT
+
+        return LAM_DEFAULT
+
+    @property
+    def lif_schedule(self) -> str:
+        return "parallel"
+
+    @property
+    def attn_scale(self) -> float:
+        from repro.models.spiking_lm import ATTN_SCALE
+
+        return ATTN_SCALE
+
+    @property
+    def norm_eps(self) -> float:
+        return self.arch.norm_eps
+
+    @property
+    def num_heads(self) -> int:
+        return self.arch.num_heads
+
+    @property
+    def num_layers(self) -> int:
+        return self.arch.num_layers
+
+    @property
+    def d_model(self) -> int:
+        return self.arch.d_model
+
+    @property
+    def d_ff(self) -> int:
+        return self.arch.d_ff
+
+    @property
+    def residual(self) -> str:
+        return "iand"                  # the LM is all-spike by construction
 
 
 @dataclass(frozen=True)
 class PlanMeta:
     """Static (hashable) half of a deploy plan."""
 
-    cfg: Any                          # SpikformerConfig (frozen dataclass)
+    cfg: Any                          # SpikformerConfig | LMDeployCfg (frozen)
     backend: Backend
     tok_stages: tuple[TokStage, ...]
     block_units: tuple[ProjUnit, ...]
     num_layers: int
+    family: str = "vision"            # "vision" | "lm"
 
 
 @dataclass(frozen=True)
@@ -53,11 +130,21 @@ class DeployPlan:
         return self.meta.backend
 
 
-def compile_plan(params, state, cfg, *, backend="jnp") -> DeployPlan:
+def compile_plan(params, state, cfg, *, backend="jnp",
+                 ordering: str | None = None) -> DeployPlan:
     """Fold a trained (params, state, cfg) into a deploy plan.
 
     ``backend``: Backend | "jnp" | "pallas" | bool (legacy ``use_kernel``).
+    ``ordering`` selects the LM plan's causal-SSA dataflow ("quadratic" |
+    "linear"); vision plans take it from ``cfg.attn_ordering`` instead.
     """
+    if not hasattr(cfg, "tokenizer_config"):
+        return _compile_lm_plan(params, state, cfg, backend=backend,
+                                ordering=ordering or "quadratic")
+    if ordering is not None:
+        raise ValueError(
+            "ordering is a plan-compile choice only for LM configs; vision "
+            "plans read cfg.attn_ordering")
     be = resolve(backend)
     if be.packed and cfg.residual != "iand":
         raise ValueError(
@@ -90,11 +177,77 @@ def compile_plan(params, state, cfg, *, backend="jnp") -> DeployPlan:
     return DeployPlan(meta=meta, params=plan_params)
 
 
+def _compile_lm_plan(params, state, cfg, *, backend, ordering) -> DeployPlan:
+    """Fold a spiking-LM ``ArchConfig`` model (``models.spiking_lm`` params)
+    into a deploy plan: RMSNorm gains into the GEMM weights
+    (``fold_linear_rmsnorm``), the embedding norm into the embedding table,
+    per-layer params unstacked from the scanned pytree."""
+    from repro.models.layers import rmsnorm_apply
+
+    if not getattr(cfg, "spiking", False):
+        raise ValueError(
+            f"LM deploy plans cover the spiking LM family only; config "
+            f"'{getattr(cfg, 'name', cfg)}' has spiking=False")
+    if state is not None:
+        raise ValueError("the spiking LM carries no BN state; pass state=None")
+    if ordering not in ("quadratic", "linear"):
+        raise ValueError(f"unknown attention ordering: {ordering!r}")
+    be = resolve(backend)
+    dcfg = LMDeployCfg(arch=cfg, attn_ordering=ordering)
+    units = lm_block_layout(cfg)
+
+    # embedding norm: token rows are normalized independently, so the fold is
+    # the full RMSNorm precomputed over the table (exact, bit-for-bit)
+    embed = {"table": rmsnorm_apply(params["embed"]["norm"],
+                                    params["embed"]["table"],
+                                    eps=cfg.norm_eps)}
+
+    folded_blocks = []
+    for i in range(cfg.num_layers):
+        bp = jax.tree_util.tree_map(lambda x, i=i: x[i], params["layers"])
+        folded_blocks.append({
+            u.name: cnn.fold_linear_rmsnorm(
+                {"w": bp[u.name]["w"]}, bp[u.name]["norm"])
+            for u in units})
+
+    meta = PlanMeta(cfg=dcfg, backend=be, tok_stages=(), block_units=units,
+                    num_layers=cfg.num_layers, family="lm")
+    plan_params = {
+        "embed": embed,
+        "blocks": tuple(folded_blocks),
+        "final_norm": params["final_norm"],
+        "head": {"w": params["lm_head"]["w"]},
+    }
+    return DeployPlan(meta=meta, params=plan_params)
+
+
 def plan_stats(plan: DeployPlan) -> dict:
     """Structural op accounting of the deploy plan (what the paper's Table II
     argues about): every BN is folded away, every IAND rides a LIF epilogue."""
     meta = plan.meta
     cfg = meta.cfg
+    if meta.family == "lm":
+        n_units = len(meta.block_units)
+        return {
+            # every Linear+RMSNorm unit carries gain-folded weights, plus the
+            # pre-normalized embedding table
+            "folded_linear_rmsnorm": n_units * meta.num_layers,
+            "folded_embed_norm": 1,
+            "rmsnorm_ops": 0,          # folded at plan-compile time
+            "fused_lif_iand_dispatches": 2 * meta.num_layers,
+            "standalone_iand_ops": 0,
+            "standalone_add_ops": 0,
+            # encoding LIF + per block: q,k,v, attn, proj, fc1, fc2
+            "lif_dispatches": 1 + (n_units + 1) * meta.num_layers,
+            "weight_reads": 1 + n_units * meta.num_layers + 1,
+            "attn_ordering": cfg.attn_ordering,
+            "backend": meta.backend.kind,
+            "packed": meta.backend.packed,
+            "bits_per_spike": (32 * -(-cfg.t // 32) / cfg.t
+                               if meta.backend.packed else 32),
+            "param_count": sum(
+                p.size for p in jax.tree_util.tree_leaves(plan.params)),
+        }
     n_tok = len(meta.tok_stages)
     n_units = len(meta.block_units)
     fused = sum(u.fuse_residual for u in meta.block_units) * meta.num_layers

@@ -29,11 +29,23 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def ssa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float):
+def _causal_tile_mask(bq: int, m: int):
+    """(bq, m) lower-triangular mask for the current query block: row r of
+    block qi is global token ``qi*bq + r`` (softmax-free, so masking writes 0
+    into the score tile -- no -inf bookkeeping)."""
+    qi = pl.program_id(1)
+    rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, m), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bq, m), 1)
+    return cols <= rows
+
+
+def ssa_kernel(q_ref, k_ref, v_ref, o_ref, *, scale: float, causal: bool):
     q = q_ref[0]            # (block_q, D)
     k = k_ref[0]            # (M, D)
     v = v_ref[0]            # (M, D)
     scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (block_q, M)
+    if causal:
+        scores = jnp.where(_causal_tile_mask(*scores.shape), scores, 0.0)
     out = jnp.dot(scores, v, preferred_element_type=jnp.float32) * scale
     o_ref[0] = out.astype(o_ref.dtype)
 
@@ -48,13 +60,13 @@ def _block_q(n: int) -> int:
 
 
 def ssa_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
-            interpret: bool) -> jax.Array:
+            interpret: bool, causal: bool = False) -> jax.Array:
     g, n, d = q.shape
     m = k.shape[1]
     bq = _block_q(n)
     grid = (g, n // bq)
     return pl.pallas_call(
-        functools.partial(ssa_kernel, scale=scale),
+        functools.partial(ssa_kernel, scale=scale, causal=causal),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, bq, d), lambda gi, qi: (gi, qi, 0)),
@@ -68,7 +80,7 @@ def ssa_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float,
 
 
 def packed_ssa_kernel(qw_ref, kw_ref, vw_ref, o_ref, *, t_total: int,
-                      scale: float):
+                      scale: float, causal: bool):
     """SSA on bit-packed operands: unpack q/k/v bitplanes per-tile in VMEM.
 
     ``qw_ref``/``kw_ref``/``vw_ref`` are uint32 word tiles -- bit ``t % 32``
@@ -79,18 +91,23 @@ def packed_ssa_kernel(qw_ref, kw_ref, vw_ref, o_ref, *, t_total: int,
     ``packed_matmul_kernel`` does) and fed to the two MXU contractions; the
     T output planes share the q/k/v words already resident in VMEM.
     """
+    mask = (_causal_tile_mask(qw_ref.shape[2], kw_ref.shape[2])
+            if causal else None)
     for t in range(t_total):
         wi, bit = divmod(t, 32)
         qt = ((qw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
         kt = ((kw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
         vt = ((vw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
         scores = jnp.dot(qt, kt.T, preferred_element_type=jnp.float32)
+        if mask is not None:
+            scores = jnp.where(mask, scores, 0.0)
         out = jnp.dot(scores, vt, preferred_element_type=jnp.float32) * scale
         o_ref[t, 0] = out.astype(o_ref.dtype)
 
 
 def packed_ssa_fwd(qw: jax.Array, kw: jax.Array, vw: jax.Array, *,
-                   t_total: int, scale: float, interpret: bool) -> jax.Array:
+                   t_total: int, scale: float, interpret: bool,
+                   causal: bool = False) -> jax.Array:
     """qw (W, G, N, D), kw/vw (W, G, M, D) uint32 spike words (W = ceil(T/32)
     words per train -- multi-word trains supported) -> (T, G, N, D) f32 drive.
     """
@@ -99,7 +116,8 @@ def packed_ssa_fwd(qw: jax.Array, kw: jax.Array, vw: jax.Array, *,
     bq = _block_q(n)
     grid = (g, n // bq)
     return pl.pallas_call(
-        functools.partial(packed_ssa_kernel, t_total=t_total, scale=scale),
+        functools.partial(packed_ssa_kernel, t_total=t_total, scale=scale,
+                          causal=causal),
         grid=grid,
         in_specs=[
             pl.BlockSpec((w, 1, bq, d), lambda gi, qi: (0, gi, qi, 0)),

@@ -47,46 +47,49 @@ def _pad_tokens(x, axis: int):
     return x, n
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _ssa(q, k, v, scale, interpret):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _ssa(q, k, v, scale, interpret, causal):
     qp, d = _pad_d(q)
     kp, _ = _pad_d(k)
     vp, _ = _pad_d(v)
     qp, n = _pad_tokens(qp, 1)
     kp, _ = _pad_tokens(kp, 1)
     vp, _ = _pad_tokens(vp, 1)
-    out = K.ssa_fwd(qp, kp, vp, scale=scale, interpret=interpret)
+    out = K.ssa_fwd(qp, kp, vp, scale=scale, interpret=interpret, causal=causal)
     return out[:, :n, :d]
 
 
-def _ssa_fwd(q, k, v, scale, interpret):
-    return _ssa(q, k, v, scale, interpret), (q, k, v)
+def _ssa_fwd(q, k, v, scale, interpret, causal):
+    return _ssa(q, k, v, scale, interpret, causal), (q, k, v)
 
 
-def _ssa_bwd(scale, interpret, res, g):
+def _ssa_bwd(scale, interpret, causal, res, g):
     q, k, v = res
     # d/dq [(qk^T)v s] = (g v^T) k s ; d/dk = (g^T q)^T ... all bilinear:
-    _, vjp = jax.vjp(lambda a, b, c: ssa_ref(a, b, c, scale=scale), q, k, v)
+    _, vjp = jax.vjp(
+        lambda a, b, c: ssa_ref(a, b, c, scale=scale, causal=causal), q, k, v)
     return vjp(g)
 
 
 _ssa.defvjp(_ssa_fwd, _ssa_bwd)
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "interpret", "causal"))
 def ssa_op(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125,
-           interpret: bool | None = None) -> jax.Array:
-    """Tick-batched spiking attention. q,k,v: (T, B, H, N, Dh) -> same shape."""
+           interpret: bool | None = None, causal: bool = False) -> jax.Array:
+    """Tick-batched spiking attention. q,k,v: (T, B, H, N, Dh) -> same shape.
+    ``causal`` masks the spike score matrix to the lower triangle in-kernel."""
     t, b, h, n, dh = q.shape
     fold = lambda x: x.reshape(t * b * h, x.shape[3], dh)
-    out = _ssa(fold(q), fold(k), fold(v), float(scale), resolve_interpret(interpret))
+    out = _ssa(fold(q), fold(k), fold(v), float(scale),
+               resolve_interpret(interpret), causal)
     return out.reshape(t, b, h, n, dh)
 
 
-@functools.partial(jax.jit, static_argnames=("t", "scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("t", "scale", "interpret", "causal"))
 def packed_ssa_op(qw: jax.Array, kw: jax.Array, vw: jax.Array, *, t: int,
-                  scale: float = 0.125,
-                  interpret: bool | None = None) -> jax.Array:
+                  scale: float = 0.125, interpret: bool | None = None,
+                  causal: bool = False) -> jax.Array:
     """Packed-operand tick-batched spiking attention.
 
     qw/kw/vw: (W, B, H, N, Dh) uint32 spike words carrying all ``t`` time
@@ -104,5 +107,6 @@ def packed_ssa_op(qw: jax.Array, kw: jax.Array, vw: jax.Array, *, t: int,
     kf, _ = _pad_tokens(kf, 2)
     vf, _ = _pad_tokens(vf, 2)
     out = K.packed_ssa_fwd(qf, kf, vf, t_total=t, scale=float(scale),
-                           interpret=resolve_interpret(interpret))
+                           interpret=resolve_interpret(interpret),
+                           causal=causal)
     return out[:, :, :n, :d].reshape(t, b, h, n, dh)

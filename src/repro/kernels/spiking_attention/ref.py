@@ -6,9 +6,15 @@ import jax
 import jax.numpy as jnp
 
 
-def ssa_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125) -> jax.Array:
-    """(G, N, D), (G, M, D), (G, M, D) -> (G, N, D); no softmax."""
+def ssa_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, scale: float = 0.125,
+            causal: bool = False) -> jax.Array:
+    """(G, N, D), (G, M, D), (G, M, D) -> (G, N, D); no softmax.  ``causal``
+    masks the score matrix to the lower triangle (mask -> 0, not -inf)."""
     scores = jnp.einsum("gnd,gmd->gnm", q, k)
+    if causal:
+        n, m = q.shape[1], k.shape[1]
+        mask = jnp.arange(m)[None, :] <= jnp.arange(n)[:, None]
+        scores = jnp.where(mask, scores, 0.0)
     return jnp.einsum("gnm,gmd->gnd", scores, v) * scale
 
 

@@ -9,11 +9,20 @@ Spike-(IAND-)Former into a folded/fused deploy plan (``repro.engine``) once at
 startup -- BN folded into the weight reads, AND-NOT residuals fused into the
 LIF epilogues -- and classifies image batches with the jitted plan executor.
 
+Spiking-LM serving (``--spiking-lm``) decodes from a compiled LM deploy plan:
+RMSNorm gains folded into the GEMM weights, the embedding norm folded into
+the table, causal SSA dispatched through the plan's backend (quadratic or
+chunked-linear ordering, packed spike activations under ``+packed``).  Decode
+is greedy full-forward re-scoring per new token (the plan executor is the
+scorer; the O(d^2)-state linear-ordering decode loop stays a ROADMAP item).
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b_smoke \
         --requests 8 --prompt-len 32 --max-new 16
     PYTHONPATH=src python -m repro.launch.serve --vision \
         --arch spike-iand-former_smoke --requests 16 --slots 4 --backend jnp
+    PYTHONPATH=src python -m repro.launch.serve --spiking-lm \
+        --requests 4 --prompt-len 16 --max-new 8 --backend pallas+packed
 """
 
 from __future__ import annotations
@@ -142,6 +151,76 @@ def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
     return done
 
 
+def spiking_lm_config(arch: str):
+    """Spiking deploy flavour of a text arch config (the same adaptation the
+    LM test/bench suites use: heads sized for binary spike trains)."""
+    cfg = lm.get_config(arch)
+    assert cfg.modality == "text", "spiking-LM serving targets text archs"
+    return cfg.replace(spiking=True, spike_t=4, num_heads=4, head_dim=None)
+
+
+def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
+                     max_new: int, slots: int = 4, backend: str = "jnp",
+                     ordering: str = "quadratic", seed: int = 0,
+                     verbose: bool = True):
+    """Serve a spiking LM from a compiled deploy plan (greedy decode).
+
+    The (params, cfg) pair is folded ONCE into an LM deploy plan --
+    Linear+RMSNorm units gain-folded, embedding norm pre-applied to the
+    table, causal SSA on the plan's backend -- and each new token is scored
+    by the jitted plan executor over the full running sequence (per-length
+    shapes are warmed before timing starts).
+    """
+    from repro import engine
+    from repro.models import spiking_lm as slm
+
+    cfg = spiking_lm_config(arch)
+    params = slm.init_spiking_lm(jax.random.PRNGKey(seed), cfg)
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering=ordering)
+    step = jax.jit(engine.make_apply_fn(plan))
+
+    dcfg = DataConfig(seed=seed, vocab_size=cfg.vocab_size, seq_len=prompt_len,
+                      global_batch=num_requests)
+    prompts = make_batch(dcfg, 0)["tokens"]
+
+    # warm every (batch, length) the decode loop will see: slot batches plus
+    # the ragged final batch, across the growing sequence lengths
+    for b in _warm_sizes(slots, num_requests):
+        for s in range(prompt_len, prompt_len + max_new):
+            jax.block_until_ready(step(
+                plan.params, jnp.zeros((b, s), jnp.int32)))
+
+    done, t0 = [], time.perf_counter()
+    for start in range(0, num_requests, slots):
+        seq = jnp.asarray(prompts[start : start + slots])
+        b = seq.shape[0]
+        outs = []
+        for _ in range(max_new):
+            logits = step(plan.params, seq)
+            tok = greedy_sample(logits[:, -1])
+            outs.append(tok)
+            seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+        gen = jnp.stack(outs, axis=1)
+        for j in range(b):
+            done.append((start + j, np.asarray(gen[j])))
+        if verbose:
+            print(f"[serve] slot batch {start//slots}: generated "
+                  f"{b}x{max_new} tokens")
+    dt = time.perf_counter() - t0
+    tot = num_requests * max_new
+    if verbose:
+        stats = engine.plan_stats(plan)
+        print(f"[serve] {num_requests} requests, {tot} new tokens in {dt:.2f}s "
+              f"({tot/dt:.1f} tok/s on {jax.default_backend()}; LM plan: "
+              f"{stats['folded_linear_rmsnorm']} folded Linear+RMSNorm units, "
+              f"{stats['fused_lif_iand_dispatches']} fused LIF+IAND "
+              f"dispatches, ordering={stats['attn_ordering']}, "
+              f"backend={stats['backend']}"
+              f"{', packed spikes' if stats['packed'] else ''})")
+    return done
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="llama3.2-1b_smoke")
@@ -151,14 +230,28 @@ def main():
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--vision", action="store_true",
                     help="serve a vision Spikformer via the deploy engine")
+    ap.add_argument("--spiking-lm", action="store_true",
+                    help="greedy-decode a spiking LM from a compiled deploy "
+                         "plan (RMSNorm folded, backend-dispatched causal SSA)")
     ap.add_argument("--backend", default="jnp",
                     choices=("jnp", "pallas", "jnp+packed", "pallas+packed"),
-                    help="deploy-plan backend (vision mode); +packed serves "
-                         "bit-packed inter-layer spike activations")
+                    help="deploy-plan backend (vision / spiking-lm modes); "
+                         "+packed serves bit-packed inter-layer spike "
+                         "activations")
+    ap.add_argument("--ordering", default="quadratic",
+                    choices=("quadratic", "linear"),
+                    help="causal-SSA dataflow of the LM plan: (QK^T)V vs the "
+                         "chunked-linear Q(K^TV) long-sequence path")
     args = ap.parse_args()
     if args.vision:
         serve_vision(args.arch, num_requests=args.requests, slots=args.slots,
                      backend=args.backend)
+        return
+    if args.spiking_lm:
+        serve_spiking_lm(args.arch, num_requests=args.requests,
+                         prompt_len=args.prompt_len, max_new=args.max_new,
+                         slots=args.slots, backend=args.backend,
+                         ordering=args.ordering)
         return
     serve(args.arch, num_requests=args.requests, prompt_len=args.prompt_len,
           max_new=args.max_new, slots=args.slots)

@@ -24,12 +24,25 @@ def rmsnorm_init(d: int, dtype=jnp.float32):
     return {"scale": jnp.ones((d,), dtype)}
 
 
-def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+def rmsnorm_raw(p, x, *, eps: float = 1e-6):
+    """The RMSNorm arithmetic, un-jitted: shared by :func:`rmsnorm_apply`
+    and the deploy engine's inline head normalization
+    (``engine.execute._lm_head``), so the two sites cannot drift -- the LM
+    plan-vs-oracle bit-exactness rests on them being the same ops."""
     dtype = x.dtype
     x32 = x.astype(jnp.float32)
     var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
     y = x32 * jax.lax.rsqrt(var + eps)
     return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("eps",))
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    # jitted so every application is a named jaxpr node ("rmsnorm_apply"):
+    # the deploy engine's folding property tests count these the way
+    # ``engine.analysis.bn_op_count`` counts BatchNorm signatures
+    # (``engine.analysis.rmsnorm_op_count``).
+    return rmsnorm_raw(p, x, eps=eps)
 
 
 # ---------------------------------------------------------------------------

@@ -19,6 +19,15 @@ and O(d^2) decode state: a spiking LM scales to 500k-token contexts.
 
 Time steps are tick-batched: T folds into the batch for every GEMM (single
 weight read for all T); only the LIF chains see the unfolded T axis.
+
+This module is the TRAINING/ORACLE view.  The deploy view is an engine plan
+(``repro.engine.compile_plan`` on the spiking ``ArchConfig`` family): RMSNorm
+gains folded into the GEMM weights, the embedding norm folded into the table,
+causal SSA dispatched through the plan's backend, packed activations under
+``Backend.packed`` -- pinned bit-exact against this graph by
+``tests/test_lm_engine.py``.  Block dims come from the shared
+``engine.layout.lm_block_layout`` and the causal SSA from the shared
+``core.spiking_attention.ssa``, so both views walk one definition.
 """
 
 from __future__ import annotations
@@ -29,8 +38,14 @@ import jax.numpy as jnp
 
 from repro.core.iand import iand
 from repro.core.lif import lif_parallel
+from repro.core.spiking_attention import ssa
+from repro.engine.layout import lm_block_layout
 from repro.models.config import ArchConfig
 from repro.models.layers import rmsnorm_apply, rmsnorm_init
+
+# Spikformer's fixed attention scale (no softmax, so it is a plain gain);
+# the deploy engine reads it from here so both views share one value.
+ATTN_SCALE = 0.125
 
 
 def _fold(x):      # (T, B, S, D) -> (T*B, S, D)
@@ -57,53 +72,21 @@ def _lin_norm_lif(p, x, cfg: ArchConfig, *, iand_skip=None):
 
 def causal_ssa(q, k, v, *, scale: float, ordering: str = "quadratic",
                chunk: int = 512):
-    """Softmax-free causal spiking attention. q/k/v: (T, B, H, S, Dh)."""
-    s = q.shape[3]
-    if ordering == "quadratic":
-        scores = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k)
-        mask = jnp.tril(jnp.ones((s, s), bool))
-        scores = jnp.where(mask, scores, 0.0)          # no softmax: mask -> 0
-        return jnp.einsum("tbhnm,tbhmd->tbhnd", scores, v) * scale
-    if ordering == "linear":
-        # chunked running K^T V state: O(S d^2), exact same result
-        chunk = min(chunk, s)
-        nc = s // chunk
-        qc = q.reshape(q.shape[:3] + (nc, chunk, q.shape[-1]))
-        kc = k.reshape(k.shape[:3] + (nc, chunk, k.shape[-1]))
-        vc = v.reshape(v.shape[:3] + (nc, chunk, v.shape[-1]))
-        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    """Softmax-free causal spiking attention. q/k/v: (T, B, H, S, Dh).
 
-        def step(state, inp):
-            q_i, k_i, v_i = inp
-            intra = jnp.einsum("tbhnd,tbhmd->tbhnm", q_i, k_i)
-            intra = jnp.where(mask, intra, 0.0)
-            y = jnp.einsum("tbhnm,tbhmd->tbhnd", intra, v_i)
-            y = y + jnp.einsum("tbhnd,tbhde->tbhne", q_i, state)
-            state = state + jnp.einsum("tbhmd,tbhme->tbhde", k_i, v_i)
-            return state, y
-
-        dh = q.shape[-1]
-        state0 = jnp.zeros(q.shape[:3] + (dh, dh), q.dtype)
-        _, ys = jax.lax.scan(
-            step, state0,
-            (qc.transpose(3, 0, 1, 2, 4, 5), kc.transpose(3, 0, 1, 2, 4, 5),
-             vc.transpose(3, 0, 1, 2, 4, 5)))
-        y = ys.transpose(1, 2, 3, 0, 4, 5).reshape(q.shape)
-        return y * scale
-    raise ValueError(ordering)
+    Thin wrapper over the shared :func:`repro.core.spiking_attention.ssa`
+    (``causal=True``): the train graph here and the deploy engine's
+    ``backend.ssa_apply`` oracle route run ONE arithmetic path, which is what
+    lets the LM engine-plan test suite pin them bit-exact."""
+    return ssa(q, k, v, scale=scale, ordering=ordering, causal=True,
+               chunk=chunk)
 
 
 def block_init(key, cfg: ArchConfig, dtype):
-    d, f = cfg.d_model, cfg.d_ff
-    ks = jax.random.split(key, 6)
-    return {
-        "q": _lin_init(ks[0], d, d, dtype),
-        "k": _lin_init(ks[1], d, d, dtype),
-        "v": _lin_init(ks[2], d, d, dtype),
-        "proj": _lin_init(ks[3], d, d, dtype),
-        "fc1": _lin_init(ks[4], d, f, dtype),
-        "fc2": _lin_init(ks[5], f, d, dtype),
-    }
+    units = lm_block_layout(cfg)    # shared with the deploy engine
+    ks = jax.random.split(key, len(units))
+    return {u.name: _lin_init(k, u.d_in, u.d_out, dtype)
+            for u, k in zip(units, ks)}
 
 
 def block_apply(p, x, cfg: ArchConfig, *, ordering: str):
@@ -115,7 +98,7 @@ def block_apply(p, x, cfg: ArchConfig, *, ordering: str):
     k = _lin_norm_lif(p["k"], x, cfg)
     v = _lin_norm_lif(p["v"], x, cfg)
     split = lambda z: z.reshape(t, b, s, h, dh).transpose(0, 1, 3, 2, 4)
-    attn = causal_ssa(split(q), split(k), split(v), scale=0.125,
+    attn = causal_ssa(split(q), split(k), split(v), scale=ATTN_SCALE,
                       ordering=ordering)
     attn = attn.transpose(0, 1, 3, 2, 4).reshape(t, b, s, d)
     attn = lif_parallel(attn, chain_len=cfg.spike_chain_len)     # attn spikes

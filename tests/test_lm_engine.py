@@ -1,0 +1,415 @@
+"""LM engine-plan equivalence suite (ISSUE 4): the spiking LM rides the
+deploy engine, pinned bit-exact against the hand-inlined oracle.
+
+Covers the acceptance criteria:
+  * ``compile_plan`` on the spiking-LM config family is BIT-EXACT vs
+    ``models.spiking_lm.forward`` for every (backend, ordering, packed)
+    combination: T in {1, 8, 32}, quadratic vs chunked-linear causal SSA,
+    jnp and pallas-interpret backends, dense and bit-packed activations --
+    and on the forced Pallas kernel routes (spike GEMM + causal ``ssa_op`` /
+    ``packed_ssa_op``),
+  * the folded plan's jaxpr contains no standalone RMSNorm application
+    (``analysis.rmsnorm_op_count`` == 0; the oracle graph counts one per
+    Linear+RMSNorm unit plus embed/final), with a hypothesis property over
+    random config geometry,
+  * ``fold_linear_rmsnorm`` folding accuracy and the exact embed-table fold,
+  * causal masking in the SSA kernels vs the masked oracle (ragged N,
+    multi-word packed trains),
+  * routing regressions: LM plans actually invoke the causal kernels,
+  * ``serve --spiking-lm`` load-path regression: greedy decode from a
+    ``pallas+packed`` plan is identical to full-forward reference decode,
+  * LM spike-traffic accounting (SSA-boundary pricing per backend/ordering)
+    and LM ``plan_stats``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import nn as cnn
+from repro.core import packing
+from repro.engine import analysis
+from repro.kernels.spiking_attention.ops import packed_ssa_op, ssa_op
+from repro.kernels.spiking_attention.ref import ssa_ref
+from repro.models import spiking_lm as slm
+from repro.models.layers import rmsnorm_apply
+from repro.models.lm import get_config
+
+KEY = jax.random.PRNGKey(0)
+BATCH, SEQ = 2, 16
+
+# forced-on kernel routes (off-TPU the ``None`` auto keeps kernels off in
+# interpret mode, which would route GEMMs/SSA to the oracle and test nothing)
+PALLAS_KERNEL = engine.Backend("pallas", matmul_kernel=True)
+PALLAS_PACKED_KERNEL = engine.Backend("pallas", matmul_kernel=True, packed=True)
+
+
+def _cfg(t=8, **kw):
+    return get_config("llama3.2-1b_smoke").replace(
+        spiking=True, spike_t=t, num_heads=4, head_dim=None, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _model(t, chain_len=None):
+    cfg = _cfg(t=t, spike_chain_len=chain_len)
+    params = slm.init_spiking_lm(KEY, cfg)
+    return cfg, params
+
+
+def _tokens():
+    return jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                              _cfg().vocab_size)
+
+
+@functools.lru_cache(maxsize=None)
+def _oracle(t, ordering, chain_len=None):
+    cfg, params = _model(t, chain_len)
+    return np.asarray(
+        slm.forward(params, {"tokens": _tokens()}, cfg, ordering=ordering))
+
+
+def _spikes(key, shape):
+    return (jax.random.uniform(key, shape) > 0.5).astype(jnp.float32)
+
+
+# -- folding ------------------------------------------------------------------
+
+def test_fold_linear_rmsnorm_matches_rmsnorm_eval():
+    """Folded unit (gain into GEMM weights + gain-free normalizer epilogue)
+    == Linear -> RMSNorm, to FP-reassociation accuracy."""
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    lin = {"w": jax.random.normal(k1, (48, 96)) * (48 ** -0.5)}
+    norm = {"scale": 1.0 + 0.3 * jax.random.normal(k2, (96,))}
+    x = (jax.random.uniform(k3, (32, 48)) > 0.5).astype(jnp.float32)
+    want = rmsnorm_apply(norm, x @ lin["w"], eps=1e-6)
+    got = cnn.normed_linear_apply(cnn.fold_linear_rmsnorm(lin, norm), x,
+                                  eps=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_fold_linear_rmsnorm_folds_bias():
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    lin = {"w": jax.random.normal(k1, (24, 40)) * 0.2,
+           "b": jax.random.normal(k2, (40,)) * 0.1}
+    norm = {"scale": 1.0 + 0.2 * jax.random.normal(k3, (40,))}
+    x = jax.random.normal(jax.random.PRNGKey(4), (8, 24))
+    want = rmsnorm_apply(norm, x @ lin["w"] + lin["b"], eps=1e-6)
+    got = cnn.normed_linear_apply(cnn.fold_linear_rmsnorm(lin, norm), x,
+                                  eps=1e-6)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_embed_norm_fold_is_exact():
+    """RMSNorm commutes with the row gather bit-for-bit, so the plan's
+    embedding table IS the normalized table -- no runtime norm at all."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg)
+    want = rmsnorm_apply(params["embed"]["norm"], params["embed"]["table"],
+                         eps=cfg.norm_eps)
+    np.testing.assert_array_equal(np.asarray(plan.params["embed"]["table"]),
+                                  np.asarray(want))
+    tokens = _tokens()
+    via_table = jnp.take(plan.params["embed"]["table"], tokens, axis=0)
+    via_rows = rmsnorm_apply(params["embed"]["norm"],
+                             jnp.take(params["embed"]["table"], tokens, axis=0),
+                             eps=cfg.norm_eps)
+    np.testing.assert_array_equal(np.asarray(via_table), np.asarray(via_rows))
+
+
+# -- plan vs oracle: bit-exact across (T, ordering, backend, packed) ----------
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas", "jnp+packed",
+                                     "pallas+packed"])
+@pytest.mark.parametrize("ordering", ["quadratic", "linear"])
+@pytest.mark.parametrize("t", [1, 8, 32], ids=lambda t: f"T{t}")
+def test_lm_plan_bit_exact_vs_oracle(t, ordering, backend):
+    """Acceptance: the folded/fused LM plan reproduces the hand-inlined
+    spiking_lm forward bit-for-bit on every (backend, ordering, packed)
+    combination -- the FP reassociation of the RMSNorm gain fold is absorbed
+    by the LIF re-binarisation, packing is exact, and the head runs
+    arithmetic-identical ops."""
+    cfg, params = _model(t)
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering=ordering)
+    got = engine.apply(plan, {"tokens": _tokens()})
+    np.testing.assert_array_equal(np.asarray(got), _oracle(t, ordering))
+
+
+@pytest.mark.parametrize("backend", [PALLAS_KERNEL, PALLAS_PACKED_KERNEL],
+                         ids=["kernel", "kernel+packed"])
+def test_lm_plan_bit_exact_on_forced_kernel_route(backend):
+    """Spike GEMMs and the causal SSA through the forced-on Pallas kernels
+    (interpret mode) still reproduce the oracle bit-for-bit."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, backend=backend)
+    got = engine.apply(plan, {"tokens": _tokens()})
+    np.testing.assert_array_equal(np.asarray(got), _oracle(8, "quadratic"))
+
+
+def test_lm_plan_chain_len_and_jit():
+    """Reconfigurable LIF chains (chain_len=2) thread through the LM plan;
+    the jitted executor matches eager and accepts a raw token array."""
+    cfg, params = _model(8, chain_len=2)
+    plan = engine.compile_plan(params, None, cfg)
+    fn = jax.jit(engine.make_apply_fn(plan))
+    got = fn(plan.params, _tokens())
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _oracle(8, "quadratic", chain_len=2))
+    np.testing.assert_array_equal(
+        np.asarray(engine.apply(plan, {"tokens": _tokens()})),
+        np.asarray(got))
+
+
+def test_compile_lm_plan_validation():
+    cfg, params = _model(8)
+    with pytest.raises(ValueError, match="spiking"):
+        engine.compile_plan(params, None, _cfg().replace(spiking=False))
+    with pytest.raises(ValueError, match="state"):
+        engine.compile_plan(params, {"bn": {}}, cfg)
+    with pytest.raises(ValueError, match="ordering"):
+        engine.compile_plan(params, None, cfg, ordering="flash")
+    # vision configs take the ordering from cfg.attn_ordering, not the call
+    from repro.core import spikformer as sf
+
+    vcfg = sf.SpikformerConfig(embed_dim=64, num_layers=1, num_heads=4, t=4)
+    vp, vs = sf.init(KEY, vcfg)
+    with pytest.raises(ValueError, match="ordering"):
+        engine.compile_plan(vp, vs, vcfg, ordering="quadratic")
+
+
+# -- no RMSNorm survives in the folded plan's jaxpr ---------------------------
+
+def test_no_rmsnorm_in_lm_plan_jaxpr():
+    """The deploy graph applies NO standalone RMSNorm: block-unit gains live
+    in the folded GEMM weights, the embed norm is pre-applied to the table,
+    and the one irreducible head normalization (its input is the analog rate
+    -- there is no weight read to fold its gain into without perturbing the
+    logits bitwise) runs inline in the head epilogue.  The oracle graph
+    counts one named application per unit (once under the layer scan) plus
+    embed and final."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg)
+    tokens = _tokens()
+    assert analysis.rmsnorm_op_count(
+        engine.make_apply_fn(plan), plan.params, tokens) == 0
+    oracle = lambda p, tk: slm.forward(p, {"tokens": tk}, cfg)
+    # 6 units counted once inside the scanned layer body + embed + final
+    assert analysis.rmsnorm_op_count(oracle, params, tokens) == 6 + 2
+
+
+def test_no_rmsnorm_in_lm_plan_jaxpr_property():
+    """Hypothesis property: the no-RMSNorm invariant holds over random LM
+    geometry (layers, width, heads, T, ordering, backend)."""
+    hypothesis = pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        num_layers=st.integers(1, 3),
+        dh=st.sampled_from([8, 16]),
+        heads=st.sampled_from([2, 4]),
+        t=st.sampled_from([1, 4, 8, 32]),
+        ordering=st.sampled_from(["quadratic", "linear"]),
+        backend=st.sampled_from(["jnp", "pallas", "jnp+packed",
+                                 "pallas+packed"]),
+    )
+    def check(num_layers, dh, heads, t, ordering, backend):
+        cfg = _cfg(t=t).replace(
+            num_layers=num_layers, d_model=dh * heads, num_heads=heads,
+            d_ff=2 * dh * heads, vocab_size=64)
+        params = slm.init_spiking_lm(KEY, cfg)
+        plan = engine.compile_plan(params, None, cfg, backend=backend,
+                                   ordering=ordering)
+        tokens = jnp.zeros((1, 8), jnp.int32)
+        assert analysis.rmsnorm_op_count(
+            engine.make_apply_fn(plan), plan.params, tokens) == 0
+
+    check()
+
+
+def test_lm_plan_params_carry_no_norm_scales():
+    """Structural check: the folded block pytree has no 'norm' subtree --
+    gains are gone, only (w, nrm) folded pairs remain."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg)
+    for block in plan.params["blocks"]:
+        for name, unit in block.items():
+            assert set(unit) == {"w", "nrm"}, (name, set(unit))
+
+
+# -- causal SSA kernels vs masked oracle --------------------------------------
+
+@pytest.mark.parametrize("n", [16, 65], ids=["N16", "N65"])
+def test_ssa_op_causal_masks_in_kernel(n):
+    """Causal ``ssa_op`` == lower-triangle-masked oracle, bit-for-bit,
+    including a ragged (padded) token count."""
+    t, b, h, dh = 2, 1, 2, 24
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    got = ssa_op(q, k, v, causal=True)
+    fold = lambda x: x.reshape(t * b * h, n, dh)
+    want = ssa_ref(fold(q), fold(k), fold(v), causal=True).reshape(got.shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # and the mask actually bites: non-causal differs
+    assert not np.array_equal(np.asarray(ssa_op(q, k, v)), np.asarray(got))
+
+
+@pytest.mark.parametrize("t", [8, 40], ids=["T8", "T40"])
+def test_packed_ssa_op_causal(t):
+    """Causal packed-operand SSA == masked dense oracle, bit-for-bit,
+    including multi-word trains (T=40 -> 2 words)."""
+    b, h, n, dh = 1, 2, 16, 24
+    q, k, v = (_spikes(kk, (t, b, h, n, dh)) for kk in jax.random.split(KEY, 3))
+    qw, kw, vw = (packing.pack(x).words for x in (q, k, v))
+    got = packed_ssa_op(qw, kw, vw, t=t, causal=True)
+    fold = lambda x: x.reshape(t * b * h, n, dh)
+    want = ssa_ref(fold(q), fold(k), fold(v), causal=True).reshape(got.shape)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_causal_linear_ordering_ragged_seq_len():
+    """Regression: greedy decode grows the sequence one token at a time, so
+    the chunked-linear causal scan must accept lengths that are NOT chunk
+    multiples (ragged tails are zero-padded -- exact, since zero keys/values
+    contribute 0.0 to every sum)."""
+    from repro.core.spiking_attention import ssa
+
+    t, b, h, dh = 2, 1, 2, 8
+    for s in (13, 20):                       # chunk=8: 1 ragged + 1 full+ragged
+        q, k, v = (_spikes(kk, (t, b, h, s, dh))
+                   for kk in jax.random.split(jax.random.PRNGKey(s), 3))
+        lin = ssa(q, k, v, scale=0.125, ordering="linear", causal=True,
+                  chunk=8)
+        quad = ssa(q, k, v, scale=0.125, ordering="quadratic", causal=True)
+        np.testing.assert_allclose(np.asarray(lin), np.asarray(quad),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_lm_plan_routes_causal_attention_through_kernels(monkeypatch):
+    """LM plans on the kernel route invoke the causal SSA kernels (one per
+    layer), with causal=True; the jnp plan invokes neither."""
+    import repro.kernels.spiking_attention.ops as aops
+
+    cfg, params = _model(8)
+    tokens = _tokens()
+    seen = {"ssa": 0, "packed": 0, "causal": True}
+    orig_ssa, orig_packed = aops.ssa_op, aops.packed_ssa_op
+
+    def counting_ssa(*a, **kw):
+        seen["ssa"] += 1
+        seen["causal"] &= kw.get("causal", False)
+        return orig_ssa(*a, **kw)
+
+    def counting_packed(*a, **kw):
+        seen["packed"] += 1
+        seen["causal"] &= kw.get("causal", False)
+        return orig_packed(*a, **kw)
+
+    monkeypatch.setattr(aops, "ssa_op", counting_ssa)
+    monkeypatch.setattr(aops, "packed_ssa_op", counting_packed)
+
+    plan = engine.compile_plan(params, None, cfg, backend=PALLAS_KERNEL)
+    engine.apply(plan, tokens)
+    assert seen["ssa"] == cfg.num_layers and seen["causal"]
+
+    plan = engine.compile_plan(params, None, cfg,
+                               backend=PALLAS_PACKED_KERNEL)
+    engine.apply(plan, tokens)
+    assert seen["packed"] == cfg.num_layers and seen["causal"]
+
+    seen["ssa"] = seen["packed"] = 0
+    engine.apply(engine.compile_plan(params, None, cfg), tokens)  # jnp oracle
+    assert seen["ssa"] == 0 and seen["packed"] == 0
+
+
+# -- serve load path ----------------------------------------------------------
+
+def test_serve_spiking_lm_packed_matches_full_forward_greedy():
+    """Load-path regression for ``serve --spiking-lm --backend pallas+packed``
+    (ROADMAP flagged it unexercised): every token greedily decoded from the
+    packed plan matches a teacher-forced full-forward reference decode on the
+    hand-inlined spiking_lm graph."""
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.launch.serve import serve_spiking_lm, spiking_lm_config
+
+    n_req, p_len, max_new = 3, 8, 4
+    done = serve_spiking_lm(
+        "llama3.2-1b_smoke", num_requests=n_req, prompt_len=p_len,
+        max_new=max_new, slots=2, backend="pallas+packed", verbose=False)
+    assert len(done) == n_req
+
+    cfg = spiking_lm_config("llama3.2-1b_smoke")
+    params = slm.init_spiking_lm(jax.random.PRNGKey(0), cfg)
+    dcfg = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=p_len,
+                      global_batch=n_req)
+    seq = jnp.asarray(make_batch(dcfg, 0)["tokens"])
+    outs = []
+    for _ in range(max_new):
+        logits = slm.forward(params, {"tokens": seq}, cfg)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        outs.append(tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+    ref = np.asarray(jnp.stack(outs, axis=1))
+    got = np.stack([gen for _, gen in sorted(done)])
+    np.testing.assert_array_equal(got, ref)
+
+
+# -- traffic accounting and plan stats ----------------------------------------
+
+def test_lm_spike_traffic_accounting():
+    cfg = _cfg(t=8)
+    tr = analysis.lm_spike_traffic(cfg, seq_len=SEQ)
+    assert tr["reduction"] == 8.0
+    names = [e["name"] for e in tr["edges"]]
+    assert "embed" in names and "block1.attn" in names and "block0.fc2" in names
+    assert all(e["ssa_boundary"] == (e["name"].split(".")[-1] in "qkv")
+               for e in tr["edges"] if e["name"].startswith("block"))
+    assert tr["packed_bytes"] < tr["packed_bytes_ssa_dense"] < tr["dense_bytes"]
+
+    closed = analysis.lm_spike_traffic(cfg, seq_len=SEQ,
+                                       backend=PALLAS_PACKED_KERNEL)
+    assert closed["ssa_boundary_closed"]
+    assert closed["reduction_ssa_dense"] == closed["reduction"] == 8.0
+    # the chunked-linear ordering never rides the quadratic packed kernel
+    lin = analysis.lm_spike_traffic(cfg, seq_len=SEQ, ordering="linear",
+                                    backend=PALLAS_PACKED_KERNEL)
+    assert not lin["ssa_boundary_closed"]
+    # doubling the sequence doubles bytes, not ratios
+    tr2 = analysis.lm_spike_traffic(cfg, seq_len=2 * SEQ)
+    assert tr2["dense_bytes"] == 2 * tr["dense_bytes"]
+    assert tr2["reduction"] == tr["reduction"]
+
+
+def test_lm_plan_stats():
+    cfg, params = _model(8)
+    stats = engine.plan_stats(engine.compile_plan(params, None, cfg))
+    assert stats["rmsnorm_ops"] == 0
+    assert stats["standalone_iand_ops"] == 0
+    assert stats["folded_linear_rmsnorm"] == 6 * cfg.num_layers
+    assert stats["folded_embed_norm"] == 1
+    assert stats["fused_lif_iand_dispatches"] == 2 * cfg.num_layers
+    assert stats["lif_dispatches"] == 1 + 7 * cfg.num_layers
+    assert stats["attn_ordering"] == "quadratic"
+    packed = engine.plan_stats(
+        engine.compile_plan(params, None, cfg, backend="jnp+packed"))
+    assert packed["bits_per_spike"] == 4.0    # T=8: one uint32 word / 8 steps
+
+
+def test_lm_block_layout_shared_with_init():
+    """One layout definition: the oracle's params and the plan's folded
+    params walk the same unit list."""
+    cfg, params = _model(8)
+    units = engine.lm_block_layout(cfg)
+    assert [u.name for u in units] == ["q", "k", "v", "proj", "fc1", "fc2"]
+    assert all(u.fuse_residual for u in units if u.role in ("attn_out",
+                                                            "mlp_out"))
+    bp = jax.tree_util.tree_map(lambda x: x[0], params["layers"])
+    assert set(bp) == {u.name for u in units}
+    for u in units:
+        assert bp[u.name]["w"].shape == (u.d_in, u.d_out)
