@@ -30,14 +30,15 @@ def main():
     np.testing.assert_allclose(np.asarray(a), np.asarray(bl), rtol=1e-5, atol=1e-5)
     print("exactness: quadratic == linear  OK")
 
-    # streaming decode == batch linear
-    state = ssa_linear_state_init(b, h, dh)
+    # streaming decode == batch linear (all T bitplanes carried in the state,
+    # exactly as the engine's DecodeState does)
+    state = ssa_linear_state_init(t, b, h, dh)
     outs = []
     for i in range(n):
         state, o = ssa_linear_decode_step(
-            state, q[0, :, :, i:i+1], k[0, :, :, i:i+1], v[0, :, :, i:i+1])
+            state, q[:, :, :, i:i+1], k[:, :, :, i:i+1], v[:, :, :, i:i+1])
         outs.append(o)
-    stream = jnp.stack(outs, axis=2)[:, :, :, 0][None]
+    stream = jnp.concatenate(outs, axis=3)
     # causal reference
     mask = jnp.tril(jnp.ones((n, n)))
     scores = jnp.einsum("tbhnd,tbhmd->tbhnm", q, k) * mask

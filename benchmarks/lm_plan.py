@@ -6,8 +6,10 @@ LM is folded into deploy plans (RMSNorm gains into the GEMM weights, embed
 norm into the table, causal SSA on the plan's backend) and executed dense vs
 bit-packed -- the two plans must produce IDENTICAL logits -- while the
 inter-layer spike traffic is priced analytically at the measured sequence
-length and, analytically only, at the 500k-token decode length that motivates
-the chunked-linear ordering.
+length and at the 500k-token decode length.  The ``@S500k`` rows also carry
+MEASURED prefill+step rates from the incremental decode mode: the per-token
+step cost rides an O(d^2)-per-head state and is asserted flat in the prefix
+length, so the measured step rate is the 500k-context serving rate.
 """
 
 from __future__ import annotations
@@ -68,6 +70,82 @@ def analytic_rows(t: int) -> list[dict]:
     return rows
 
 
+def measured_decode(t: int) -> dict:
+    """Measured prefill+step decode of the incremental LM plan -- the numbers
+    that fill the open ``@S500k`` rows.
+
+    The decode step carries an O(d^2)-per-head state, so its cost is flat in
+    the prefix length: the step rate measured after a short prefill IS the
+    step rate at 500k tokens of context.  That flatness is asserted here, not
+    assumed -- structurally (no axis of the prefix length appears anywhere in
+    the step's jaxpr) and on the measured wall clock (a 3x longer prefill
+    must not change the step time beyond noise).
+    """
+    cfg = _cfg(t)
+    params = slm.init_spiking_lm(jax.random.PRNGKey(0), cfg)
+    plan = engine.compile_plan(params, None, cfg, backend="jnp",
+                               ordering="linear")
+    prefill = jax.jit(engine.make_prefill_fn(plan))
+    step = jax.jit(engine.make_decode_step_fn(plan))
+
+    # the long prefix length is chosen to collide with NO model dimension
+    # (d_model 64, d_ff 128, vocab 256, T, heads, Dh), so its absence from
+    # the step jaxpr below is a falsifiable flatness check
+    long_s = 3 * SEQ
+    short = jax.random.randint(jax.random.PRNGKey(1), (BATCH, SEQ), 0,
+                               cfg.vocab_size)
+    long = jax.random.randint(jax.random.PRNGKey(2), (BATCH, long_s), 0,
+                              cfg.vocab_size)
+    logits, state = prefill(plan.params, short)       # warm + result
+    jax.block_until_ready(logits)
+    t0 = time.perf_counter()
+    for _ in range(3):
+        jax.block_until_ready(prefill(plan.params, short)[0])
+    prefill_s = (time.perf_counter() - t0) / 3
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+
+    def run_steps(state0, n=48):
+        st, tk = state0, tok
+        t0 = time.perf_counter()
+        for _ in range(n):
+            lg, st = step(plan.params, st, tk)
+            tk = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+        jax.block_until_ready(tk)
+        return (time.perf_counter() - t0) / n
+
+    run_steps(state, n=2)                    # warm
+    step_s_short = run_steps(state)
+    _, state_long = prefill(plan.params, long)
+    jax.block_until_ready(state_long.kv)     # charge prefill to prefill
+    step_s_long = run_steps(state_long)
+
+    # flat-in-S, structurally: the step jaxpr after the LONG prefill must
+    # mention no axis of the prefix length anywhere -- a step that re-scored
+    # the prefix (or carried the prompt in its state) would materialise an
+    # S-sized axis (192 collides with no model dimension, so this can fail)
+    dims = analysis.jaxpr_dims(
+        engine.make_decode_step_fn(plan), plan.params, state_long, tok)
+    assert long_s not in dims, f"decode step carries an S={long_s} axis"
+    # ... and on the wall clock (loose bound: CPU timer noise)
+    flat_ratio = step_s_long / step_s_short
+    assert flat_ratio < 2.0, f"step cost grew with prefix length: {flat_ratio:.2f}x"
+
+    dec_tr = analysis.lm_decode_traffic(cfg, batch=1, backend=CLOSED_BACKEND)
+    entry = plan.meta.decode
+    return {
+        "t": t,
+        "batch": BATCH,
+        "prefill_seq_len": SEQ,
+        "prefill_tokens_per_s": BATCH * SEQ / prefill_s,
+        "decode_tokens_per_s": BATCH / step_s_short,
+        "decode_step_wall_s": step_s_short,
+        "decode_step_flat_ratio": flat_ratio,
+        "decode_state_bytes": entry.state_bytes(1),
+        "decode_dense_bytes_per_token": dec_tr["dense_bytes_per_step"],
+        "decode_packed_bytes_per_token": dec_tr["packed_bytes_per_step"],
+    }
+
+
 def measured_small(t: int = 8) -> dict:
     cfg = _cfg(t)
     params = slm.init_spiking_lm(jax.random.PRNGKey(0), cfg)
@@ -109,11 +187,19 @@ def main():
     rows32 = analytic_rows(t=32)
     measured = measured_small(t=8)
 
+    # fill the @S500k rows: measured prefill+step decode (the O(d^2)-state
+    # incremental mode whose per-token cost is flat in S -- asserted inside)
+    for rows, t in ((rows8, 8), (rows32, 32)):
+        dec = measured_decode(t)
+        for row in rows:
+            if row["seq_len"] == LONG_SEQ:
+                row.update({k: v for k, v in dec.items() if k != "t"})
+
     print("lm_plan: spiking-LM deploy plan -- inter-layer spike bytes per "
           "sequence, dense f32 vs bit-packed uint32 words ('ssa closed' "
-          "prices q/k/v under the packed Pallas backend; the chunked-linear "
-          "500k rows stay open: packed linear-ordering operands are a "
-          "ROADMAP item)")
+          "prices q/k/v under the packed Pallas backend; @S500k rows carry "
+          "the measured prefill+step decode: step cost is flat in S, so the "
+          "measured step rate IS the 500k-context rate)")
     print(f"{'config':24s} {'T':>3s} {'order':>6s} {'dense MB':>10s} "
           f"{'packed MB':>10s} {'reduction':>10s} {'ssa col':>9s}")
     for row in rows8 + rows32:
@@ -125,6 +211,19 @@ def main():
     assert all(r["reduction"] >= 32.0 for r in rows32)
     quad = [r for r in rows8 + rows32 if r["ordering"] == "quadratic"]
     assert all(r["reduction_ssa_dense"] == r["reduction"] for r in quad)
+
+    for row in rows8 + rows32:
+        if row["seq_len"] != LONG_SEQ:
+            continue
+        print(f"\n{row['config']} T={row['t']}: measured incremental decode "
+              f"(jnp backend, batch {row['batch']}):")
+        print(f"  prefill@S{row['prefill_seq_len']}: "
+              f"{row['prefill_tokens_per_s']:10.0f} tokens/s")
+        print(f"  decode step: {row['decode_tokens_per_s']:10.0f} tokens/s "
+              f"({row['decode_step_wall_s']*1e3:.2f} ms/step, flat in S: "
+              f"3x prefix -> {row['decode_step_flat_ratio']:.2f}x step time, "
+              f"no S axis in the step jaxpr; "
+              f"{row['decode_state_bytes']} B state/seq)")
 
     m = measured
     print(f"\nexecuted (jnp backend, {m['config']}, T={m['t']}, batch "

@@ -91,7 +91,7 @@ def write_bench_json(engine_result, packed_result, lm_result=None) -> None:
         # tokens/s row -- same column names as the vision rows
         for table, suffix in (("lm_t8", ""), ("lm_t32", "@T32")):
             for row in lm_result.get(table, ()):
-                configs[f"{row['config']}{suffix}"] = {
+                entry = {
                     "t": row["t"],
                     "seq_len": row["seq_len"],
                     "attn_ordering": row["ordering"],
@@ -102,6 +102,17 @@ def write_bench_json(engine_result, packed_result, lm_result=None) -> None:
                     "packed_reduction_ssa_dense": row["reduction_ssa_dense"],
                     "packed_reduction_ssa_open": row["reduction_ssa_open"],
                 }
+                # @S500k rows: measured prefill+step incremental decode
+                # (benchmarks/lm_plan.py measured_decode -- step cost
+                # asserted flat in the prefix length)
+                for key in ("batch", "prefill_seq_len", "prefill_tokens_per_s",
+                            "decode_tokens_per_s", "decode_step_wall_s",
+                            "decode_step_flat_ratio", "decode_state_bytes",
+                            "decode_dense_bytes_per_token",
+                            "decode_packed_bytes_per_token"):
+                    if key in row:
+                        entry[key] = row[key]
+                configs[f"{row['config']}{suffix}"] = entry
         lm = lm_result["measured"]
         configs[lm["config"]] = {
             "t": lm["t"],

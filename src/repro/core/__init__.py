@@ -11,7 +11,11 @@ Public API:
 
 from repro.core.iand import iand, is_binary, residual_add
 from repro.core.lif import lif, lif_parallel, lif_serial, surrogate_spike
-from repro.core.spiking_attention import ssa, ssa_linear_decode_step, ssa_linear_state_init
+from repro.core.spiking_attention import (
+    ssa, ssa_causal_linear_with_state, ssa_kv_state, ssa_kv_state_packed,
+    ssa_linear_decode_step, ssa_linear_decode_step_packed,
+    ssa_linear_state_init,
+)
 from repro.core.spikformer import (
     SPIKFORMER_8_384,
     SPIKFORMER_8_512,

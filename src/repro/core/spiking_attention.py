@@ -32,12 +32,15 @@ import jax.numpy as jnp
 def _causal_linear(q, k, v, *, chunk: int):
     """Chunked running-state causal linear ordering: O(S d^2), exactly equal
     to the masked quadratic product (no softmax, so chunking is exact).
+    Returns ``(out, final_state)`` -- the scan's carry after the last chunk
+    IS the end-of-prefix K^T V decode state, so prefill gets it for free.
 
     Ragged lengths are zero-padded up to the chunk multiple -- exact, not
     approximate: padded keys/values are all-zero spikes (their products
-    contribute 0.0 to every sum, bit-for-bit), and the padded query rows are
-    sliced away.  Greedy decode grows the sequence one token at a time, so
-    this is the path every long decode rides."""
+    contribute 0.0 to every sum, bit-for-bit, including to the carried
+    state), and the padded query rows are sliced away.  Greedy decode grows
+    the sequence one token at a time, so this is the path every long decode
+    rides."""
     s = q.shape[3]
     chunk = min(chunk, s)
     pad = (-s) % chunk
@@ -45,8 +48,8 @@ def _causal_linear(q, k, v, *, chunk: int):
         widths = [(0, 0)] * q.ndim
         widths[3] = (0, pad)
         q, k, v = (jnp.pad(x, widths) for x in (q, k, v))
-    out = _causal_linear_aligned(q, k, v, chunk=chunk)
-    return out[:, :, :, :s] if pad else out
+    out, state = _causal_linear_aligned(q, k, v, chunk=chunk)
+    return (out[:, :, :, :s] if pad else out), state
 
 
 def _causal_linear_aligned(q, k, v, *, chunk: int):
@@ -68,11 +71,23 @@ def _causal_linear_aligned(q, k, v, *, chunk: int):
 
     dh = q.shape[-1]
     state0 = jnp.zeros(q.shape[:3] + (dh, dh), q.dtype)
-    _, ys = jax.lax.scan(
+    state, ys = jax.lax.scan(
         step, state0,
         (qc.transpose(3, 0, 1, 2, 4, 5), kc.transpose(3, 0, 1, 2, 4, 5),
          vc.transpose(3, 0, 1, 2, 4, 5)))
-    return ys.transpose(1, 2, 3, 0, 4, 5).reshape(q.shape)
+    return ys.transpose(1, 2, 3, 0, 4, 5).reshape(q.shape), state
+
+
+def ssa_causal_linear_with_state(q, k, v, *, scale: float = 0.125,
+                                 chunk: int = 512):
+    """Causal linear-ordering SSA that ALSO returns the end-of-prefix K^T V
+    state: ``(drive, state)`` with ``drive == ssa(..., ordering="linear",
+    causal=True)`` and ``state == ssa_kv_state(k, v)`` (bit-identical for
+    binary spikes -- integer sums in any association).  The state is the
+    causal scan's final carry, so a prefill pays NO second contraction over
+    the prefix for its decode state."""
+    out, state = _causal_linear(q, k, v, chunk=chunk)
+    return out * scale, state
 
 
 def ssa(
@@ -103,7 +118,7 @@ def ssa(
         out = jnp.einsum("tbhnm,tbhmd->tbhnd", scores, v)
     elif ordering == "linear":
         if causal:
-            out = _causal_linear(q, k, v, chunk=chunk)
+            out, _ = _causal_linear(q, k, v, chunk=chunk)
         else:
             kv = jnp.einsum("tbhmd,tbhme->tbhde", k, v)
             out = jnp.einsum("tbhnd,tbhde->tbhne", q, kv)
@@ -139,18 +154,72 @@ def split_heads_packed(xp, h: int):
     return packing.PackedSpikes(words=words, t=xp.t)
 
 
-def ssa_linear_state_init(b: int, h: int, dh: int, dtype=jnp.float32):
-    """O(d^2) running state for linear-ordering spiking decode: sum_m k_m v_m^T."""
-    return jnp.zeros((b, h, dh, dh), dtype)
+def ssa_linear_state_init(t: int, b: int, h: int, dh: int, dtype=jnp.float32):
+    """O(d^2) running state for linear-ordering spiking decode: one
+    ``sum_m k_m^T v_m`` accumulator per (time step, batch, head) --
+    (T, B, H, Dh, Dh), constant in context length."""
+    return jnp.zeros((t, b, h, dh, dh), dtype)
 
 
 def ssa_linear_decode_step(state, q_t, k_t, v_t, *, scale: float = 0.125):
-    """One decode step of linear SSA. q_t/k_t/v_t: (B, H, 1, Dh).
+    """One decode step of linear SSA on any leading batch dims.
 
-    state' = state + k^T v ; out = q state' * scale. O(d^2) per token,
-    independent of context length -- the sub-quadratic serving mode enabled by
-    softmax elimination.
+    q_t/k_t/v_t: (..., N, Dh) spikes of the new token(s) (the engine passes
+    (T, B, H, 1, Dh)); ``state``: (..., Dh, Dh).
+
+        state' = state + k^T v ;  out = q state' * scale
+
+    O(d^2) per token, independent of context length -- the sub-quadratic
+    serving mode enabled by softmax elimination.  The semantics match
+    :func:`ssa` with ``causal=True`` exactly: the state updates BEFORE the
+    query reads it (a token attends to itself -- the lower triangle includes
+    the diagonal, and a step is a chunk of one), and ``scale`` multiplies the
+    output only, never the state.  Binary spikes make every contraction exact
+    integer arithmetic in f32, so stepping is bit-identical to the full
+    causal forward in either ordering.
     """
-    state = state + jnp.einsum("bhmd,bhme->bhde", k_t, v_t)
-    out = jnp.einsum("bhnd,bhde->bhne", q_t, state) * scale
+    state = state + jnp.einsum("...md,...me->...de", k_t, v_t)
+    out = jnp.einsum("...nd,...de->...ne", q_t, state) * scale
     return state, out
+
+
+def ssa_kv_state(k, v):
+    """Prefill companion of :func:`ssa_linear_decode_step`: the K^T V state
+    after consuming a whole prefix.  k/v: (..., S, Dh) spikes ->
+    (..., Dh, Dh).  Equal (exactly, by integer arithmetic on binary spikes)
+    to stepping the decode state over the S tokens one at a time."""
+    return jnp.einsum("...md,...me->...de", k, v)
+
+
+def _bitplanes(words: jax.Array, t: int, dtype=jnp.float32) -> jax.Array:
+    """(W, *S) uint32 bitplane words -> (T, *S) dense spikes, by in-register
+    shift-and-mask -- the jnp mirror of the Pallas kernels' per-tile unpack.
+    The words are the operand read from HBM; the dense planes exist only as
+    values inside the jitted step, so the packed decode path never round-trips
+    a dense spike train (and never calls ``packing.unpack``)."""
+    planes = []
+    for w in range(words.shape[0]):
+        t_here = min(32, t - w * 32)
+        shifts = jnp.arange(t_here, dtype=jnp.uint32).reshape(
+            (t_here,) + (1,) * (words.ndim - 1))
+        planes.append((words[w][None] >> shifts) & jnp.uint32(1))
+    return jnp.concatenate(planes, axis=0).astype(dtype)
+
+
+def ssa_linear_decode_step_packed(state, qw, kw, vw, *, t: int,
+                                  scale: float = 0.125):
+    """Packed-operand decode step: qw/kw/vw are (W, ..., N, Dh) uint32 words
+    carrying all ``t`` time steps of the new token's q/k/v spikes.  The words
+    are consumed directly (bitplanes shifted out in-register), so the closed
+    tokenizer-to-head packed boundary survives decode: the per-step HBM read
+    is 1/min(t,32) of the dense operand."""
+    return ssa_linear_decode_step(
+        state, _bitplanes(qw, t), _bitplanes(kw, t), _bitplanes(vw, t),
+        scale=scale)
+
+
+def ssa_kv_state_packed(kw, vw, *, t: int):
+    """Packed-operand prefill state: (W, ..., S, Dh) k/v words -> the
+    (T, ..., Dh, Dh) K^T V state, words consumed directly (in-register
+    shift-and-mask, as in :func:`ssa_linear_decode_step_packed`)."""
+    return ssa_kv_state(_bitplanes(kw, t), _bitplanes(vw, t))

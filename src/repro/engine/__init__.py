@@ -23,22 +23,32 @@ inter-layer activations travel as uint32 bitplane words
 
 from repro.engine.backend import (
     JNP, JNP_PACKED, PALLAS, PALLAS_PACKED, Backend,
-    resolve as resolve_backend, ssa_apply, ssa_apply_packed,
+    resolve as resolve_backend, ssa_apply, ssa_apply_packed, ssa_decode_step,
+    ssa_decode_step_packed, ssa_prefill_apply, ssa_prefill_apply_packed,
+    ssa_prefill_state, ssa_prefill_state_packed,
 )
-from repro.engine.execute import apply, make_apply_fn
+from repro.engine.execute import (
+    DecodeState, apply, decode_state_init, decode_step, make_apply_fn,
+    make_decode_step_fn, make_prefill_fn, prefill,
+)
 from repro.engine.layout import (
     ProjUnit, SpikeEdge, TokStage, block_layout, lm_block_layout,
-    lm_spike_edges, spike_edges, tokenizer_layout,
+    lm_decode_spike_edges, lm_spike_edges, spike_edges, tokenizer_layout,
 )
 from repro.engine.plan import (
-    DeployPlan, LMDeployCfg, PlanMeta, compile_plan, plan_stats,
+    DecodeEntry, DeployPlan, LMDeployCfg, PlanMeta, compile_plan, plan_stats,
 )
 
 __all__ = [
     "JNP", "JNP_PACKED", "PALLAS", "PALLAS_PACKED", "Backend",
-    "resolve_backend", "ssa_apply", "ssa_apply_packed",
-    "apply", "make_apply_fn",
+    "resolve_backend", "ssa_apply", "ssa_apply_packed", "ssa_decode_step",
+    "ssa_decode_step_packed", "ssa_prefill_apply", "ssa_prefill_apply_packed",
+    "ssa_prefill_state", "ssa_prefill_state_packed",
+    "DecodeState", "apply", "decode_state_init", "decode_step",
+    "make_apply_fn", "make_decode_step_fn", "make_prefill_fn", "prefill",
     "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "lm_block_layout",
-    "lm_spike_edges", "spike_edges", "tokenizer_layout",
-    "DeployPlan", "LMDeployCfg", "PlanMeta", "compile_plan", "plan_stats",
+    "lm_decode_spike_edges", "lm_spike_edges", "spike_edges",
+    "tokenizer_layout",
+    "DecodeEntry", "DeployPlan", "LMDeployCfg", "PlanMeta", "compile_plan",
+    "plan_stats",
 ]

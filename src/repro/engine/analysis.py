@@ -23,28 +23,47 @@ _BN_PRIMS = ("rsqrt",)  # eval-mode BN lowers to rsqrt(var+eps); VISION-ONLY
                         # with rmsnorm_op_count, never bn_op_count
 
 
-def _walk(jaxpr, counts: Counter):
+def iter_eqns(jaxpr):
+    """Yield every equation of ``jaxpr`` and of all jaxprs nested in equation
+    params (ClosedJaxpr / Jaxpr, bare or inside tuples/lists) -- the ONE
+    traversal every jaxpr-accounting helper in this module shares."""
     for eqn in jaxpr.eqns:
-        counts[eqn.primitive.name] += 1
+        yield eqn
         for v in eqn.params.values():
-            if isinstance(v, jcore.ClosedJaxpr):
-                _walk(v.jaxpr, counts)
-            elif isinstance(v, jcore.Jaxpr):
-                _walk(v, counts)
-            elif isinstance(v, (tuple, list)):
-                for item in v:
-                    if isinstance(item, jcore.ClosedJaxpr):
-                        _walk(item.jaxpr, counts)
-                    elif isinstance(item, jcore.Jaxpr):
-                        _walk(item, counts)
+            items = v if isinstance(v, (tuple, list)) else (v,)
+            for item in items:
+                if isinstance(item, jcore.ClosedJaxpr):
+                    yield from iter_eqns(item.jaxpr)
+                elif isinstance(item, jcore.Jaxpr):
+                    yield from iter_eqns(item)
 
 
 def op_histogram(fn, *args, **kwargs) -> Counter:
     """Primitive-name -> count over ``fn``'s jaxpr, nested jaxprs included."""
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
-    counts: Counter = Counter()
-    _walk(closed.jaxpr, counts)
-    return counts
+    return Counter(eqn.primitive.name for eqn in iter_eqns(closed.jaxpr))
+
+
+def jaxpr_dims(fn, *args, **kwargs) -> set:
+    """Every axis length appearing in any value of ``fn``'s jaxpr -- inputs,
+    consts, and every equation's operands and outputs, nested jaxprs
+    included.
+
+    The falsifiable form of a "cost is flat in S" claim: trace the function
+    and assert the sequence length S is NOT in this set -- a computation
+    that secretly re-scored an S-token prefix (or carried the prompt in its
+    state) would have an S-sized axis somewhere.  Operand (invar) shapes are
+    collected too, so even a single reducing op that consumes an S-sized
+    input straight down to a flat output cannot hide."""
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    dims: set = set()
+    for v in closed.jaxpr.invars + closed.jaxpr.constvars:
+        dims.update(getattr(v.aval, "shape", ()))
+    for eqn in iter_eqns(closed.jaxpr):
+        for v in list(eqn.invars) + list(eqn.outvars):
+            aval = getattr(v, "aval", None)
+            dims.update(getattr(aval, "shape", ()))
+    return dims
 
 
 def bn_op_count(fn, *args, **kwargs) -> int:
@@ -54,21 +73,6 @@ def bn_op_count(fn, *args, **kwargs) -> int:
     hist = op_histogram(fn, *args, **kwargs)
     return sum(hist[p] for p in _BN_PRIMS) + sum(
         n for name, n in hist.items() if name.startswith("batch_norm"))
-
-
-def _walk_named(jaxpr, name: str) -> int:
-    count = 0
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name == "pjit" and eqn.params.get("name") == name:
-            count += 1
-        for v in eqn.params.values():
-            items = v if isinstance(v, (tuple, list)) else (v,)
-            for item in items:
-                if isinstance(item, jcore.ClosedJaxpr):
-                    count += _walk_named(item.jaxpr, name)
-                elif isinstance(item, jcore.Jaxpr):
-                    count += _walk_named(item, name)
-    return count
 
 
 def rmsnorm_op_count(fn, *args, **kwargs) -> int:
@@ -81,7 +85,9 @@ def rmsnorm_op_count(fn, *args, **kwargs) -> int:
     removes is the parameterised norm LAYER, counted by name).
     """
     closed = jax.make_jaxpr(fn)(*args, **kwargs)
-    return _walk_named(closed.jaxpr, "rmsnorm_apply")
+    return sum(1 for eqn in iter_eqns(closed.jaxpr)
+               if eqn.primitive.name == "pjit"
+               and eqn.params.get("name") == "rmsnorm_apply")
 
 
 def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
@@ -121,6 +127,35 @@ def lm_spike_traffic(cfg, *, seq_len: int, batch: int = 1, backend=None,
     boundary_closed = _boundary_closed(backend, ordering)
     return _price_edges(lm_spike_edges(cfg, seq_len=seq_len), cfg.spike_t,
                         batch=batch, boundary_closed=boundary_closed)
+
+
+def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
+    """Per-generated-token traffic of the incremental decode mode: the S=1
+    spike edges (:func:`repro.engine.layout.lm_decode_spike_edges`) plus the
+    O(d^2) SSA state each step reads and writes back.
+
+    Everything here is FLAT in the prefix length -- the number that fills the
+    ``@S500k`` benchmark rows: a 500k-token context costs the same per new
+    token as an 8-token one.  The packed decode step consumes q/k/v words
+    directly under ``Backend.closes_ssa_boundary`` (there is no quadratic
+    score tile in the step, so the ordering condition of the full-forward
+    pricing does not apply); other backends unpack at the op boundary and
+    price those edges dense."""
+    from repro.engine.layout import lm_decode_spike_edges
+    from repro.engine.backend import resolve
+
+    closed = backend is not None and resolve(backend).closes_ssa_boundary
+    priced = _price_edges(lm_decode_spike_edges(cfg), cfg.spike_t,
+                          batch=batch, boundary_closed=closed)
+    dh = cfg.d_model // cfg.num_heads
+    state_bytes = 4 * cfg.num_layers * cfg.spike_t * batch * cfg.num_heads * dh * dh
+    priced["decode_state_bytes"] = state_bytes
+    # each step reads the state and writes the updated one back
+    priced["state_bytes_per_step"] = 2 * state_bytes
+    priced["dense_bytes_per_step"] = priced["dense_bytes"] + 2 * state_bytes
+    priced["packed_bytes_per_step"] = (priced["packed_bytes_ssa_dense"]
+                                       + 2 * state_bytes)
+    return priced
 
 
 def _boundary_closed(backend, ordering: str) -> bool:

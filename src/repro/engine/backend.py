@@ -24,9 +24,12 @@ Every compute op of the deploy plan routes through this module -- including
 attention: :func:`ssa_apply` (jnp einsum oracle vs the ``ssa_op`` Pallas
 kernel, gated like the spike GEMMs) and :func:`ssa_apply_packed` (uint32
 bitplane words consumed directly by ``packed_ssa_op`` when
-``Backend.closes_ssa_boundary``; unpacked at the op boundary otherwise).
-The executor never calls a kernel or an oracle directly, so a plan's kernel
-route is a property of its Backend, with no silent exemptions.
+``Backend.closes_ssa_boundary``; unpacked at the op boundary otherwise), and
+the incremental-decode ops :func:`ssa_decode_step` / :func:`ssa_prefill_state`
+and their ``_packed`` variants (words consumed in-register under the closed
+boundary, so the packed datapath survives decode).  The executor never calls
+a kernel or an oracle directly, so a plan's kernel route is a property of its
+Backend, with no silent exemptions.
 """
 
 from __future__ import annotations
@@ -172,6 +175,100 @@ def ssa_apply_packed(backend: Backend, qp: packing.PackedSpikes,
     q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
     return ssa_apply(backend, q, k, v, scale=scale, ordering=ordering,
                      causal=causal)
+
+
+def ssa_decode_step(backend: Backend, state: jax.Array, q: jax.Array,
+                    k: jax.Array, v: jax.Array, *, scale: float):
+    """One O(d^2) linear-SSA decode step on this backend.  ``state``:
+    (T, B, H, Dh, Dh) running K^T V; q/k/v: (T, B, H, 1, Dh) spikes of the
+    new token.  Returns ``(state', drive)``.
+
+    Always the jnp oracle, mirroring :func:`ssa_apply`'s linear ordering: the
+    whole point of the O(d^2) path is avoiding the N x N score tile, so there
+    is no quadratic kernel to route to -- the step is two tiny contractions.
+    """
+    from repro.core.spiking_attention import ssa_linear_decode_step
+
+    return ssa_linear_decode_step(state, q, k, v, scale=scale)
+
+
+def ssa_decode_step_packed(backend: Backend, state: jax.Array,
+                           qp: packing.PackedSpikes, kp: packing.PackedSpikes,
+                           vp: packing.PackedSpikes, *, scale: float):
+    """Decode step on packed q/k/v trains (words (W, B, H, 1, Dh)).
+
+    Under ``Backend.closes_ssa_boundary`` the uint32 words are the step's
+    operands (bitplanes shifted out in-register -- no dense spike train and
+    no ``packing.unpack`` anywhere in the decode path, so the closed
+    tokenizer-to-head boundary survives decode); otherwise the trains are
+    unpacked at the op boundary and the dense step runs -- the jnp oracle.
+    """
+    if backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import ssa_linear_decode_step_packed
+
+        return ssa_linear_decode_step_packed(
+            state, qp.words, kp.words, vp.words, t=qp.t, scale=scale)
+    q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
+    return ssa_decode_step(backend, state, q, k, v, scale=scale)
+
+
+def ssa_prefill_state(backend: Backend, k: jax.Array, v: jax.Array) -> jax.Array:
+    """K^T V decode state after a whole prefix: k/v (T, B, H, S, Dh) spikes
+    -> (T, B, H, Dh, Dh).  jnp oracle on every route (one batched GEMM)."""
+    from repro.core.spiking_attention import ssa_kv_state
+
+    return ssa_kv_state(k, v)
+
+
+def ssa_prefill_state_packed(backend: Backend, kp: packing.PackedSpikes,
+                             vp: packing.PackedSpikes) -> jax.Array:
+    """Prefill decode state from packed k/v trains; word-consuming under
+    ``Backend.closes_ssa_boundary`` (gated exactly like
+    :func:`ssa_decode_step_packed`), op-boundary unpack otherwise."""
+    if backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import ssa_kv_state_packed
+
+        return ssa_kv_state_packed(kp.words, vp.words, t=kp.t)
+    k, v = packing.unpack(kp), packing.unpack(vp)
+    return ssa_prefill_state(backend, k, v)
+
+
+def ssa_prefill_apply(backend: Backend, q: jax.Array, k: jax.Array,
+                      v: jax.Array, *, scale: float, ordering: str):
+    """Full causal SSA over a prompt PLUS the end-of-prefix K^T V decode
+    state: ``(drive, state)``.
+
+    On the linear ordering the state is the causal scan's final carry
+    (:func:`ssa_causal_linear_with_state`) -- the prefix is contracted ONCE,
+    which matters at 500k tokens.  The quadratic ordering has no running
+    state to reuse, so it pays one extra batched GEMM
+    (:func:`ssa_prefill_state`)."""
+    if ordering == "linear":
+        from repro.core.spiking_attention import ssa_causal_linear_with_state
+
+        return ssa_causal_linear_with_state(q, k, v, scale=scale)
+    drive = ssa_apply(backend, q, k, v, scale=scale, ordering=ordering,
+                      causal=True)
+    return drive, ssa_prefill_state(backend, k, v)
+
+
+def ssa_prefill_apply_packed(backend: Backend, qp: packing.PackedSpikes,
+                             kp: packing.PackedSpikes,
+                             vp: packing.PackedSpikes, *, scale: float,
+                             ordering: str):
+    """Packed-train counterpart of :func:`ssa_prefill_apply`.  Under the
+    closed boundary (quadratic kernel route) both the drive and the state
+    consume the words directly; otherwise the trains are unpacked at the op
+    boundary and the dense route runs (incl. the fused linear-ordering
+    scan-carry state)."""
+    if ordering == "quadratic" and backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import ssa_kv_state_packed
+
+        drive = ssa_apply_packed(backend, qp, kp, vp, scale=scale,
+                                 ordering=ordering, causal=True)
+        return drive, ssa_kv_state_packed(kp.words, vp.words, t=kp.t)
+    q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
+    return ssa_prefill_apply(backend, q, k, v, scale=scale, ordering=ordering)
 
 
 def normed_linear_apply(backend: Backend, p, x2d: jax.Array, *,

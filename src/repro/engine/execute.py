@@ -25,7 +25,11 @@ specifics: folded Linear+RMSNorm units (GEMM on gain-folded weights + the
 gain-free normalizer epilogue), causal SSA, every residual join fused
 (all-spike IAND), a pre-normalized embedding table in place of the
 tokenizer, and the rate-decoded head whose inline normalization is the one
-irreducible norm of the plan.
+irreducible norm of the plan.  LM plans also expose TRUE incremental decode
+(:func:`prefill` / :func:`decode_step` and their ``make_*_fn`` factories):
+the causal SSA's linear ordering admits an O(d^2)-per-head running K^T V
+state (:class:`DecodeState`), so generation never re-scores the prefix --
+per-token cost is flat in context length, bit-exact vs the full forward.
 
 Executors are pure functions of (folded params, image); static plan metadata
 is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
@@ -34,6 +38,7 @@ is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
@@ -201,18 +206,30 @@ def _lm_unit(meta: PlanMeta, p, x):
     return y.reshape(t, b, s, -1)
 
 
-def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool):
+def _lm_full_ssa(meta: PlanMeta, packed: bool, q, k, v):
+    """The walker's default attention: full causal SSA on the plan's backend
+    (split q/k/v in, dense drive out)."""
+    op = B.ssa_apply_packed if packed else B.ssa_apply
+    return op(meta.backend, q, k, v, scale=meta.cfg.attn_scale,
+              ordering=meta.cfg.attn_ordering, causal=True)
+
+
+def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None):
     """One spiking-LM decoder block in deploy form: x is (T, B, S, D) spikes
     dense, a ``PackedSpikes`` (words (W, B, S, D)) when ``packed``.
 
-    ONE walker for both datapaths -- same unit walk as the vision block,
-    with causal SSA and every residual join fused (the LM is all-spike:
-    IAND only); ``packed`` only swaps the unit/split/SSA ops and makes the
-    LIF epilogues emit words, so the two plans cannot structurally diverge."""
+    ONE walker for every datapath -- same unit walk as the vision block, with
+    causal SSA and every residual join fused (the LM is all-spike: IAND
+    only); ``packed`` only swaps the unit/split ops and makes the LIF
+    epilogues emit words, and ``ssa`` (a callable over the head-split q/k/v,
+    defaulting to the full causal SSA) is the ONLY thing the incremental
+    prefill/decode executors replace -- so the full, prefill, and per-token
+    step plans cannot structurally diverge."""
     cfg = meta.cfg
     unit = _lm_unit_packed if packed else _lm_unit
     split = split_heads_packed if packed else split_heads
-    ssa = B.ssa_apply_packed if packed else B.ssa_apply
+    if ssa is None:
+        ssa = functools.partial(_lm_full_ssa, meta, packed)
     acts: dict = {}
     h = None
     for u in meta.block_units:
@@ -222,11 +239,9 @@ def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool):
             continue
         if u.role == "attn_out":
             attn = ssa(
-                meta.backend,
                 split(acts["q"], cfg.num_heads),
                 split(acts["k"], cfg.num_heads),
-                split(acts["v"], cfg.num_heads),
-                scale=cfg.attn_scale, ordering=cfg.attn_ordering, causal=True)
+                split(acts["v"], cfg.num_heads))
             attn_sp = _lif(meta, merge_heads(attn), pack_output=packed)
             drive = unit(meta, bparams[u.name], attn_sp)
         elif u.role == "mlp_hidden":
@@ -271,32 +286,28 @@ def _lm_embed_drive(meta: PlanMeta, embed_params, tokens):
     return jnp.broadcast_to(emb[None], (meta.cfg.t,) + emb.shape)
 
 
-def _lm_exec(meta: PlanMeta, params, tokens):
-    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens))
-    for bparams in params["blocks"]:
-        x = _lm_block_exec(meta, bparams, x, packed=False)
-    rate = x.mean(axis=0)                    # rate decoding over T
-    return _lm_head(meta, params, rate)
-
-
-def _lm_exec_packed(meta: PlanMeta, params, tokens):
-    xp = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
-              pack_output=True)
-    for bparams in params["blocks"]:
-        xp = _lm_block_exec(meta, bparams, xp, packed=True)
-    # rate decoding by popcount: counts are exact integers <= T, and T is a
-    # power of two on the supported configs, so counts/T == mean bit-for-bit
+def _lm_rate(meta: PlanMeta, params, x, *, packed: bool):
+    """Spike train -> analog rate code (B, S, D): mean over T dense, popcount
+    over words packed.  Packed counts are exact integers <= T, and T is a
+    power of two on the supported configs, so counts/T == mean bit-for-bit."""
+    if not packed:
+        return x.mean(axis=0)
     dtype = params["embed"]["table"].dtype
-    rate = packing.spike_counts(xp).astype(dtype) / jnp.asarray(xp.t, dtype)
-    return _lm_head(meta, params, rate)
+    return packing.spike_counts(x).astype(dtype) / jnp.asarray(x.t, dtype)
+
+
+def _lm_exec(meta: PlanMeta, params, tokens, *, packed: bool):
+    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
+             pack_output=packed)
+    for bparams in params["blocks"]:
+        x = _lm_block_exec(meta, bparams, x, packed=packed)
+    return _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
 
 
 def _execute(meta: PlanMeta, params, batch):
     if meta.family == "lm":
         tokens = batch["tokens"] if isinstance(batch, dict) else batch
-        if meta.backend.packed:
-            return _lm_exec_packed(meta, params, tokens)
-        return _lm_exec(meta, params, tokens)
+        return _lm_exec(meta, params, tokens, packed=meta.backend.packed)
     if meta.backend.packed:
         xp = _tokenizer_exec_packed(meta, params["tokenizer"], batch)
         for bparams in params["blocks"]:
@@ -307,6 +318,158 @@ def _execute(meta: PlanMeta, params, batch):
         x = _block_exec(meta, bparams, x)
     feats = x.mean(axis=(0, 2))              # rate decoding over (T, tokens)
     return cnn.linear_apply(params["head"], feats)
+
+
+# -- incremental LM decode ----------------------------------------------------
+#
+# The causal SSA has no softmax, so the linear ordering Q(K^T V) gives every
+# layer an O(d^2)-per-head running state: serving never re-scores the prefix.
+# ``prefill`` runs the full walker once over the prompt and captures each
+# layer's K^T V state; ``decode_step`` advances one token at a cost flat in
+# context length.  Everything OUTSIDE the SSA is positionally local in the LM
+# block -- folded units, RMS epilogues, and the LIF chains act per token, and
+# the IAND skip of a token is that same token's own residual spikes (computed
+# inside the step, never carried) -- so the SSA states are the ONLY cross-
+# token memory a decode needs, and stepping is bit-exact vs the full forward
+# (binary spikes make the attention exact integer arithmetic; every other op
+# runs row-identical at S=1).
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DecodeState:
+    """Carried state of an incremental LM decode: one (T, B, H, Dh, Dh)
+    linear-SSA K^T V accumulator per layer (all T bitplanes), plus the number
+    of tokens consumed.  A pytree -- flows through jitted step functions
+    unchanged; constant-size at any context length (``PlanMeta.decode``
+    records the geometry).
+
+    Nothing else carries: softmax-free attention has no normalizer, so there
+    is no running K-sum denominator, and the IAND skip is each token's own
+    residual spikes, recomputed inside the step (the state-carry property in
+    ``tests/test_lm_decode.py`` proves the states here are sufficient)."""
+
+    kv: tuple[jax.Array, ...]        # per-layer (T, B, H, Dh, Dh)
+    pos: jax.Array                   # () int32: tokens consumed so far
+
+    def tree_flatten(self):
+        return (self.kv, self.pos), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(kv=children[0], pos=children[1])
+
+
+def decode_state_init(meta: PlanMeta, batch: int) -> DecodeState:
+    """Zero ``DecodeState`` for ``batch`` sequences (the state ``prefill``
+    starts from -- exposed for tests and empty-prompt decode)."""
+    entry = _decode_entry(meta)
+    return DecodeState(
+        kv=tuple(jnp.zeros(s, jnp.float32) for s in entry.state_shapes(batch)),
+        pos=jnp.zeros((), jnp.int32))
+
+
+def _decode_entry(meta: PlanMeta):
+    if meta.decode is None:
+        raise ValueError(
+            f"incremental decode is an LM-plan mode; family={meta.family!r} "
+            "plans have no causal running-state decomposition")
+    return meta.decode
+
+
+def _prefill_ssa(meta: PlanMeta, packed: bool, out_kv: list):
+    """Walker attention for prefill: full causal SSA, PLUS capture of the
+    layer's end-of-prefix K^T V state -- on the linear ordering the state is
+    the causal scan's own final carry (the prefix is contracted once), on
+    the quadratic ordering one extra batched contraction (word-consuming
+    under the closed packed boundary, op-boundary unpack otherwise)."""
+
+    def ssa(q, k, v):
+        op = B.ssa_prefill_apply_packed if packed else B.ssa_prefill_apply
+        drive, state = op(meta.backend, q, k, v, scale=meta.cfg.attn_scale,
+                          ordering=meta.cfg.attn_ordering)
+        out_kv.append(state)
+        return drive
+
+    return ssa
+
+
+def _decode_ssa(meta: PlanMeta, packed: bool, kv, out_kv: list):
+    """Walker attention for one decode step: the O(d^2) state update + read
+    in place of the full causal SSA (the only non-local op of the block)."""
+
+    def ssa(q, k, v):
+        step = B.ssa_decode_step_packed if packed else B.ssa_decode_step
+        new_kv, drive = step(meta.backend, kv, q, k, v,
+                             scale=meta.cfg.attn_scale)
+        out_kv.append(new_kv)
+        return drive
+
+    return ssa
+
+
+def _lm_prefill(meta: PlanMeta, params, tokens):
+    """tokens (B, S) -> (logits (B, S, V), DecodeState after the prompt)."""
+    packed = meta.backend.packed
+    _decode_entry(meta)
+    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
+             pack_output=packed)
+    kvs: list = []
+    for bparams in params["blocks"]:
+        x = _lm_block_exec(meta, bparams, x, packed=packed,
+                           ssa=_prefill_ssa(meta, packed, kvs))
+    logits = _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
+    state = DecodeState(kv=tuple(kvs),
+                        pos=jnp.asarray(tokens.shape[1], jnp.int32))
+    return logits, state
+
+
+def _lm_decode_step(meta: PlanMeta, params, state: DecodeState, token):
+    """One generated token: (B,) int32 -> (logits (B, V), advanced state).
+
+    The step's jaxpr mentions no prefix-length dimension at all -- its cost
+    is O(d^2) per layer, flat in S (the property the decode test suite pins
+    with an op-count check)."""
+    packed = meta.backend.packed
+    entry = _decode_entry(meta)
+    if len(state.kv) != entry.num_layers:
+        raise ValueError(
+            f"DecodeState carries {len(state.kv)} layer states, plan has "
+            f"{entry.num_layers} layers")
+    tokens = token.reshape(token.shape[0], 1)          # (B,) -> (B, 1)
+    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
+             pack_output=packed)
+    kvs: list = []
+    for bparams, kv in zip(params["blocks"], state.kv):
+        x = _lm_block_exec(meta, bparams, x, packed=packed,
+                           ssa=_decode_ssa(meta, packed, kv, kvs))
+    logits = _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
+    return logits[:, 0], DecodeState(kv=tuple(kvs), pos=state.pos + 1)
+
+
+def make_prefill_fn(plan: DeployPlan):
+    """Pure ``fn(params, tokens) -> (logits, DecodeState)`` (jit-friendly;
+    LM plans only)."""
+    _decode_entry(plan.meta)
+    return functools.partial(_lm_prefill, plan.meta)
+
+
+def make_decode_step_fn(plan: DeployPlan):
+    """Pure ``fn(params, state, token) -> (logits, state')`` -- ONE warm
+    shape per batch size serves the whole decode, at any context length."""
+    _decode_entry(plan.meta)
+    return functools.partial(_lm_decode_step, plan.meta)
+
+
+def prefill(plan: DeployPlan, tokens) -> tuple[jax.Array, DecodeState]:
+    """One-shot convenience: score a prompt and initialise decode state."""
+    return _lm_prefill(plan.meta, plan.params, jnp.asarray(tokens))
+
+
+def decode_step(plan: DeployPlan, state: DecodeState, token):
+    """One-shot convenience: advance the decode by one token."""
+    return _lm_decode_step(plan.meta, plan.params, state, jnp.asarray(token))
 
 
 def make_apply_fn(plan: DeployPlan):

@@ -169,3 +169,14 @@ def lm_spike_edges(cfg, *, seq_len: int) -> tuple[SpikeEdge, ...]:
                 f"block{i}.{u.name}", seq_len * u.d_out,
                 ssa_boundary=(u.role == "qkv")))
     return tuple(edges)
+
+
+def lm_decode_spike_edges(cfg) -> tuple[SpikeEdge, ...]:
+    """Inter-layer spike tensors of ONE incremental decode step: the S=1
+    column of :func:`lm_spike_edges`.  This is everything that moves per
+    generated token in the prefill+step decode mode -- independent of the
+    prefix length, which is the whole claim (the full-forward re-scoring loop
+    moved ``lm_spike_edges(cfg, seq_len=S)`` per token instead).  The q/k/v
+    edges feed the O(d^2) SSA state update rather than a score matrix, but
+    their backend-dependent packed-vs-dense pricing is unchanged."""
+    return lm_spike_edges(cfg, seq_len=1)

@@ -105,6 +105,36 @@ class LMDeployCfg:
 
 
 @dataclass(frozen=True)
+class DecodeEntry:
+    """Static description of a plan's incremental-decode entry point.
+
+    LM plans decode with an O(d^2)-per-head running K^T V state instead of
+    re-scoring the prefix (legal because the spiking attention has no
+    softmax): ``engine.prefill`` initialises a ``DecodeState`` from the
+    prompt, ``engine.decode_step`` advances it one token at a time at a cost
+    independent of context length.  This entry records the state geometry --
+    one (T, B, H, Dh, Dh) accumulator per layer."""
+
+    num_layers: int
+    t: int                             # time steps (the bitplane axis)
+    num_heads: int
+    head_dim: int
+
+    def state_shapes(self, batch: int) -> tuple[tuple[int, ...], ...]:
+        """Per-layer SSA-state shapes of a ``DecodeState`` at this batch."""
+        shp = (self.t, batch, self.num_heads, self.head_dim, self.head_dim)
+        return tuple(shp for _ in range(self.num_layers))
+
+    def state_bytes(self, batch: int, itemsize: int = 4) -> int:
+        """Decode-state footprint: constant in context length (the number the
+        500k-token serving claim rests on -- a full-attention KV cache grows
+        as S * D, this state never grows)."""
+        return sum(
+            itemsize * s[0] * s[1] * s[2] * s[3] * s[4]
+            for s in self.state_shapes(batch))
+
+
+@dataclass(frozen=True)
 class PlanMeta:
     """Static (hashable) half of a deploy plan."""
 
@@ -114,6 +144,19 @@ class PlanMeta:
     block_units: tuple[ProjUnit, ...]
     num_layers: int
     family: str = "vision"            # "vision" | "lm"
+
+    @property
+    def decode(self) -> DecodeEntry | None:
+        """Incremental-decode entry point: present on every LM plan (the
+        causal SSA admits the O(d^2) linear-ordering state in either plan
+        ordering -- stepping is bit-exact vs both), absent on vision plans
+        (non-causal attention has no running-state decomposition)."""
+        if self.family != "lm":
+            return None
+        cfg = self.cfg
+        return DecodeEntry(
+            num_layers=self.num_layers, t=cfg.t, num_heads=cfg.num_heads,
+            head_dim=cfg.d_model // cfg.num_heads)
 
 
 @dataclass(frozen=True)
@@ -228,7 +271,11 @@ def plan_stats(plan: DeployPlan) -> dict:
     cfg = meta.cfg
     if meta.family == "lm":
         n_units = len(meta.block_units)
+        decode = meta.decode
         return {
+            # incremental decode: per-sequence O(d^2) SSA state, flat in S
+            "decode_entry": True,
+            "decode_state_bytes": decode.state_bytes(1),
             # every Linear+RMSNorm unit carries gain-folded weights, plus the
             # pre-normalized embedding table
             "folded_linear_rmsnorm": n_units * meta.num_layers,
@@ -255,6 +302,7 @@ def plan_stats(plan: DeployPlan) -> dict:
     standalone = (0 if cfg.residual == "iand"
                   else residuals_per_block * meta.num_layers)
     return {
+        "decode_entry": False,        # vision: non-causal SSA, no step mode
         "folded_conv_bn": n_tok,
         "folded_linear_bn": n_units * meta.num_layers,
         "bn_ops": 0,                          # folded at plan-compile time

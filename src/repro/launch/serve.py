@@ -13,8 +13,10 @@ Spiking-LM serving (``--spiking-lm``) decodes from a compiled LM deploy plan:
 RMSNorm gains folded into the GEMM weights, the embedding norm folded into
 the table, causal SSA dispatched through the plan's backend (quadratic or
 chunked-linear ordering, packed spike activations under ``+packed``).  Decode
-is greedy full-forward re-scoring per new token (the plan executor is the
-scorer; the O(d^2)-state linear-ordering decode loop stays a ROADMAP item).
+is true incremental decode: a jitted prefill initialises the O(d^2)-per-head
+linear-SSA ``DecodeState`` from the prompt, then a jitted ``decode_step``
+advances one token at a time -- no full-prefix re-scoring, one warm shape per
+batch size, per-token cost flat in context length.
 
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b_smoke \
@@ -167,9 +169,14 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
 
     The (params, cfg) pair is folded ONCE into an LM deploy plan --
     Linear+RMSNorm units gain-folded, embedding norm pre-applied to the
-    table, causal SSA on the plan's backend -- and each new token is scored
-    by the jitted plan executor over the full running sequence (per-length
-    shapes are warmed before timing starts).
+    table, causal SSA on the plan's backend -- and decode is TRUE incremental
+    decode: one jitted ``prefill`` scores the prompt and initialises the
+    O(d^2)-per-head linear-SSA ``DecodeState``, then one jitted
+    ``decode_step`` advances a token at a time at a cost flat in context
+    length.  The token loop never re-scores the prefix, so only ONE warm
+    shape per slot batch size is needed (the old full-forward loop recompiled
+    per sequence length), and the per-token cost at 500k tokens of context
+    equals the per-token cost at 8.
     """
     from repro import engine
     from repro.models import spiking_lm as slm
@@ -178,29 +185,32 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
     params = slm.init_spiking_lm(jax.random.PRNGKey(seed), cfg)
     plan = engine.compile_plan(params, None, cfg, backend=backend,
                                ordering=ordering)
-    step = jax.jit(engine.make_apply_fn(plan))
+    prefill = jax.jit(engine.make_prefill_fn(plan))
+    step = jax.jit(engine.make_decode_step_fn(plan))
 
     dcfg = DataConfig(seed=seed, vocab_size=cfg.vocab_size, seq_len=prompt_len,
                       global_batch=num_requests)
     prompts = make_batch(dcfg, 0)["tokens"]
 
-    # warm every (batch, length) the decode loop will see: slot batches plus
-    # the ragged final batch, across the growing sequence lengths
+    # warm ONE (batch, prompt_len) prefill shape and ONE step shape per slot
+    # batch size (plus the ragged final batch) -- the step shape serves every
+    # subsequent token, however long the decode runs
     for b in _warm_sizes(slots, num_requests):
-        for s in range(prompt_len, prompt_len + max_new):
-            jax.block_until_ready(step(
-                plan.params, jnp.zeros((b, s), jnp.int32)))
+        logits, st = prefill(plan.params, jnp.zeros((b, prompt_len), jnp.int32))
+        jax.block_until_ready(
+            step(plan.params, st, jnp.zeros((b,), jnp.int32))[0])
 
     done, t0 = [], time.perf_counter()
     for start in range(0, num_requests, slots):
         seq = jnp.asarray(prompts[start : start + slots])
         b = seq.shape[0]
-        outs = []
-        for _ in range(max_new):
-            logits = step(plan.params, seq)
-            tok = greedy_sample(logits[:, -1])
+        logits, state = prefill(plan.params, seq)
+        tok = greedy_sample(logits[:, -1])
+        outs = [tok]
+        for _ in range(max_new - 1):
+            logits, state = step(plan.params, state, tok)
+            tok = greedy_sample(logits)
             outs.append(tok)
-            seq = jnp.concatenate([seq, tok[:, None]], axis=1)
         gen = jnp.stack(outs, axis=1)
         for j in range(b):
             done.append((start + j, np.asarray(gen[j])))
@@ -217,7 +227,9 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
               f"{stats['fused_lif_iand_dispatches']} fused LIF+IAND "
               f"dispatches, ordering={stats['attn_ordering']}, "
               f"backend={stats['backend']}"
-              f"{', packed spikes' if stats['packed'] else ''})")
+              f"{', packed spikes' if stats['packed'] else ''}; "
+              f"prefill+step decode, {stats['decode_state_bytes']} B "
+              f"state/seq, flat in context)")
     return done
 
 

@@ -1,0 +1,535 @@
+"""Incremental LM decode suite (ISSUE 5): prefill + O(d^2)-state stepping is
+bit-exact vs full-forward re-scoring, and serving actually uses it.
+
+Covers the acceptance criteria:
+  * ``engine.prefill`` + ``engine.decode_step`` reproduce the full-forward
+    plan executor BIT-exactly over T in {1, 8, 32} x backend (jnp / pallas
+    kernels x dense / packed) x ordering x ragged prompt lengths -- binary
+    spikes make the attention exact integer arithmetic, so there is no
+    tolerance to hide behind,
+  * ``ssa_linear_decode_step`` (dead code until this PR) against the causal
+    ``ssa`` oracle in both orderings, the causal ``ssa_op`` / ``packed_ssa_op``
+    kernels, and chunk boundaries of the chunked-linear scan,
+  * hypothesis state-carry property: prefill(prefix) then k steps equals
+    prefill(prefix + k tokens) -- same ``DecodeState``, same logits,
+  * the decode step never re-scores the prefix: its jaxpr/op histogram is
+    identical whatever prefix length built the state, and
+    ``serve_spiking_lm`` never invokes the full-forward executor in the
+    token loop,
+  * the closed packed boundary survives decode: no ``packing.unpack``
+    anywhere in prefill + steps under the packed Pallas route,
+  * greedy-token-sequence equality through ``serve_spiking_lm``,
+  * decode-state geometry (``PlanMeta.decode``) and per-token decode traffic
+    accounting (flat in prefix length).
+
+The ``smoke``-named test is the CI fast job: T=4, 32 decode steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import packing
+from repro.core.spiking_attention import (
+    ssa, ssa_kv_state, ssa_kv_state_packed, ssa_linear_decode_step,
+    ssa_linear_decode_step_packed, ssa_linear_state_init,
+)
+from repro.engine import analysis
+from repro.kernels.spiking_attention.ops import packed_ssa_op, ssa_op
+from repro.models import spiking_lm as slm
+from repro.models.lm import get_config
+
+KEY = jax.random.PRNGKey(0)
+BATCH = 2
+
+# forced-on kernel routes (off-TPU the ``None`` auto keeps kernels off in
+# interpret mode, which would route GEMMs/SSA to the oracle and test nothing)
+PALLAS_KERNEL = engine.Backend("pallas", matmul_kernel=True)
+PALLAS_PACKED_KERNEL = engine.Backend("pallas", matmul_kernel=True, packed=True)
+
+BACKENDS = [
+    pytest.param("jnp", id="jnp"),
+    pytest.param(PALLAS_KERNEL, id="pallas-kernel"),
+    pytest.param("jnp+packed", id="jnp-packed"),
+    pytest.param(PALLAS_PACKED_KERNEL, id="pallas-kernel-packed"),
+]
+
+
+def _cfg(t=8, **kw):
+    return get_config("llama3.2-1b_smoke").replace(
+        spiking=True, spike_t=t, num_heads=4, head_dim=None, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _model(t):
+    cfg = _cfg(t=t)
+    params = slm.init_spiking_lm(KEY, cfg)
+    return cfg, params
+
+
+def _tokens(s, seed=1, batch=BATCH):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, s), 0,
+                              _cfg().vocab_size)
+
+
+def _spikes(key, shape):
+    return (jax.random.uniform(key, shape) > 0.5).astype(jnp.float32)
+
+
+def _step_all(q, k, v, *, scale=0.125):
+    """Drive ssa_linear_decode_step over every position of (T,B,H,S,Dh)."""
+    t, b, h, s, dh = q.shape
+    state = ssa_linear_state_init(t, b, h, dh)
+    outs = []
+    for n in range(s):
+        state, y = ssa_linear_decode_step(
+            state, q[:, :, :, n:n + 1], k[:, :, :, n:n + 1],
+            v[:, :, :, n:n + 1], scale=scale)
+        outs.append(y)
+    return state, jnp.concatenate(outs, axis=3)
+
+
+# -- step function vs causal-SSA oracle and kernels (satellite: dead code) ----
+
+@pytest.mark.parametrize("ordering", ["quadratic", "linear"])
+def test_decode_step_matches_causal_ssa(ordering):
+    """Stepping one token at a time == the full causal SSA, bit-for-bit, in
+    both orderings (binary spikes -> exact integer sums in any order)."""
+    t, b, h, s, dh = 2, 1, 2, 13, 8
+    q, k, v = (_spikes(kk, (t, b, h, s, dh)) for kk in jax.random.split(KEY, 3))
+    _, stepped = _step_all(q, k, v)
+    full = ssa(q, k, v, scale=0.125, ordering=ordering, causal=True, chunk=4)
+    np.testing.assert_array_equal(np.asarray(stepped), np.asarray(full))
+
+
+def test_decode_step_chunk_semantics_unified():
+    """A step is a chunk of one: the chunked-linear scan agrees with stepping
+    at EVERY chunk size, including ragged chunk-boundary lengths (S=13 with
+    chunk 4 -> 3 full chunks + ragged tail; chunk 5 -> boundary mid-token)."""
+    t, b, h, s, dh = 2, 1, 2, 13, 8
+    q, k, v = (_spikes(kk, (t, b, h, s, dh))
+               for kk in jax.random.split(jax.random.PRNGKey(7), 3))
+    _, stepped = _step_all(q, k, v)
+    for chunk in (1, 4, 5, 13, 512):
+        full = ssa(q, k, v, scale=0.125, ordering="linear", causal=True,
+                   chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(stepped), np.asarray(full),
+                                      err_msg=f"chunk={chunk}")
+
+
+def test_decode_step_scale_semantics_unified():
+    """``scale`` multiplies the step's output only, never the carried state
+    -- same as ``ssa``; a non-default scale must agree too."""
+    t, b, h, s, dh = 1, 1, 1, 6, 8
+    q, k, v = (_spikes(kk, (t, b, h, s, dh)) for kk in jax.random.split(KEY, 3))
+    st_a, out_a = _step_all(q, k, v, scale=0.5)
+    st_b, out_b = _step_all(q, k, v, scale=0.125)
+    np.testing.assert_array_equal(np.asarray(st_a), np.asarray(st_b))
+    np.testing.assert_array_equal(np.asarray(out_a), 4.0 * np.asarray(out_b))
+    full = ssa(q, k, v, scale=0.5, ordering="linear", causal=True)
+    np.testing.assert_array_equal(np.asarray(out_a), np.asarray(full))
+
+
+def test_decode_step_vs_causal_kernels():
+    """Direct kernel-vs-step test: the stepped outputs equal the causal
+    ``ssa_op`` and ``packed_ssa_op`` Pallas kernels bit-for-bit."""
+    t, b, h, s, dh = 8, 1, 2, 13, 8
+    q, k, v = (_spikes(kk, (t, b, h, s, dh)) for kk in jax.random.split(KEY, 3))
+    _, stepped = _step_all(q, k, v)
+    kern = ssa_op(q, k, v, scale=0.125, causal=True)
+    np.testing.assert_array_equal(np.asarray(stepped), np.asarray(kern))
+    qw, kw, vw = (packing.pack(x).words for x in (q, k, v))
+    pkern = packed_ssa_op(qw, kw, vw, t=t, scale=0.125, causal=True)
+    np.testing.assert_array_equal(np.asarray(stepped), np.asarray(pkern))
+
+
+def test_causal_linear_with_state_scan_carry():
+    """The fused prefill path: ``ssa_causal_linear_with_state`` returns the
+    causal scan's final carry as the decode state -- bit-equal to the
+    separate ``ssa_kv_state`` contraction at every chunking (incl. ragged
+    chunk boundaries), with the drive unchanged.  This is what lets a linear
+    prefill contract the prefix ONCE."""
+    from repro.core.spiking_attention import ssa_causal_linear_with_state
+
+    t, b, h, s, dh = 2, 1, 2, 13, 8
+    q, k, v = (_spikes(kk, (t, b, h, s, dh)) for kk in jax.random.split(KEY, 3))
+    want_state = ssa_kv_state(k, v)
+    want_drive = ssa(q, k, v, scale=0.125, ordering="linear", causal=True)
+    for chunk in (4, 5, 13, 512):
+        drive, state = ssa_causal_linear_with_state(q, k, v, scale=0.125,
+                                                    chunk=chunk)
+        np.testing.assert_array_equal(np.asarray(state), np.asarray(want_state),
+                                      err_msg=f"chunk={chunk}")
+        np.testing.assert_array_equal(np.asarray(drive), np.asarray(want_drive),
+                                      err_msg=f"chunk={chunk}")
+
+
+def test_prefill_state_matches_stepping():
+    """``ssa_kv_state`` (one batched contraction over the whole prefix) ==
+    the state after stepping token by token, bit-for-bit."""
+    t, b, h, s, dh = 4, 2, 2, 11, 8
+    _, k, v = (_spikes(kk, (t, b, h, s, dh)) for kk in jax.random.split(KEY, 3))
+    stepped_state, _ = _step_all(jnp.zeros_like(k), k, v)
+    np.testing.assert_array_equal(np.asarray(ssa_kv_state(k, v)),
+                                  np.asarray(stepped_state))
+
+
+@pytest.mark.parametrize("t", [1, 8, 32, 40], ids=lambda t: f"T{t}")
+def test_packed_decode_step_matches_dense(t):
+    """The word-consuming step == the dense step on all T bitplanes,
+    including multi-word trains (T=40 -> 2 words)."""
+    b, h, dh = 2, 2, 8
+    q, k, v = (_spikes(kk, (t, b, h, 1, dh)) for kk in jax.random.split(KEY, 3))
+    state = 1.0 * jnp.arange(t * b * h * dh * dh, dtype=jnp.float32).reshape(
+        t, b, h, dh, dh) % 7
+    qw, kw, vw = (packing.pack(x).words for x in (q, k, v))
+    st_d, out_d = ssa_linear_decode_step(state, q, k, v, scale=0.125)
+    st_p, out_p = ssa_linear_decode_step_packed(state, qw, kw, vw, t=t,
+                                                scale=0.125)
+    np.testing.assert_array_equal(np.asarray(st_p), np.asarray(st_d))
+    np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out_d))
+    kw2, vw2 = (packing.pack(x).words
+                for x in (_spikes(kk, (t, b, h, 9, dh))
+                          for kk in jax.random.split(jax.random.PRNGKey(3), 2)))
+    k2, v2 = (packing.unpack(packing.PackedSpikes(w, t)) for w in (kw2, vw2))
+    np.testing.assert_array_equal(
+        np.asarray(ssa_kv_state_packed(kw2, vw2, t=t)),
+        np.asarray(ssa_kv_state(k2, v2)))
+
+
+# -- plan-level: prefill + step bit-exact vs full-forward re-scoring ----------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("ordering", ["quadratic", "linear"])
+@pytest.mark.parametrize("t", [1, 8, 32], ids=lambda t: f"T{t}")
+def test_decode_bit_exact_vs_full_forward(t, ordering, backend):
+    """Acceptance: prefill + decode_step == the full-forward plan executor,
+    bit-for-bit, for every (T, ordering, backend, packed) combination and a
+    ragged (non-sublane-aligned) prompt length."""
+    cfg, params = _model(t)
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering=ordering)
+    seq = _tokens(13)
+    logits, state = engine.prefill(plan, seq)
+    np.testing.assert_array_equal(np.asarray(logits),
+                                  np.asarray(engine.apply(plan, seq)))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    for _ in range(3):
+        step_logits, state = engine.decode_step(plan, state, tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+        ref = engine.apply(plan, seq)[:, -1]
+        np.testing.assert_array_equal(np.asarray(step_logits), np.asarray(ref))
+        tok = jnp.argmax(step_logits, axis=-1).astype(jnp.int32)
+    assert int(state.pos) == seq.shape[1]
+
+
+@pytest.mark.parametrize("backend", ["jnp", "jnp+packed"])
+def test_decode_prompt_length_sweep(backend):
+    """Prefill+step across prompt lengths: 1 (minimum), sublane-ragged (5,
+    13), aligned (8, 16) -- each bit-exact vs the full forward after one
+    step.  The chunked-linear prefill rides its scan at every length (chunk
+    boundaries themselves are swept in the direct step tests)."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering="linear")
+    for s in (1, 5, 8, 13, 16):
+        seq = _tokens(s, seed=s)
+        logits, state = engine.prefill(plan, seq)
+        np.testing.assert_array_equal(np.asarray(logits),
+                                      np.asarray(engine.apply(plan, seq)))
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        step_logits, state = engine.decode_step(plan, state, tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(step_logits), np.asarray(engine.apply(plan, seq)[:, -1]))
+        assert int(state.pos) == s + 1
+
+
+def test_decode_matches_hand_inlined_oracle():
+    """Chained to the PR-4 lockdown: step logits equal the hand-inlined
+    ``spiking_lm.forward`` oracle, not just the plan executor."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, ordering="linear")
+    seq = _tokens(10)
+    logits, state = engine.prefill(plan, seq)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    for _ in range(2):
+        step_logits, state = engine.decode_step(plan, state, tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+        ref = slm.forward(params, {"tokens": seq}, cfg, ordering="linear")
+        np.testing.assert_array_equal(np.asarray(step_logits),
+                                      np.asarray(ref[:, -1]))
+        tok = jnp.argmax(step_logits, axis=-1).astype(jnp.int32)
+
+
+def test_decode_step_jit_and_empty_prompt():
+    """The jitted step matches eager, and decode can start from the zero
+    state (``decode_state_init``) -- an empty prefix is just pos=0."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg)
+    step = jax.jit(engine.make_decode_step_fn(plan))
+    state0 = engine.decode_state_init(plan.meta, BATCH)
+    assert int(state0.pos) == 0
+    tok = _tokens(1)[:, 0]
+    want, st_e = engine.decode_step(plan, state0, tok)
+    got, st_j = step(plan.params, state0, tok)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(
+        np.asarray(engine.apply(plan, tok[:, None])[:, -1]), np.asarray(want))
+    assert int(st_e.pos) == int(st_j.pos) == 1
+
+
+# -- hypothesis state-carry property -------------------------------------------
+
+def test_state_carry_property():
+    """prefill(prefix) then k decode steps == prefill(prefix + k tokens):
+    same DecodeState (every layer's K^T V bitplanes AND pos) and same
+    last-position logits -- the invariant that makes long-running decode
+    trustworthy.  The IAND skip context needs no carry (it is the token's own
+    residual, recomputed in-step), which this equality proves: any missing
+    cross-token memory would desynchronise the states."""
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        num_layers=st.integers(1, 2),
+        dh=st.sampled_from([8, 16]),
+        t=st.sampled_from([1, 4, 8]),
+        prefix=st.integers(1, 9),
+        k=st.integers(1, 4),
+        ordering=st.sampled_from(["quadratic", "linear"]),
+        backend=st.sampled_from(["jnp", "jnp+packed"]),
+    )
+    def check(num_layers, dh, t, prefix, k, ordering, backend):
+        heads = 2
+        cfg = _cfg(t=t).replace(num_layers=num_layers, d_model=dh * heads,
+                                num_heads=heads, d_ff=2 * dh * heads,
+                                vocab_size=64)
+        params = slm.init_spiking_lm(KEY, cfg)
+        plan = engine.compile_plan(params, None, cfg, backend=backend,
+                                   ordering=ordering)
+        seq = jax.random.randint(jax.random.PRNGKey(prefix + k),
+                                 (1, prefix + k), 0, cfg.vocab_size)
+        logits_full, state_full = engine.prefill(plan, seq)
+        _, state = engine.prefill(plan, seq[:, :prefix])
+        for i in range(k):
+            logits, state = engine.decode_step(plan, state, seq[:, prefix + i])
+        assert int(state.pos) == int(state_full.pos) == prefix + k
+        for got, want in zip(state.kv, state_full.kv):
+            np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+        np.testing.assert_array_equal(np.asarray(logits),
+                                      np.asarray(logits_full[:, -1]))
+
+    check()
+
+
+# -- the token loop never re-scores the prefix ---------------------------------
+
+def _jaxpr_elems(fn, *args):
+    """Total elements across every intermediate of ``fn``'s jaxpr (nested
+    jaxprs included): the size of the computation, where the op histogram
+    alone is shape-blind."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return sum(v.aval.size for eqn in analysis.iter_eqns(closed.jaxpr)
+               for v in eqn.outvars)
+
+
+def test_decode_step_jaxpr_flat_in_prefix_length():
+    """Op-count acceptance check: the decode step's jaxpr (op histogram AND
+    total intermediate elements) is IDENTICAL whatever prefix length built
+    the state -- per-token cost is O(d^2), flat in S -- while the
+    full-forward executor the old serve loop re-invoked per token grows with
+    every generated token."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, ordering="linear")
+    step_fn = engine.make_decode_step_fn(plan)
+    tok = _tokens(1)[:, 0]
+    hists, sizes = [], []
+    for s in (8, 24):
+        _, state = engine.prefill(plan, _tokens(s))
+        hists.append(analysis.op_histogram(step_fn, plan.params, state, tok))
+        sizes.append(_jaxpr_elems(step_fn, plan.params, state, tok))
+    assert hists[0] == hists[1]
+    assert sizes[0] == sizes[1]
+    # falsifiable form: no axis of the prefix length (24 collides with no
+    # model dimension) appears anywhere in the step jaxpr -- a step that
+    # re-scored the prefix or carried the prompt would materialise one
+    _, state24 = engine.prefill(plan, _tokens(24))
+    assert 24 not in analysis.jaxpr_dims(step_fn, plan.params, state24, tok)
+    full = [_jaxpr_elems(engine.make_apply_fn(plan), plan.params, _tokens(s))
+            for s in (8, 24)]
+    assert full[0] < full[1]        # re-scoring cost grows with the prefix
+    assert sizes[0] < full[0]       # one step is smaller than ANY re-score
+
+
+def test_serve_spiking_lm_never_full_forward(monkeypatch):
+    """Acceptance: the serve token loop runs prefill + steps only -- the
+    full-forward executor (``engine.execute._execute``) is never invoked."""
+    import repro.engine.execute as ex
+    from repro.launch.serve import serve_spiking_lm
+
+    calls = {"n": 0}
+    orig = ex._execute
+
+    def counting(*a, **kw):
+        calls["n"] += 1
+        return orig(*a, **kw)
+
+    monkeypatch.setattr(ex, "_execute", counting)
+    done = serve_spiking_lm("llama3.2-1b_smoke", num_requests=2, prompt_len=6,
+                            max_new=3, slots=2, verbose=False)
+    assert len(done) == 2
+    assert calls["n"] == 0
+
+
+def test_serve_spiking_lm_greedy_matches_full_forward_reference():
+    """Greedy-token-sequence equality through ``serve_spiking_lm``: the
+    prefill+step loop reproduces a teacher-forced full-forward reference
+    decode on the hand-inlined spiking_lm graph (linear ordering -- the
+    500k-token serving configuration)."""
+    from repro.data.pipeline import DataConfig, make_batch
+    from repro.launch.serve import serve_spiking_lm, spiking_lm_config
+
+    n_req, p_len, max_new = 3, 8, 4
+    done = serve_spiking_lm(
+        "llama3.2-1b_smoke", num_requests=n_req, prompt_len=p_len,
+        max_new=max_new, slots=2, backend="jnp", ordering="linear",
+        verbose=False)
+    assert len(done) == n_req
+
+    cfg = spiking_lm_config("llama3.2-1b_smoke")
+    params = slm.init_spiking_lm(jax.random.PRNGKey(0), cfg)
+    dcfg = DataConfig(seed=0, vocab_size=cfg.vocab_size, seq_len=p_len,
+                      global_batch=n_req)
+    seq = jnp.asarray(make_batch(dcfg, 0)["tokens"])
+    outs = []
+    for _ in range(max_new):
+        logits = slm.forward(params, {"tokens": seq}, cfg, ordering="linear")
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        outs.append(tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+    ref = np.asarray(jnp.stack(outs, axis=1))
+    got = np.stack([gen for _, gen in sorted(done)])
+    np.testing.assert_array_equal(got, ref)
+
+
+# -- packed boundary survives decode -------------------------------------------
+
+def test_decode_never_unpacks_under_closed_boundary(monkeypatch):
+    """With the packed Pallas route closing the boundary, prefill + steps
+    never call ``packing.unpack``: q/k/v words feed the decode state update
+    directly (in-register shift-and-mask), and logits still equal the dense
+    jnp decode bit-for-bit... via the plan equivalence, exactly."""
+    cfg, params = _model(8)
+    seq = _tokens(9)
+    ref_plan = engine.compile_plan(params, None, cfg)
+    ref_logits, ref_state = engine.prefill(ref_plan, seq)
+
+    def boom(*a, **kw):
+        raise AssertionError("packing.unpack called in the decode path")
+
+    monkeypatch.setattr(packing, "unpack", boom)
+    plan = engine.compile_plan(params, None, cfg,
+                               backend=PALLAS_PACKED_KERNEL)
+    logits, state = engine.prefill(plan, seq)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    for got, want in zip(state.kv, ref_state.kv):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    step_logits, _ = engine.decode_step(plan, state, tok)
+    monkeypatch.undo()
+    ref_step, _ = engine.decode_step(ref_plan, ref_state, tok)
+    np.testing.assert_array_equal(np.asarray(step_logits),
+                                  np.asarray(ref_step))
+
+
+# -- decode entry point, state geometry, traffic -------------------------------
+
+def test_plan_meta_decode_entry():
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg)
+    entry = plan.meta.decode
+    dh = cfg.d_model // cfg.num_heads
+    assert entry.state_shapes(BATCH) == tuple(
+        (8, BATCH, cfg.num_heads, dh, dh) for _ in range(cfg.num_layers))
+    assert entry.state_bytes(1) == 4 * cfg.num_layers * 8 * cfg.num_heads * dh * dh
+    state = engine.decode_state_init(plan.meta, BATCH)
+    assert tuple(s.shape for s in state.kv) == entry.state_shapes(BATCH)
+    stats = engine.plan_stats(plan)
+    assert stats["decode_entry"] and stats["decode_state_bytes"] == entry.state_bytes(1)
+
+
+def test_vision_plans_have_no_decode_entry():
+    from repro.core import spikformer as sf
+
+    vcfg = sf.SpikformerConfig(embed_dim=64, num_layers=1, num_heads=4, t=4)
+    vp, vs = sf.init(KEY, vcfg)
+    plan = engine.compile_plan(vp, vs, vcfg)
+    assert plan.meta.decode is None
+    assert not engine.plan_stats(plan)["decode_entry"]
+    with pytest.raises(ValueError, match="LM-plan"):
+        engine.make_prefill_fn(plan)
+    with pytest.raises(ValueError, match="LM-plan"):
+        engine.make_decode_step_fn(plan)
+
+
+def test_decode_state_layer_count_validated():
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg)
+    state = engine.decode_state_init(plan.meta, BATCH)
+    bad = engine.DecodeState(kv=state.kv[:1], pos=state.pos)
+    with pytest.raises(ValueError, match="layer states"):
+        engine.decode_step(plan, bad, _tokens(1)[:, 0])
+
+
+def test_lm_decode_traffic_flat_and_priced():
+    """Per-token decode traffic is independent of any sequence length (there
+    is no S in the computation at all) and way below one full forward; the
+    closed packed route prices q/k/v words packed, others dense."""
+    cfg = _cfg(t=8)
+    tr = analysis.lm_decode_traffic(cfg)
+    full = analysis.lm_spike_traffic(cfg, seq_len=64)
+    per_token_edges = analysis.lm_spike_traffic(cfg, seq_len=1)
+    assert tr["dense_bytes"] == per_token_edges["dense_bytes"]
+    assert tr["dense_bytes_per_step"] < full["dense_bytes"]
+    dh = cfg.d_model // cfg.num_heads
+    assert tr["decode_state_bytes"] == (
+        4 * cfg.num_layers * cfg.spike_t * cfg.num_heads * dh * dh)
+    assert tr["state_bytes_per_step"] == 2 * tr["decode_state_bytes"]
+    closed = analysis.lm_decode_traffic(cfg, backend=PALLAS_PACKED_KERNEL)
+    assert closed["ssa_boundary_closed"]
+    assert closed["packed_bytes_per_step"] < tr["packed_bytes_per_step"]
+    assert closed["packed_bytes_ssa_dense"] == closed["packed_bytes"]
+
+
+# -- CI fast job ----------------------------------------------------------------
+
+def test_smoke_decode_state_carry_t4_32steps():
+    """CI smoke: small config, T=4, 32 decode steps -- the state-carry
+    invariant (step logits == full-forward logits at every position, final
+    state == prefill of the whole sequence) exercised on every push."""
+    cfg = _cfg(t=4).replace(num_layers=1, d_model=32, num_heads=2, d_ff=64,
+                            vocab_size=64)
+    params = slm.init_spiking_lm(KEY, cfg)
+    plan = engine.compile_plan(params, None, cfg, ordering="linear")
+    step = jax.jit(engine.make_decode_step_fn(plan))
+    seq = jax.random.randint(jax.random.PRNGKey(5), (1, 8), 0, cfg.vocab_size)
+    logits, state = engine.prefill(plan, seq)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    for _ in range(32):
+        step_logits, state = step(plan.params, state, tok)
+        seq = jnp.concatenate([seq, tok[:, None]], axis=1)
+        np.testing.assert_array_equal(
+            np.asarray(step_logits),
+            np.asarray(engine.apply(plan, seq)[:, -1]))
+        tok = jnp.argmax(step_logits, axis=-1).astype(jnp.int32)
+    _, state_full = engine.prefill(plan, seq)
+    assert int(state.pos) == int(state_full.pos) == 40
+    for got, want in zip(state.kv, state_full.kv):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
