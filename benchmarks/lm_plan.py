@@ -28,9 +28,9 @@ from repro.models.lm import get_config
 BATCH, SEQ = 4, 64
 LONG_SEQ = 524_288            # the long_500k decode cell (analytic pricing)
 
-# the deploy backend that closes the SSA boundary (quadratic ordering); the
-# chunked-linear ordering stays open -- its packed operand path is a ROADMAP
-# item
+# the deploy backend that closes the SSA boundary -- for BOTH orderings:
+# quadratic rides the packed-operand SSA kernel, chunked-linear rides the
+# packed prefill/decode path (in-register shift-and-mask bitplane extraction)
 CLOSED_BACKEND = engine.Backend("pallas", matmul_kernel=True, packed=True)
 
 

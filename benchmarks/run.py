@@ -7,6 +7,9 @@ each benchmark's own detailed report.
   packed  -- bit-packed spike datapath: inter-layer bytes + wall clock
   lm      -- spiking-LM deploy plan: tokens/s + activation bytes, dense vs
              packed (RMSNorm folded, backend-dispatched causal SSA)
+  sparsity -- occupancy-map zero-word skipping: measured skip rates + decode
+             tokens/s dense vs packed vs sparse-packed on the trained-fixture
+             checkpoint (real activations)
   table1  -- IAND vs ADD residual training proxy (paper Table I)
   table2  -- serial vs parallel tick-batching weight traffic (Table II /
              the -43.2% weight-access claim)
@@ -35,7 +38,8 @@ def _run(name, fn):
     return out
 
 
-def write_bench_json(engine_result, packed_result, lm_result=None) -> None:
+def write_bench_json(engine_result, packed_result, lm_result=None,
+                     sparsity_result=None) -> None:
     """Persist the engine perf trajectory machine-readably: per-config
     tokens/s and inter-layer activation bytes, tracked across PRs.
 
@@ -127,6 +131,21 @@ def write_bench_json(engine_result, packed_result, lm_result=None) -> None:
             "packed_reduction_ssa_dense": lm["reduction_ssa_dense"],
             "packed_reduction_ssa_open": lm["reduction_ssa_open"],
         }
+    if sparsity_result is not None:
+        # sparsity rows (benchmarks/sparsity.py): measured occupancy skip
+        # rates + bare decode-step tokens/s on the trained-fixture checkpoint
+        # -- real activations, dense vs packed vs sparse-packed, logits
+        # asserted bit-exact across all three (bundling off)
+        for row in sparsity_result["rows"]:
+            entry = {k: row[k] for k in (
+                "t", "batch", "ordering",
+                "prompt_len", "bit_exact", "skip_rate", "word_zero_rate",
+                "occ_tile_zero_rate", "token_granule_zero_rate", "spike_rate",
+                "decode_tokens_per_s_dense", "decode_tokens_per_s_packed",
+                "decode_tokens_per_s_sparse_packed", "sparse_over_packed")}
+            entry["checkpoint"] = sparsity_result["checkpoint"]
+            entry["bundle"] = sparsity_result["bundle"]
+            configs[f"{row['config']}@sparse-T{row['t']}"] = entry
     BENCH_JSON.write_text(json.dumps({"configs": configs}, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
 
@@ -134,7 +153,7 @@ def write_bench_json(engine_result, packed_result, lm_result=None) -> None:
 def main() -> None:
     from benchmarks import (engine_fused_vs_naive, int8_decode, kernel_bench,
                             linear_attention_scaling, lm_plan, packed_traffic,
-                            perf_spiking, table1_iand_vs_add,
+                            perf_spiking, sparsity, table1_iand_vs_add,
                             table2_weight_traffic)
 
     print("name,us_per_call,derived")
@@ -143,7 +162,9 @@ def main() -> None:
     packed_result = _run("packed_traffic", packed_traffic.main)
     print()
     lm_result = _run("lm_plan", lm_plan.main)
-    write_bench_json(engine_result, packed_result, lm_result)
+    print()
+    sparsity_result = _run("sparsity", sparsity.main)
+    write_bench_json(engine_result, packed_result, lm_result, sparsity_result)
     print()
     _run("table2_weight_traffic", table2_weight_traffic.main)
     print()

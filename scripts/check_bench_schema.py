@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Bench-schema sanity: the sparse-row keys ``benchmarks/run.py`` persists to
+``BENCH_engine.json`` must match the keys ``README.md`` documents.
+
+Three-way check, no JAX needed (CI-cheap):
+
+  1. README documents exactly the keys the committed ``BENCH_engine.json``
+     sparse rows carry (documented == actual, both directions);
+  2. every documented key appears as a string literal in the benchmark
+     sources, so the docs cannot drift ahead of the writer either.
+
+README marks the documented list with ``bench-sparse-schema`` comment
+markers; every backticked identifier between them is a schema key.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def main() -> int:
+    readme = (ROOT / "README.md").read_text()
+    m = re.search(r"<!-- bench-sparse-schema:begin -->(.*?)"
+                  r"<!-- bench-sparse-schema:end -->", readme, re.S)
+    if not m:
+        print("README.md: bench-sparse-schema markers not found")
+        return 1
+    documented = set(re.findall(r"`([a-z_][a-z0-9_]*)`", m.group(1)))
+
+    configs = json.loads((ROOT / "BENCH_engine.json").read_text())["configs"]
+    rows = {k: v for k, v in configs.items() if "@sparse-T" in k}
+    if not rows:
+        print("BENCH_engine.json: no @sparse-T rows (run benchmarks/run.py)")
+        return 1
+
+    def collect(obj, acc):
+        # README documents nested keys too (the ``bundle`` sub-dict), so
+        # gather keys at every depth
+        if isinstance(obj, dict):
+            for k, v in obj.items():
+                acc.add(k)
+                collect(v, acc)
+
+    actual = set()
+    for row in rows.values():
+        collect(row, actual)
+
+    src = ((ROOT / "benchmarks" / "run.py").read_text()
+           + (ROOT / "benchmarks" / "sparsity.py").read_text())
+    unwritten = {k for k in documented if f'"{k}"' not in src}
+
+    ok = True
+    if actual - documented:
+        print(f"keys in BENCH_engine.json but not in README: "
+              f"{sorted(actual - documented)}")
+        ok = False
+    if documented - actual:
+        print(f"keys documented in README but absent from BENCH_engine.json: "
+              f"{sorted(documented - actual)}")
+        ok = False
+    if unwritten:
+        print(f"keys documented in README but never written by the "
+              f"benchmarks: {sorted(unwritten)}")
+        ok = False
+    if ok:
+        print(f"bench schema OK: {len(documented)} keys consistent across "
+              f"README, BENCH_engine.json ({len(rows)} sparse rows), and the "
+              "benchmark sources")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,110 @@
+"""Deterministic trained-checkpoint fixtures for engine/benchmark inputs.
+
+The sparse datapath's claims (skip rates, tokens/s) are meaningless on random
+spike trains -- random activations have neither the temporal front-loading
+nor the feature-level dead zones real trained models exhibit.  This module
+produces a small but genuinely *trained* spiking-LM checkpoint on demand:
+``llama3.2-1b_smoke``, one epoch of full-batch SGD on a fixed synthetic
+corpus, fixed seed throughout, saved via :mod:`repro.checkpoint.checkpoint`.
+
+Everything is deterministic on one host (fixed PRNG keys, no data shuffling,
+single device), so tests and benchmarks that build the fixture independently
+agree on its arrays; ``trained_lm_fixture`` also memoises on disk -- the
+first caller trains (~seconds at smoke scale), later callers restore.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import checkpoint as ckpt
+
+FIXTURE_ARCH = "llama3.2-1b_smoke"
+FIXTURE_SEED = 0
+FIXTURE_STEPS = 60          # one epoch over the synthetic corpus
+FIXTURE_BATCH = 4
+FIXTURE_SEQ = 64
+FIXTURE_LR = 0.5            # full-batch SGD at smoke scale; loss must drop
+
+
+def fixture_config(*, spike_t: int = 8):
+    """The fixture's ``ArchConfig``: the smoke-scale spiking LM.  ``spike_t``
+    only changes the deploy-time time-step count, not any parameter shape, so
+    one trained checkpoint serves every T (the T=8 vs T=32 benchmark rows
+    restore the same arrays)."""
+    from repro.models.lm import get_config
+
+    return get_config(FIXTURE_ARCH).replace(
+        spiking=True, spike_t=spike_t, num_heads=4, head_dim=None)
+
+
+def synthetic_batches(cfg, *, steps: int = FIXTURE_STEPS,
+                      batch: int = FIXTURE_BATCH, seq: int = FIXTURE_SEQ):
+    """The fixed synthetic corpus: ``steps`` token batches (B, S) drawn once
+    from a seeded PRNG with mild n-gram structure (each token is biased
+    toward a deterministic function of its predecessor, so one epoch of SGD
+    has real signal to fit -- pure uniform noise would train to a constant)."""
+    key = jax.random.PRNGKey(FIXTURE_SEED)
+    v = cfg.vocab_size
+    out = []
+    for i in range(steps):
+        k_base, k_mix, key = jax.random.split(jax.random.fold_in(key, i), 3)
+        base = jax.random.randint(k_base, (batch, seq), 0, v, dtype=jnp.int32)
+        # bigram structure: with p=0.75 the next token is (3*prev + 7) mod V
+        follow = (3 * base[:, :-1] + 7) % v
+        use = jax.random.bernoulli(k_mix, 0.75, follow.shape)
+        toks = base.at[:, 1:].set(jnp.where(use, follow, base[:, 1:]))
+        out.append({"tokens": toks})
+    return out
+
+
+def train_fixture_params(cfg=None, *, ordering: str = "quadratic"):
+    """Train the fixture from scratch: one pass of SGD over the synthetic
+    corpus.  Returns (params, history) with ``history`` the per-step losses
+    (first > last is asserted by the tier-1 suite)."""
+    from repro.models.spiking_lm import init_spiking_lm, loss_fn
+
+    cfg = cfg or fixture_config()
+    params = init_spiking_lm(jax.random.PRNGKey(FIXTURE_SEED + 1), cfg)
+
+    @jax.jit
+    def step(params, batch):
+        (loss, _), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg, ordering=ordering)
+        new = jax.tree_util.tree_map(
+            lambda p, g: p - FIXTURE_LR * g, params, grads)
+        return new, loss
+
+    history = []
+    for batch in synthetic_batches(cfg):
+        params, loss = step(params, batch)
+        history.append(float(loss))
+    return params, history
+
+
+@functools.lru_cache(maxsize=1)
+def _default_dir() -> str:
+    return os.path.join(os.path.expanduser("~"), ".cache", "repro_fixtures",
+                        f"{FIXTURE_ARCH}-seed{FIXTURE_SEED}")
+
+
+def trained_lm_fixture(ckpt_dir: str | None = None, *, force: bool = False):
+    """The trained-one-epoch spiking-LM checkpoint, building it if absent.
+
+    Returns ``(ckpt_dir, cfg)``; the directory is a standard
+    ``repro.checkpoint`` layout, so serving goes
+    ``compile_plan(init_spiking_lm(...), None, cfg, checkpoint=ckpt_dir)``.
+    """
+    cfg = fixture_config()
+    ckpt_dir = ckpt_dir or _default_dir()
+    if force or ckpt.latest_step(ckpt_dir) is None:
+        params, history = train_fixture_params(cfg)
+        ckpt.save(ckpt_dir, len(history), params,
+                  extra_meta={"arch": FIXTURE_ARCH, "seed": FIXTURE_SEED,
+                              "loss_first": history[0],
+                              "loss_last": history[-1]})
+    return ckpt_dir, cfg

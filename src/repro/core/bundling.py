@@ -1,0 +1,198 @@
+"""Row bundling: merge near-duplicate embedding spike trains at plan time.
+
+The spiking LM's encoding LIF sees each token only through its embedding-table
+row -- the drive is the row broadcast over the T time steps
+(``engine.execute._lm_embed_drive``), so a token's spike train is a pure
+function of its row.  Two rows whose trains agree on every (time step, feature)
+bit are indistinguishable to EVERYTHING downstream: blocks, attention, head.
+Rows whose trains differ in only a few bits are nearly so.
+
+This module exploits that at plan-compile time: it computes each row's packed
+train once (its *signature*), greedily clusters signatures by hamming
+distance, and rewrites bundled rows to their cluster representative's row --
+after which bundled tokens re-use one shared train.  On spike hardware this
+collapses redundant encoding work and raises train re-use in the datapath; in
+this repo it is the plan-level knob the sparse datapath's skip statistics
+respond to (identical trains tile identically).
+
+Correctness contract:
+
+* ``radius=0`` bundles only rows with *bit-identical* trains -- the transform
+  is then exactly logit-preserving, backend-independent (dedup, not
+  approximation).
+* ``radius>0`` is lossy; :func:`bundle` therefore walks radii **descending**
+  and accepts the largest radius whose **measured** max-abs logit error on a
+  probe batch stays within the caller's budget.  Radius 0 always satisfies
+  any budget >= 0, so the loop terminates with a valid plan.
+
+The accepted radius, bundle count, and measured error are recorded as a
+:class:`BundleInfo` on the plan's metadata and surfaced by
+``engine.plan.plan_stats`` -- the oracle check rides the plan, not the docs.
+
+Clustering is O(V^2) in vocabulary size (dense hamming matrix); it is meant
+for plan compilation of the smoke-scale configs, not the 128k-row production
+table.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class BundleInfo:
+    """Record of an applied row-bundling transform (hashable; lives on
+    ``PlanMeta.bundle``)."""
+
+    num_rows: int          # vocabulary rows considered
+    num_bundles: int       # distinct representatives after bundling
+    radius: int            # accepted hamming radius (0 = exact dedup)
+    budget: float          # caller's max-abs logit-error budget
+    logit_err: float       # MEASURED max-abs logit error on the probe batch
+
+    @property
+    def rows_merged(self) -> int:
+        return self.num_rows - self.num_bundles
+
+
+def row_train_table(plan) -> jax.Array:
+    """(W, V, D) uint32 words: row ``i``'s full packed encoding-LIF spike
+    train under the plan's own neuron parameters and dispatch route.
+
+    Runs the plan's embed drive + LIF on the whole table at once (tokens
+    ``0..V-1`` as one sequence; the encoding LIF is positionally independent,
+    so each row's train is what any real batch would produce for that token).
+    """
+    from repro.engine import execute
+
+    table = plan.params["embed"]["table"]
+    v = table.shape[0]
+    tokens = jnp.arange(v, dtype=jnp.int32)[None]          # (1, V)
+    drive = execute._lm_embed_drive(plan.meta, plan.params["embed"], tokens)
+    ps = execute._lif(plan.meta, drive, pack_output=True)
+    return ps.words.reshape(ps.words.shape[0], v, -1)      # (W, V, D)
+
+
+def attach_train_table(plan):
+    """Attach the precomputed per-row packed train table to an LM plan
+    (``params['embed']['train_words']``, (W, V, D) uint32).
+
+    This is the datapath face of train re-use: the encoding train is a pure
+    function of the embedding row, so the sparse decode step FETCHES a
+    generated token's train from this table instead of re-running the T-step
+    encoding LIF per token (``engine.execute._lm_decode_step``).  Costs
+    ``V * W * D`` words of plan memory -- ``ceil(T/32)/32`` of the f32
+    embedding table itself.
+    """
+    words = row_train_table(plan)
+    new_params = dict(plan.params)
+    new_params["embed"] = dict(plan.params["embed"])
+    new_params["embed"]["train_words"] = words
+    return dataclasses.replace(plan, params=new_params)
+
+
+def row_signatures(plan) -> jax.Array:
+    """(V, K) uint32 hamming signatures: :func:`row_train_table` flattened to
+    one word vector per row, for distance computation."""
+    words = row_train_table(plan)
+    v = words.shape[1]
+    return jnp.transpose(words, (1, 0, 2)).reshape(v, -1)
+
+
+def hamming_matrix(sigs: jax.Array) -> jax.Array:
+    """(V, V) int32 pairwise hamming distances between uint32 signatures --
+    the number of (time step, feature) bits on which two trains disagree."""
+    x = sigs[:, None, :] ^ sigs[None, :, :]
+    return jnp.sum(jax.lax.population_count(x), axis=-1, dtype=jnp.int32)
+
+
+def cluster_rows(sigs, radius: int) -> jax.Array:
+    """Greedy hamming clustering: returns ``reps`` (V,) int32 with
+    ``reps[i]`` the representative row of ``i``'s bundle.
+
+    First-fit in row order: the lowest-index unassigned row opens a bundle
+    and absorbs every still-unassigned row within ``radius`` of it.
+    Deterministic, and at ``radius=0`` it is exact duplicate-train dedup.
+    """
+    if radius < 0:
+        raise ValueError(f"radius must be >= 0, got {radius}")
+    d = np.asarray(hamming_matrix(jnp.asarray(sigs)))
+    v = d.shape[0]
+    reps = np.full(v, -1, dtype=np.int32)
+    for i in range(v):
+        if reps[i] >= 0:
+            continue
+        members = (reps < 0) & (d[i] <= radius)
+        reps[members] = i
+    return jnp.asarray(reps)
+
+
+def bundle_table(table: jax.Array, reps: jax.Array) -> jax.Array:
+    """Rewrite each row to its representative's row: bundled tokens now share
+    one embedding row, hence one bit-identical spike train."""
+    return jnp.take(table, reps, axis=0)
+
+
+def _with_table(plan, table, info: BundleInfo | None):
+    new_params = dict(plan.params)
+    new_params["embed"] = dict(plan.params["embed"])
+    new_params["embed"]["table"] = table
+    # a rewritten table invalidates any precomputed train table; the caller
+    # re-attaches (attach_train_table) once the final table is known
+    new_params["embed"].pop("train_words", None)
+    new_meta = dataclasses.replace(plan.meta, bundle=info)
+    return dataclasses.replace(plan, meta=new_meta, params=new_params)
+
+
+def bundle(plan, *, budget: float, probe_tokens=None, radii=None):
+    """Apply row bundling to an LM deploy plan under a measured logit-error
+    budget; returns the bundled plan (``plan.meta.bundle`` records what was
+    accepted).
+
+    ``budget`` is the max tolerated max-abs logit deviation vs the unbundled
+    plan on ``probe_tokens`` (default: one sequence covering every vocabulary
+    row).  ``radii`` overrides the descending candidate radii; the search
+    accepts the FIRST (largest) radius whose measured error fits, falling
+    back to radius 0 -- exact duplicate dedup, error 0.0 by construction.
+    """
+    from repro.engine import execute
+
+    if plan.meta.family != "lm":
+        raise ValueError("row bundling applies to LM embedding tables only")
+    if budget < 0:
+        raise ValueError(f"budget must be >= 0, got {budget}")
+    table = plan.params["embed"]["table"]
+    had_train_table = "train_words" in plan.params["embed"]
+    v = table.shape[0]
+    sigs = row_signatures(plan)
+    if probe_tokens is None:
+        probe_tokens = jnp.arange(v, dtype=jnp.int32)[None]
+    ref = execute.apply(plan, probe_tokens)
+    if radii is None:
+        # geometric sweep down from ~6% of the signature bits to exact dedup
+        top = max(1, sigs.shape[1] * 32 // 16)
+        radii = []
+        r = top
+        while r >= 1:
+            radii.append(r)
+            r //= 2
+        radii.append(0)
+    for radius in radii:
+        reps = cluster_rows(sigs, int(radius))
+        num_bundles = int(jnp.unique(reps).size)
+        if num_bundles == v and radius > 0:
+            continue                      # nothing merged; cheaper radius next
+        cand = _with_table(plan, bundle_table(table, reps), None)
+        err = float(jnp.max(jnp.abs(execute.apply(cand, probe_tokens) - ref)))
+        if err <= budget:
+            info = BundleInfo(num_rows=v, num_bundles=num_bundles,
+                              radius=int(radius), budget=float(budget),
+                              logit_err=err)
+            out = _with_table(plan, bundle_table(table, reps), info)
+            return attach_train_table(out) if had_train_table else out
+    raise AssertionError("radius-0 dedup must satisfy any budget >= 0")

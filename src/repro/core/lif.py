@@ -184,6 +184,7 @@ def lif(
     iand_skip=None,
     interpret: bool | None = None,
     pack_output: bool = False,
+    pack_occupancy: bool = False,
 ):
     """THE neuron dispatch: every LIF in the model and the deploy engine goes
     through this one entry point.
@@ -204,9 +205,16 @@ def lif(
       ``iand_skip`` must itself be a ``PackedSpikes`` -- the residual becomes
       the bitwise ``skip & ~spikes`` on words.  Inference-only (the packed
       train is not differentiable).
+    * ``pack_occupancy=True`` (requires ``pack_output``) attaches the
+      per-tile popcount occupancy map to the returned train as the pack
+      epilogue's last step (``packing.occupancy_map`` on the final words,
+      IAND included) -- the sparse datapath's skip index, computed once here
+      so every downstream consumer reads the map instead of the words.
     """
     from repro.core import packing
 
+    if pack_occupancy and not pack_output:
+        raise ValueError("pack_occupancy=True requires pack_output=True")
     if pack_output and iand_skip is not None:
         if not isinstance(iand_skip, packing.PackedSpikes):
             raise TypeError("pack_output=True requires a PackedSpikes iand_skip")
@@ -217,6 +225,11 @@ def lif(
     if not pack_output and isinstance(iand_skip, packing.PackedSpikes):
         raise TypeError("PackedSpikes iand_skip requires pack_output=True")
 
+    def _finish(ps):
+        # pack epilogue's last step: the occupancy map of the FINAL words
+        # (IAND applied), so the carried skip index always matches the train
+        return ps.with_occupancy() if pack_occupancy else ps
+
     if schedule == "serial":
         out = lif_serial(drive, theta=theta, lam=lam, reset=reset, surrogate=surrogate)
         if not pack_output:
@@ -224,21 +237,28 @@ def lif(
                 out = iand_skip * (1.0 - out)
             return out
         packed = packing.pack(out)
-        return packing.iand(iand_skip, packed) if iand_skip is not None else packed
+        return _finish(packing.iand(iand_skip, packed) if iand_skip is not None
+                       else packed)
     if schedule == "parallel":
         if use_kernel:
             from repro.kernels.lif_parallel import ops as lif_ops
 
             if pack_output:
                 if iand_skip is not None:
-                    words = lif_ops.lif_iand_pack_op(
+                    res = lif_ops.lif_iand_pack_op(
                         drive, iand_skip.words, theta=theta, lam=lam,
-                        reset=reset, chain_len=chain_len, interpret=interpret)
+                        reset=reset, chain_len=chain_len, interpret=interpret,
+                        occupancy=pack_occupancy)
                 else:
-                    words = lif_ops.lif_pack_op(
+                    res = lif_ops.lif_pack_op(
                         drive, theta=theta, lam=lam, reset=reset,
-                        chain_len=chain_len, interpret=interpret)
-                return packing.PackedSpikes(words=words, t=drive.shape[0])
+                        chain_len=chain_len, interpret=interpret,
+                        occupancy=pack_occupancy)
+                if pack_occupancy:  # map computed inside the op's jit region
+                    words, occ = res
+                    return packing.PackedSpikes(
+                        words=words, t=drive.shape[0], occ=occ)
+                return packing.PackedSpikes(words=res, t=drive.shape[0])
             if iand_skip is not None:
                 return lif_ops.lif_iand_op(
                     drive, iand_skip, theta=theta, lam=lam, reset=reset,
@@ -251,8 +271,8 @@ def lif(
                 drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
                 surrogate=surrogate)
             packed = packing.pack(out)
-            return (packing.iand(iand_skip, packed) if iand_skip is not None
-                    else packed)
+            return _finish(packing.iand(iand_skip, packed) if iand_skip is not None
+                           else packed)
         return lif_parallel(
             drive, theta=theta, lam=lam, reset=reset, chain_len=chain_len,
             surrogate=surrogate, iand_skip=iand_skip)

@@ -18,8 +18,17 @@ spike-level ops the deploy engine needs stay in the packed domain:
 * rate decoding: the per-neuron spike count over T is a popcount
   (:func:`spike_counts`), so the classification head never unpacks.
 
-:class:`PackedSpikes` is a pytree (words are the only leaf; ``t`` is static
-aux data), so packed activations flow through ``jax.jit`` executors unchanged.
+:class:`PackedSpikes` is a pytree (words -- and, under the sparse datapath,
+the occupancy map -- are the leaves; ``t`` is static aux data), so packed
+activations flow through ``jax.jit`` executors unchanged.
+
+Real spike trains are mostly zeros, so most words are the all-zero word.  The
+sparsity layer summarises that once at pack time: :func:`occupancy_map`
+popcounts each word plane in tiles of :data:`OCC_TILE` contiguous elements
+along the feature axis, giving a tiny uint32 map (4 bytes per 128 words) the
+sparse kernels consult to early-out all-zero word tiles without touching the
+words themselves (``repro.kernels`` sparse variants; skip-rate accounting in
+``repro.engine.analysis``).
 """
 
 from __future__ import annotations
@@ -30,6 +39,7 @@ import jax
 import jax.numpy as jnp
 
 WORD_BITS = 32
+OCC_TILE = 128       # elements per occupancy tile (one VREG lane row)
 
 
 def num_words(t: int) -> int:
@@ -47,21 +57,28 @@ class PackedSpikes:
     Bit ``t % 32`` of ``words[t // 32]`` is the spike at time step ``t``;
     bits at positions >= t (the ragged tail of the last word) are zero by
     construction -- :func:`iand` and :func:`spike_counts` rely on that.
+
+    ``occ`` is the optional occupancy map (:func:`occupancy_map`): per-tile
+    popcounts over :data:`OCC_TILE`-element feature tiles, computed once at
+    pack time (the LIF pack epilogues attach it under ``Backend.sparse``) and
+    carried through the pytree so sparse consumers can skip all-zero word
+    tiles without re-reading the words.
     """
 
     words: jax.Array          # uint32, (W,) + elem_shape
     t: int                    # static: time steps packed in the word axis
+    occ: jax.Array | None = None   # uint32, (W, *S[:-1], ceil(D/OCC_TILE))
 
     def __post_init__(self):
         if isinstance(self.words, jax.Array) and self.words.dtype != jnp.uint32:
             raise TypeError(f"packed words must be uint32, got {self.words.dtype}")
 
     def tree_flatten(self):
-        return (self.words,), self.t
+        return (self.words, self.occ), self.t
 
     @classmethod
     def tree_unflatten(cls, t, children):
-        return cls(words=children[0], t=t)
+        return cls(words=children[0], t=t, occ=children[1])
 
     @property
     def elem_shape(self) -> tuple[int, ...]:
@@ -72,9 +89,24 @@ class PackedSpikes:
         return (self.t,) + self.elem_shape
 
     def reshape_elems(self, *shape) -> "PackedSpikes":
-        """Reshape the element axes, keeping the word axis."""
+        """Reshape the element axes, keeping the word axis.  The occupancy
+        map is tiled over the LAST element axis, so it only survives reshapes
+        that keep that axis intact; otherwise it is recomputed."""
         w = self.words.shape[0]
-        return PackedSpikes(self.words.reshape((w,) + tuple(shape)), self.t)
+        words = self.words.reshape((w,) + tuple(shape))
+        occ = self.occ
+        if occ is not None:
+            if shape and words.shape[-1] == self.words.shape[-1]:
+                occ = occ.reshape((w,) + tuple(shape[:-1]) + (occ.shape[-1],))
+            else:
+                occ = occupancy_map(words)
+        return PackedSpikes(words, self.t, occ=occ)
+
+    def with_occupancy(self) -> "PackedSpikes":
+        """This train with its occupancy map attached (no-op if present)."""
+        if self.occ is not None:
+            return self
+        return PackedSpikes(self.words, self.t, occ=occupancy_map(self.words))
 
 
 def _bit_shifts(n: int, ndim: int) -> jax.Array:
@@ -82,10 +114,13 @@ def _bit_shifts(n: int, ndim: int) -> jax.Array:
     return jnp.arange(n, dtype=jnp.uint32).reshape((n,) + (1,) * (ndim - 1))
 
 
-def pack(spikes: jax.Array, t: int | None = None) -> PackedSpikes:
+def pack(spikes: jax.Array, t: int | None = None, *,
+         occupancy: bool = False) -> PackedSpikes:
     """Pack a (T, *S) spike tensor (any dtype, values in {0, 1}) into words.
 
     Nonzero is treated as a spike; the ragged tail of the last word is zero.
+    ``occupancy`` also computes the per-tile popcount occupancy map at pack
+    time (the sparse datapath's skip index).
     """
     if spikes.ndim < 1:
         raise ValueError("spikes must have a leading time axis")
@@ -99,7 +134,36 @@ def pack(spikes: jax.Array, t: int | None = None) -> PackedSpikes:
         shifts = _bit_shifts(chunk.shape[0], bits.ndim)
         # bits occupy disjoint positions, so a sum is a bitwise OR
         words.append(jnp.sum(chunk << shifts, axis=0, dtype=jnp.uint32))
-    return PackedSpikes(words=jnp.stack(words, axis=0), t=t_total)
+    stacked = jnp.stack(words, axis=0)
+    return PackedSpikes(words=stacked, t=t_total,
+                        occ=occupancy_map(stacked) if occupancy else None)
+
+
+def occupancy_map(words: jax.Array, tile: int = OCC_TILE) -> jax.Array:
+    """Per-tile popcounts of a (W, *S) word tensor: (W, *S[:-1], n_tiles)
+    uint32, where tile ``i`` covers elements ``[i*tile, (i+1)*tile)`` of the
+    last (feature) axis -- a ragged tail counts as a short tile.
+
+    This is the sparse datapath's skip index: a zero entry proves the whole
+    word tile carries no spike at any of its time steps, so a consumer may
+    skip it without reading the words (the contribution of an all-zero spike
+    tile to any of the engine's contractions is exactly 0.0).  Summed over
+    all tiles and word planes, the map equals :func:`spike_counts` summed
+    over elements -- the invariant the property tests pin.
+    """
+    if words.ndim < 1:
+        raise ValueError("words must have at least the word axis")
+    if words.ndim == 1:
+        words = words[:, None]               # scalar elements: one lane
+    d = words.shape[-1]
+    pad = (-d) % tile
+    if pad:
+        widths = [(0, 0)] * words.ndim
+        widths[-1] = (0, pad)
+        words = jnp.pad(words, widths)
+    counts = jax.lax.population_count(words)
+    grouped = counts.reshape(words.shape[:-1] + (-1, tile))
+    return jnp.sum(grouped, axis=-1, dtype=jnp.uint32)
 
 
 def unpack(ps: PackedSpikes, dtype=jnp.float32) -> jax.Array:
@@ -120,7 +184,9 @@ def iand(skip: PackedSpikes, spikes: PackedSpikes) -> PackedSpikes:
     """
     if skip.t != spikes.t:
         raise ValueError(f"time-step mismatch: skip t={skip.t}, spikes t={spikes.t}")
-    return PackedSpikes(words=skip.words & ~spikes.words, t=skip.t)
+    words = skip.words & ~spikes.words
+    occ = occupancy_map(words) if skip.occ is not None else None
+    return PackedSpikes(words=words, t=skip.t, occ=occ)
 
 
 def spike_counts(ps: PackedSpikes) -> jax.Array:
@@ -140,3 +206,10 @@ def packed_nbytes(t: int, num_elems: int) -> int:
 def dense_nbytes(t: int, num_elems: int, itemsize: int = 4) -> int:
     """Inter-layer bytes of the same tensor moved dense (f32 by default)."""
     return t * num_elems * itemsize
+
+
+def occupancy_nbytes(t: int, num_elems: int, tile: int = OCC_TILE) -> int:
+    """Bytes of the occupancy map riding alongside a packed (t, num_elems)
+    spike tensor: one uint32 per word plane per OCC_TILE elements -- the
+    sparse datapath's metadata overhead (1/128 of the packed words)."""
+    return num_words(t) * (-(-num_elems // tile)) * 4

@@ -223,3 +223,161 @@ def ssa_kv_state_packed(kw, vw, *, t: int):
     (T, ..., Dh, Dh) K^T V state, words consumed directly (in-register
     shift-and-mask, as in :func:`ssa_linear_decode_step_packed`)."""
     return ssa_kv_state(_bitplanes(kw, t), _bitplanes(vw, t))
+
+
+def _pad_words_s(words, chunk: int):
+    """Zero-pad the token axis (axis 3) of (W, B, H, S, Dh) words up to a
+    chunk multiple -- exact: the all-zero word is the all-zero spike train."""
+    s = words.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        widths = [(0, 0)] * words.ndim
+        widths[3] = (0, pad)
+        words = jnp.pad(words, widths)
+    return words, s
+
+
+def ssa_causal_linear_with_state_packed(qw, kw, vw, *, t: int,
+                                        scale: float = 0.125,
+                                        chunk: int = 512):
+    """Packed-operand counterpart of :func:`ssa_causal_linear_with_state`:
+    the chunked causal Q(K^T V) scan consuming uint32 bitplane words
+    (W, B, H, S, Dh) directly -> ``(drive (T, B, H, S, Dh), state)``.
+
+    Each chunk's q/k/v planes are shifted out in-register inside the scan
+    body (the same shift-and-mask the packed kernels do per-tile in VMEM) --
+    ``packing.unpack`` is never called, so the closed packed boundary now
+    covers linear-ordering PREFILL too: the q/k/v words are the operands the
+    long-context path reads from HBM, 1/min(t,32) of the dense trains.
+    Binary spikes keep every contraction exact integer arithmetic, so the
+    result is bit-identical to the dense scan at any chunking.
+    """
+    s = qw.shape[3]
+    chunk = min(chunk, s)
+    qp, _ = _pad_words_s(qw, chunk)
+    kp, _ = _pad_words_s(kw, chunk)
+    vp, _ = _pad_words_s(vw, chunk)
+    nc = qp.shape[3] // chunk
+    # (W, B, H, S, Dh) -> (nc, W, B, H, chunk, Dh): chunks lead for the scan
+    csplit = lambda x: x.reshape(
+        x.shape[:3] + (nc, chunk, x.shape[-1])).transpose(3, 0, 1, 2, 4, 5)
+    qc, kc, vc = csplit(qp), csplit(kp), csplit(vp)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(state, inp):
+        qw_i, kw_i, vw_i = inp
+        q_i, k_i, v_i = (_bitplanes(x, t) for x in (qw_i, kw_i, vw_i))
+        intra = jnp.einsum("tbhnd,tbhmd->tbhnm", q_i, k_i)
+        intra = jnp.where(mask, intra, 0.0)
+        y = jnp.einsum("tbhnm,tbhmd->tbhnd", intra, v_i)
+        y = y + jnp.einsum("tbhnd,tbhde->tbhne", q_i, state)
+        state = state + jnp.einsum("tbhmd,tbhme->tbhde", k_i, v_i)
+        return state, y
+
+    dh = qw.shape[-1]
+    state0 = jnp.zeros((t,) + qw.shape[1:3] + (dh, dh), jnp.float32)
+    state, ys = jax.lax.scan(step, state0, (qc, kc, vc))
+    out = ys.transpose(1, 2, 3, 0, 4, 5).reshape(
+        (t,) + qw.shape[1:3] + (nc * chunk, dh))[:, :, :, :s]
+    return out * scale, state
+
+
+def ssa_linear_packed(qw, kw, vw, *, t: int, scale: float = 0.125,
+                      causal: bool = False, chunk: int = 512):
+    """Linear-ordering Q(K^T V) SSA on packed q/k/v words (W, B, H, S, Dh) ->
+    dense drive (T, B, H, S, Dh), words consumed in-register (no
+    ``packing.unpack``).  ``causal`` rides the packed chunked scan."""
+    if causal:
+        out, _ = ssa_causal_linear_with_state_packed(qw, kw, vw, t=t,
+                                                     scale=scale, chunk=chunk)
+        return out
+    kv = ssa_kv_state_packed(kw, vw, t=t)
+    out = jnp.einsum("tbhnd,tbhde->tbhne", _bitplanes(qw, t), kv)
+    return out * scale
+
+
+# -- sparsity-aware variants ---------------------------------------------------
+#
+# Real spike trains are mostly zeros; these variants consult per-bitplane
+# occupancy (one popcount reduce over the words -- tiny next to the skipped
+# contractions) and EARLY-OUT planes that provably contribute nothing.  Every
+# skip is exact: a bitplane of the SSA output is zero whenever its q, k or v
+# plane carries no spike, and planes are computed independently, so skipping
+# never re-associates a surviving plane's arithmetic -- bit-exact vs the dense
+# path by construction.
+
+
+def plane_occupancy(words, *, t: int):
+    """(W, *S) words -> (T,) uint32 spike counts per bitplane (time step)."""
+    occs = []
+    for ti in range(t):
+        wi, bit = divmod(ti, 32)
+        occs.append(jnp.sum((words[wi] >> jnp.uint32(bit)) & jnp.uint32(1),
+                            dtype=jnp.uint32))
+    return jnp.stack(occs)
+
+
+def ssa_packed_sparse(qw, kw, vw, *, t: int, scale: float = 0.125,
+                      causal: bool = False):
+    """Quadratic-ordering SSA on packed words with per-bitplane early-out:
+    plane ``t`` of the drive is computed only when q, k and v all spike at
+    time step ``t`` somewhere (``lax.cond``, so a dead plane skips both
+    contractions AND its unpack); dead planes are written as exact zeros."""
+    b, h, n, dh = qw.shape[1], qw.shape[2], qw.shape[3], qw.shape[4]
+    m = kw.shape[3]
+    occ_q = plane_occupancy(qw, t=t)
+    occ_k = plane_occupancy(kw, t=t)
+    occ_v = plane_occupancy(vw, t=t)
+    mask = jnp.tril(jnp.ones((n, m), bool)) if causal else None
+
+    def plane(ti):
+        wi, bit = divmod(ti, 32)
+        unpack = lambda w: ((w[wi] >> jnp.uint32(bit))
+                            & jnp.uint32(1)).astype(jnp.float32)
+
+        def live():
+            qt, kt, vt = unpack(qw), unpack(kw), unpack(vw)
+            scores = jnp.einsum("bhnd,bhmd->bhnm", qt, kt)
+            if mask is not None:
+                scores = jnp.where(mask, scores, 0.0)
+            return jnp.einsum("bhnm,bhmd->bhnd", scores, vt) * scale
+
+        alive = (occ_q[ti] > 0) & (occ_k[ti] > 0) & (occ_v[ti] > 0)
+        return jax.lax.cond(
+            alive, live, lambda: jnp.zeros((b, h, n, dh), jnp.float32))
+
+    return jnp.stack([plane(ti) for ti in range(t)], axis=0)
+
+
+def ssa_linear_decode_step_packed_sparse(state, qw, kw, vw, *, t: int,
+                                         scale: float = 0.125):
+    """Sparse packed decode step: occupancy-gated word liveness predicates
+    the state update before any bit becomes arithmetic.
+
+    Per packed word, or-reduced k/v liveness is two uint32 reductions:
+    ``ork & orv == 0`` proves that NO (k, v) pair of that word coincides on
+    any of its 32 time planes, i.e. the word's entire ``k_t^T v_t`` slab is
+    zero.  Dead k words are masked at the WORD level via ``jnp.where`` --
+    the jnp mirror of the Pallas predicated tile body (where the same test
+    early-outs the whole 32-plane slab) -- so the mask costs O(words), not
+    O(words * Dh^2), and the surviving words ride the exact in-register
+    shift-and-mask route of :func:`ssa_linear_decode_step_packed`.
+
+    Masking ``kw`` where v is silent is exact: the state increment is
+    ``k_t^T v_t``, which is zero whenever either factor's plane is zero.
+    With a single word (t <= 32) there is no sub-granule to predicate --
+    the one or-word could only prove the WHOLE step silent -- so the mask
+    is elided and the words ride the in-register route bare (the skip
+    granule is the 32-plane word; a granule needs a peer to be skipped
+    against).  Bit-exact vs :func:`ssa_linear_decode_step` on unpacked
+    operands: every contraction is integer arithmetic on {0, 1}.
+    """
+    if kw.shape[0] > 1:
+        elem_axes = tuple(range(1, kw.ndim))
+        ork = jax.lax.reduce(kw, jnp.uint32(0), jax.lax.bitwise_or, elem_axes)
+        orv = jax.lax.reduce(vw, jnp.uint32(0), jax.lax.bitwise_or, elem_axes)
+        live = (ork & orv).reshape((-1,) + (1,) * (kw.ndim - 1))  # (W, 1, ...)
+        kw = jnp.where(live != 0, kw, jnp.uint32(0))
+    return ssa_linear_decode_step(
+        state, _bitplanes(qw, t), _bitplanes(kw, t), _bitplanes(vw, t),
+        scale=scale)

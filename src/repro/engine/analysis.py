@@ -10,6 +10,7 @@ and :func:`bn_op_count` reports how many BN-signature ops (``rsqrt`` /
 
 from __future__ import annotations
 
+import math
 from collections import Counter
 
 import jax
@@ -114,7 +115,8 @@ def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
 
     boundary_closed = _boundary_closed(backend, cfg.attn_ordering)
     return _price_edges(spike_edges(cfg, img_size=img_size), cfg.t,
-                        batch=batch, boundary_closed=boundary_closed)
+                        batch=batch, boundary_closed=boundary_closed,
+                        sparse=_is_sparse(backend))
 
 
 def lm_spike_traffic(cfg, *, seq_len: int, batch: int = 1, backend=None,
@@ -126,7 +128,8 @@ def lm_spike_traffic(cfg, *, seq_len: int, batch: int = 1, backend=None,
 
     boundary_closed = _boundary_closed(backend, ordering)
     return _price_edges(lm_spike_edges(cfg, seq_len=seq_len), cfg.spike_t,
-                        batch=batch, boundary_closed=boundary_closed)
+                        batch=batch, boundary_closed=boundary_closed,
+                        sparse=_is_sparse(backend))
 
 
 def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
@@ -146,7 +149,8 @@ def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
 
     closed = backend is not None and resolve(backend).closes_ssa_boundary
     priced = _price_edges(lm_decode_spike_edges(cfg), cfg.spike_t,
-                          batch=batch, boundary_closed=closed)
+                          batch=batch, boundary_closed=closed,
+                          sparse=_is_sparse(backend))
     dh = cfg.d_model // cfg.num_heads
     state_bytes = 4 * cfg.num_layers * cfg.spike_t * batch * cfg.num_heads * dh * dh
     priced["decode_state_bytes"] = state_bytes
@@ -158,15 +162,26 @@ def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
     return priced
 
 
+def _is_sparse(backend) -> bool:
+    from repro.engine.backend import resolve
+
+    return backend is not None and resolve(backend).sparse
+
+
 def _boundary_closed(backend, ordering: str) -> bool:
     from repro.engine.backend import resolve
 
     if backend is None:
         return False
-    return resolve(backend).closes_ssa_boundary and ordering == "quadratic"
+    # both orderings close under the packed kernel route: quadratic through
+    # ``packed_ssa_op``, linear through the in-register shift-and-mask scans
+    # (``ssa_linear_packed`` / ``ssa_causal_linear_with_state_packed``)
+    return (resolve(backend).closes_ssa_boundary
+            and ordering in ("quadratic", "linear"))
 
 
-def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool) -> dict:
+def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool,
+                 sparse: bool = False) -> dict:
     from repro.core import packing
 
     per_edge = [{
@@ -175,14 +190,16 @@ def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool) -> dict:
         "ssa_boundary": e.ssa_boundary,
         "dense_bytes": packing.dense_nbytes(t, e.elems * batch),
         "packed_bytes": packing.packed_nbytes(t, e.elems * batch),
+        "occupancy_bytes": packing.occupancy_nbytes(t, e.elems * batch),
     } for e in edges]
     dense = sum(e["dense_bytes"] for e in per_edge)
     packed = sum(e["packed_bytes"] for e in per_edge)
+    occupancy = sum(e["occupancy_bytes"] for e in per_edge)
     packed_ssa_dense = sum(
         e["dense_bytes"] if e["ssa_boundary"] and not boundary_closed
         else e["packed_bytes"]
         for e in per_edge)
-    return {
+    out = {
         "t": t,
         "batch": batch,
         "ssa_boundary_closed": boundary_closed,
@@ -192,4 +209,83 @@ def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool) -> dict:
         "reduction": dense / packed,
         "packed_bytes_ssa_dense": packed_ssa_dense,
         "reduction_ssa_dense": dense / packed_ssa_dense,
+    }
+    if sparse:
+        # the sparse datapath moves the SAME packed words plus the occupancy
+        # metadata (1/128 of the words); its win is skipped COMPUTE, priced by
+        # the measured skip rates of ``sparsity_report``, not here
+        out["occupancy_bytes"] = occupancy
+        out["packed_sparse_bytes"] = packed + occupancy
+        out["reduction_sparse"] = dense / (packed + occupancy)
+    return out
+
+
+def sparsity_report(plan, batch) -> dict:
+    """MEASURED occupancy of every packed spike train a plan's forward moves
+    on ``batch`` (run eagerly through ``engine.execute.capture_spikes``).
+
+    Reports, per LIF tap and aggregated, the skip rates each sparse consumer
+    sees on these real activations:
+
+    * ``word_zero_rate`` -- fraction of uint32 words that are all-zero (the
+      finest exact-skip granule);
+    * ``occ_tile_zero_rate`` -- fraction of ``packing.OCC_TILE``-element
+      occupancy tiles that are all-zero (what the sparse Pallas GEMM skips);
+    * ``token_granule_zero_rate`` -- fraction of 8-token granules with no
+      spike at any feature/time step (what the jnp sparse GEMM route skips);
+    * ``spike_rate`` -- plain spike density over (T, elements).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import packing
+    from repro.engine import execute
+
+    with execute.capture_spikes() as taps:
+        execute.apply(plan, batch)
+    if not taps:
+        raise ValueError(
+            "plan produced no packed spike trains -- sparsity_report needs a "
+            "packed backend (Backend.packed=True)")
+    per_tap = []
+    tot = {"words": 0, "zero_words": 0, "tiles": 0, "zero_tiles": 0,
+           "granules": 0, "zero_granules": 0, "spikes": 0, "slots": 0}
+    for ps in taps:
+        words = ps.words
+        occ = ps.occ if ps.occ is not None else packing.occupancy_map(words)
+        # token granules: rows of the (tokens, features) view, all word planes
+        flat = words.reshape(words.shape[0], -1, words.shape[-1])
+        row_alive = jnp.any(flat != 0, axis=(0, 2))             # per token row
+        g = 8
+        row_alive_p = jnp.pad(row_alive, (0, (-row_alive.shape[0]) % g))
+        gran_alive = jnp.any(row_alive_p.reshape(-1, g), axis=1)
+        n_words = int(words.size)
+        n_zero_words = int((words == 0).sum())
+        n_tiles = int(occ.size)
+        n_zero_tiles = int((occ == 0).sum())
+        n_gran = int(gran_alive.size)
+        n_zero_gran = int((~gran_alive).sum())
+        n_spikes = int(packing.spike_counts(ps).sum())
+        n_slots = ps.t * math.prod(ps.elem_shape)
+        per_tap.append({
+            "shape": tuple(int(s) for s in ps.dense_shape),
+            "word_zero_rate": n_zero_words / n_words,
+            "occ_tile_zero_rate": n_zero_tiles / n_tiles,
+            "token_granule_zero_rate": n_zero_gran / n_gran,
+            "spike_rate": n_spikes / n_slots,
+        })
+        tot["words"] += n_words
+        tot["zero_words"] += n_zero_words
+        tot["tiles"] += n_tiles
+        tot["zero_tiles"] += n_zero_tiles
+        tot["granules"] += n_gran
+        tot["zero_granules"] += n_zero_gran
+        tot["spikes"] += n_spikes
+        tot["slots"] += n_slots
+    return {
+        "num_taps": len(per_tap),
+        "taps": per_tap,
+        "word_zero_rate": tot["zero_words"] / tot["words"],
+        "occ_tile_zero_rate": tot["zero_tiles"] / tot["tiles"],
+        "token_granule_zero_rate": tot["zero_granules"] / tot["granules"],
+        "spike_rate": tot["spikes"] / tot["slots"],
     }

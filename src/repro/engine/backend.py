@@ -34,6 +34,7 @@ Backend, with no silent exemptions.
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
 
 import jax
@@ -48,10 +49,15 @@ class Backend:
     interpret: bool | None = None      # None = auto (interpret off-TPU)
     matmul_kernel: bool | None = None  # None = auto (on for compiled pallas)
     packed: bool = False               # bit-packed inter-layer spikes
+    sparse: bool = False               # occupancy-gated zero-word skipping
 
     def __post_init__(self):
         if self.kind not in ("jnp", "pallas"):
             raise ValueError(f"unknown backend kind: {self.kind}")
+        if self.sparse and not self.packed:
+            raise ValueError(
+                "Backend.sparse requires packed=True: occupancy maps are "
+                "pack-time metadata of the bit-packed datapath")
 
     @property
     def use_matmul_kernel(self) -> bool:
@@ -79,11 +85,14 @@ JNP = Backend("jnp")
 PALLAS = Backend("pallas")
 JNP_PACKED = Backend("jnp", packed=True)
 PALLAS_PACKED = Backend("pallas", packed=True)
+JNP_SPARSE = Backend("jnp", packed=True, sparse=True)
+PALLAS_SPARSE = Backend("pallas", packed=True, sparse=True)
 
 
 def resolve(spec) -> Backend:
     """Coerce user-facing specs into a Backend: Backend | "jnp" | "pallas" |
-    "jnp+packed" | "pallas+packed" | bool (legacy use_kernel) | None."""
+    "jnp+packed" | "pallas+packed" | "jnp+packed+sparse" (or the shorthand
+    "jnp+sparse", which implies packed) | bool (legacy use_kernel) | None."""
     if isinstance(spec, Backend):
         return spec
     if spec is None:
@@ -91,24 +100,38 @@ def resolve(spec) -> Backend:
     if isinstance(spec, bool):
         return PALLAS if spec else JNP
     if isinstance(spec, str):
-        kind, sep, flag = spec.partition("+")
-        if sep and flag != "packed":
-            raise ValueError(f"unknown backend flag: {flag!r} in {spec!r}")
-        return Backend(kind, packed=bool(sep))
+        kind, sep, rest = spec.partition("+")
+        flag_list = rest.split("+") if sep else []
+        if sep and (not kind or "" in flag_list):
+            raise ValueError(f"malformed backend spec: {spec!r}")
+        flags = set(flag_list)
+        if flags - {"packed", "sparse"}:
+            bad = sorted(flags - {"packed", "sparse"})
+            raise ValueError(f"unknown backend flag(s): {bad} in {spec!r}")
+        return Backend(kind, packed=bool(flags), sparse="sparse" in flags)
     raise TypeError(f"cannot resolve backend from {spec!r}")
 
 
 def lif_apply(backend: Backend, drive: jax.Array, *, theta, lam, schedule,
               chain_len, iand_skip=None, reset: str = "hard",
-              pack_output: bool = False):
+              pack_output: bool = False, occupancy: bool | None = None):
     """Route a LIF (optionally with the fused IAND epilogue) through the
     unified neuron dispatch on this backend.  With ``pack_output`` the spike
-    train returns bit-packed (and ``iand_skip`` must be packed)."""
+    train returns bit-packed (and ``iand_skip`` must be packed); under
+    ``Backend.sparse`` the pack epilogue also attaches the occupancy map, so
+    every packed train the executor produces carries its skip index.
+    ``occupancy`` overrides that default -- the decode executor passes False
+    because no S=1 consumer reads the map (the sparse decode step derives
+    word liveness in-register), so computing it would be pure epilogue
+    overhead on the per-token path."""
+    if occupancy is None:
+        occupancy = pack_output and backend.sparse
     return _lif_dispatch(
         drive, theta=theta, lam=lam, reset=reset, schedule=schedule,
         chain_len=chain_len, use_kernel=(backend.kind == "pallas"),
         iand_skip=iand_skip, interpret=backend.interpret,
-        pack_output=pack_output)
+        pack_output=pack_output,
+        pack_occupancy=pack_output and occupancy)
 
 
 def linear_apply(backend: Backend, p, x2d: jax.Array) -> jax.Array:
@@ -161,17 +184,39 @@ def ssa_apply_packed(backend: Backend, qp: packing.PackedSpikes,
     -> dense drive (T, B, H, N, Dh).
 
     On the compiled Pallas matmul-kernel route the uint32 words are the
-    attention operands (bitplanes unpacked per-tile in VMEM by
-    ``packed_ssa_op`` -- multi-word trains supported), closing the last dense
-    spike hop of the packed datapath; otherwise the trains are unpacked at the
-    op boundary and the dense route runs -- the jnp oracle.
+    attention operands, closing the last dense spike hop of the packed
+    datapath: quadratic ordering through ``packed_ssa_op`` (bitplanes
+    unpacked per-tile in VMEM; the ``sparse_packed_ssa_op`` variant under
+    ``Backend.sparse`` skips dead bitplanes), linear ordering through the
+    in-register shift-and-mask scan ``ssa_linear_packed`` (the O(d^2)
+    long-sequence path now also consumes words directly).  Otherwise the
+    trains are unpacked at the op boundary and the dense route runs -- the
+    jnp oracle (under ``Backend.sparse`` the per-bitplane ``lax.cond``
+    variant ``ssa_packed_sparse`` runs instead, skipping silent planes).
     """
     if ordering == "quadratic" and backend.closes_ssa_boundary:
+        if backend.sparse:
+            from repro.kernels.spiking_attention.ops import sparse_packed_ssa_op
+
+            return sparse_packed_ssa_op(qp.words, kp.words, vp.words, t=qp.t,
+                                        scale=scale,
+                                        interpret=backend.interpret,
+                                        causal=causal)
         from repro.kernels.spiking_attention.ops import packed_ssa_op
 
         return packed_ssa_op(qp.words, kp.words, vp.words, t=qp.t,
                              scale=scale, interpret=backend.interpret,
                              causal=causal)
+    if ordering == "linear" and backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import ssa_linear_packed
+
+        return ssa_linear_packed(qp.words, kp.words, vp.words, t=qp.t,
+                                 scale=scale, causal=causal)
+    if ordering == "quadratic" and backend.sparse:
+        from repro.core.spiking_attention import ssa_packed_sparse
+
+        return ssa_packed_sparse(qp.words, kp.words, vp.words, t=qp.t,
+                                 scale=scale, causal=causal)
     q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
     return ssa_apply(backend, q, k, v, scale=scale, ordering=ordering,
                      causal=causal)
@@ -202,7 +247,17 @@ def ssa_decode_step_packed(backend: Backend, state: jax.Array,
     no ``packing.unpack`` anywhere in the decode path, so the closed
     tokenizer-to-head boundary survives decode); otherwise the trains are
     unpacked at the op boundary and the dense step runs -- the jnp oracle.
+    ``Backend.sparse`` routes through the per-bitplane ``lax.cond`` variant
+    on either packed route: a decode step's q/k/v are single-token trains,
+    so silent planes (most of them, late in a thinned train) skip both the
+    state update and the output contraction.
     """
+    if backend.sparse:
+        from repro.core.spiking_attention import (
+            ssa_linear_decode_step_packed_sparse)
+
+        return ssa_linear_decode_step_packed_sparse(
+            state, qp.words, kp.words, vp.words, t=qp.t, scale=scale)
     if backend.closes_ssa_boundary:
         from repro.core.spiking_attention import ssa_linear_decode_step_packed
 
@@ -257,16 +312,26 @@ def ssa_prefill_apply_packed(backend: Backend, qp: packing.PackedSpikes,
                              vp: packing.PackedSpikes, *, scale: float,
                              ordering: str):
     """Packed-train counterpart of :func:`ssa_prefill_apply`.  Under the
-    closed boundary (quadratic kernel route) both the drive and the state
-    consume the words directly; otherwise the trains are unpacked at the op
-    boundary and the dense route runs (incl. the fused linear-ordering
-    scan-carry state)."""
+    closed boundary both the drive and the state consume the words directly:
+    the quadratic route through the packed kernel plus one ``ssa_kv_state``
+    GEMM, the linear route through the in-register shift-and-mask causal
+    scan ``ssa_causal_linear_with_state_packed`` whose final carry IS the
+    decode state -- the prefix is contracted once, with no unpack anywhere,
+    so the packed T-fold reduction finally survives long-sequence prefill.
+    Otherwise the trains are unpacked at the op boundary and the dense route
+    runs (incl. the fused linear-ordering scan-carry state)."""
     if ordering == "quadratic" and backend.closes_ssa_boundary:
         from repro.core.spiking_attention import ssa_kv_state_packed
 
         drive = ssa_apply_packed(backend, qp, kp, vp, scale=scale,
                                  ordering=ordering, causal=True)
         return drive, ssa_kv_state_packed(kp.words, vp.words, t=kp.t)
+    if ordering == "linear" and backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import (
+            ssa_causal_linear_with_state_packed)
+
+        return ssa_causal_linear_with_state_packed(
+            qp.words, kp.words, vp.words, t=qp.t, scale=scale)
     q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
     return ssa_prefill_apply(backend, q, k, v, scale=scale, ordering=ordering)
 
@@ -314,26 +379,99 @@ def _kernel_takes_packed(backend: Backend, xp: packing.PackedSpikes) -> bool:
             and xp.words.shape[0] == 1)
 
 
+_SPARSE_TOKEN_TILE = 8   # token rows per jnp-route skip granule (sublane row)
+
+
+def _sparse_linear_packed_jnp(xp: packing.PackedSpikes, w: jax.Array) -> jax.Array:
+    """Occupancy-gated packed x weight GEMM for the jnp route: (W, M, K)
+    words -> (T, M, C).
+
+    The token axis is cut into :data:`_SPARSE_TOKEN_TILE`-row granules and
+    each granule runs under a ``lax.cond`` -- a genuine branch, so an
+    all-zero granule (every neuron of those tokens silent at every time
+    step, the common case late in IAND-thinned trains) skips BOTH the
+    bitplane unpack and the dot.  Skipped granules contribute rows that are
+    exactly zero, and surviving granules keep the full-K contraction of the
+    dense route, so the result is bit-exact vs unpack-then-dot.
+
+    The granule liveness comes from the pack-time occupancy map when the
+    train carries one (summed over feature tiles), else from one popcount
+    pass over the words.
+    """
+    import jax.numpy as jnp
+    from jax import lax
+
+    words, t = xp.words, xp.t
+    wcnt, m, kdim = words.shape
+    tile = _SPARSE_TOKEN_TILE
+    pad = (-m) % tile
+    if xp.occ is not None:
+        row_occ = jnp.sum(xp.occ, axis=(0, 2), dtype=jnp.uint32)   # (M,)
+    else:
+        row_occ = jnp.sum(lax.population_count(words), axis=(0, 2),
+                          dtype=jnp.uint32)
+    if pad:
+        words = jnp.pad(words, ((0, 0), (0, pad), (0, 0)))
+        row_occ = jnp.pad(row_occ, (0, pad))
+    nt = words.shape[1] // tile
+    wt = words.reshape(wcnt, nt, tile, kdim).transpose(1, 0, 2, 3)
+    occ_t = row_occ.reshape(nt, tile).sum(axis=1)
+    c = w.shape[1]
+
+    def granule(tile_words, alive):
+        def live():
+            dense = packing.unpack(packing.PackedSpikes(tile_words, t))
+            return jnp.dot(dense.reshape(t * tile, kdim), w).reshape(t, tile, c)
+
+        return lax.cond(alive > 0, live,
+                        lambda: jnp.zeros((t, tile, c), jnp.float32))
+
+    ys = lax.map(lambda args: granule(*args), (wt, occ_t))   # (nt, T, tile, C)
+    return ys.transpose(1, 0, 2, 3).reshape(t, nt * tile, c)[:, :m]
+
+
 def linear_apply_packed(backend: Backend, p, xp: packing.PackedSpikes) -> jax.Array:
     """Folded linear on a packed spike train (W, ..., Din) -> dense drive
     (T, ..., Dout).
 
     On the compiled Pallas route the uint32 words are the GEMM operand
     (unpacked per-tile in VMEM); otherwise the train is unpacked at the op
-    boundary and the tick-folded XLA dot runs -- the jnp oracle.
+    boundary and the tick-folded XLA dot runs -- the jnp oracle.  Under
+    ``Backend.sparse`` both routes consult the occupancy map and skip
+    all-zero word tiles (bit-exact; see the sparse variants' docstrings).
     """
     lead = xp.elem_shape[:-1]
     d_in = xp.elem_shape[-1]
     if _kernel_takes_packed(backend, xp):
-        from repro.kernels.spike_matmul.ops import packed_spike_matmul_op
+        if backend.sparse:
+            from repro.kernels.spike_matmul.ops import sparse_packed_spike_matmul_op
 
-        y = packed_spike_matmul_op(
-            xp.words[0].reshape(-1, d_in), p["w"], t=xp.t,
-            interpret=backend.interpret)
+            occ = (xp.occ[0].reshape(-1, xp.occ.shape[-1])
+                   if xp.occ is not None else None)
+            y = sparse_packed_spike_matmul_op(
+                xp.words[0].reshape(-1, d_in), p["w"], t=xp.t, occ=occ,
+                interpret=backend.interpret)
+        else:
+            from repro.kernels.spike_matmul.ops import packed_spike_matmul_op
+
+            y = packed_spike_matmul_op(
+                xp.words[0].reshape(-1, d_in), p["w"], t=xp.t,
+                interpret=backend.interpret)
         y = y.reshape((xp.t,) + lead + (p["w"].shape[1],))
         if "b" in p:
             y = y + p["b"]
         return y
+    if backend.sparse and math.prod(lead) >= _SPARSE_TOKEN_TILE:
+        flat = xp.reshape_elems(-1, d_in)                # occ rides along
+        y = _sparse_linear_packed_jnp(flat, p["w"])
+        y = y.reshape((xp.t,) + lead + (p["w"].shape[1],))
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    # under sparse with fewer token rows than one skip granule (the S=1
+    # decode regime) the granule gate has nothing to skip and padding to a
+    # full tile would MULTIPLY the contraction, so the dense packed route
+    # runs (bit-exact either way)
     x = packing.unpack(xp)                           # (T, ..., Din)
     y2d = linear_apply(backend, p, x.reshape(-1, d_in))
     return y2d.reshape((xp.t,) + lead + (-1,))
@@ -341,12 +479,34 @@ def linear_apply_packed(backend: Backend, p, xp: packing.PackedSpikes) -> jax.Ar
 
 def conv3x3_apply_packed(backend: Backend, p, xp: packing.PackedSpikes) -> jax.Array:
     """Folded 3x3 SAME conv on packed spikes (W, N, H, Wd, C) -> dense drive
-    (T, N, H, Wd, Cout)."""
+    (T, N, H, Wd, Cout).  Under ``Backend.sparse`` the patch GEMM skips
+    all-zero word tiles (spatially-silent patch rows) on both routes."""
     if _kernel_takes_packed(backend, xp):
-        from repro.kernels.spike_matmul.ops import packed_conv3x3_op
+        if backend.sparse:
+            from repro.kernels.spike_matmul.ops import sparse_packed_conv3x3_op
 
-        y = packed_conv3x3_op(
-            xp.words[0], p["w"], t=xp.t, interpret=backend.interpret)
+            y = sparse_packed_conv3x3_op(
+                xp.words[0], p["w"], t=xp.t, interpret=backend.interpret)
+        else:
+            from repro.kernels.spike_matmul.ops import packed_conv3x3_op
+
+            y = packed_conv3x3_op(
+                xp.words[0], p["w"], t=xp.t, interpret=backend.interpret)
+        if "b" in p:
+            y = y + p["b"]
+        return y
+    if backend.sparse and xp.words.shape[0] == 1:
+        # im2col on the words, then the occupancy-gated jnp patch GEMM --
+        # the patch gather scrambles the feature axis, so liveness is
+        # recomputed on the gathered words (sparse GEMM popcount pass)
+        from repro.kernels.spike_matmul.ops import _im2col
+
+        n, h, wd, c = xp.words.shape[1:]
+        cout = p["w"].shape[-1]
+        cols = _im2col(xp.words[0], 3)               # (N*H*W, 9*Cin) words
+        colsp = packing.PackedSpikes(cols[None], xp.t)
+        y = _sparse_linear_packed_jnp(colsp, p["w"].reshape(9 * c, cout))
+        y = y.reshape(xp.t, n, h, wd, cout)
         if "b" in p:
             y = y + p["b"]
         return y

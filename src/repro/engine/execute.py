@@ -37,6 +37,7 @@ is closed over, so ``jax.jit(make_apply_fn(plan))`` caches per plan shape.
 
 from __future__ import annotations
 
+import contextlib
 import functools
 from dataclasses import dataclass
 
@@ -50,13 +51,38 @@ from repro.core.spiking_attention import merge_heads, split_heads, split_heads_p
 from repro.engine import backend as B
 from repro.engine.plan import DeployPlan, PlanMeta
 
+# active spike tap (``capture_spikes``): every packed train a LIF epilogue
+# emits is appended here, so measured-occupancy reports see exactly the
+# activations the executor moved -- None when no capture is active
+_spike_tap: list | None = None
 
-def _lif(meta: PlanMeta, drive, iand_skip=None, pack_output=False):
+
+@contextlib.contextmanager
+def capture_spikes():
+    """Capture every packed spike train the executor's LIF epilogues emit.
+
+    ``with capture_spikes() as taps: engine.apply(plan, batch)`` leaves
+    ``taps`` holding one ``PackedSpikes`` per LIF dispatch, in execution
+    order -- the measured-sparsity input of ``engine.analysis.sparsity_report``
+    (run UNJITTED so the captured leaves are concrete arrays)."""
+    global _spike_tap
+    prev, _spike_tap = _spike_tap, []
+    try:
+        yield _spike_tap
+    finally:
+        _spike_tap = prev
+
+
+def _lif(meta: PlanMeta, drive, iand_skip=None, pack_output=False,
+         occupancy=None):
     cfg = meta.cfg
-    return B.lif_apply(
+    out = B.lif_apply(
         meta.backend, drive, theta=cfg.theta, lam=cfg.lam,
         schedule=cfg.lif_schedule, chain_len=cfg.chain_len,
-        iand_skip=iand_skip, pack_output=pack_output)
+        iand_skip=iand_skip, pack_output=pack_output, occupancy=occupancy)
+    if _spike_tap is not None and isinstance(out, packing.PackedSpikes):
+        _spike_tap.append(out)
+    return out
 
 
 def _tokenizer_exec(meta: PlanMeta, tok_params, image):
@@ -214,7 +240,8 @@ def _lm_full_ssa(meta: PlanMeta, packed: bool, q, k, v):
               ordering=meta.cfg.attn_ordering, causal=True)
 
 
-def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None):
+def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None,
+                   lif_occupancy=None):
     """One spiking-LM decoder block in deploy form: x is (T, B, S, D) spikes
     dense, a ``PackedSpikes`` (words (W, B, S, D)) when ``packed``.
 
@@ -235,24 +262,27 @@ def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None):
     for u in meta.block_units:
         if u.role == "qkv":
             acts[u.name] = _lif(meta, unit(meta, bparams[u.name], x),
-                                pack_output=packed)
+                                pack_output=packed, occupancy=lif_occupancy)
             continue
         if u.role == "attn_out":
             attn = ssa(
                 split(acts["q"], cfg.num_heads),
                 split(acts["k"], cfg.num_heads),
                 split(acts["v"], cfg.num_heads))
-            attn_sp = _lif(meta, merge_heads(attn), pack_output=packed)
+            attn_sp = _lif(meta, merge_heads(attn), pack_output=packed,
+                           occupancy=lif_occupancy)
             drive = unit(meta, bparams[u.name], attn_sp)
         elif u.role == "mlp_hidden":
-            h = _lif(meta, unit(meta, bparams[u.name], x), pack_output=packed)
+            h = _lif(meta, unit(meta, bparams[u.name], x), pack_output=packed,
+                     occupancy=lif_occupancy)
             continue
         elif u.role == "mlp_out":
             drive = unit(meta, bparams[u.name], h)
         else:
             raise ValueError(f"unknown unit role: {u.role}")
         # AND-NOT inside the LIF epilogue (bitwise ``skip & ~s`` on words)
-        x = _lif(meta, drive, iand_skip=x, pack_output=packed)
+        x = _lif(meta, drive, iand_skip=x, pack_output=packed,
+                 occupancy=lif_occupancy)
     return x
 
 
@@ -438,12 +468,24 @@ def _lm_decode_step(meta: PlanMeta, params, state: DecodeState, token):
             f"DecodeState carries {len(state.kv)} layer states, plan has "
             f"{entry.num_layers} layers")
     tokens = token.reshape(token.shape[0], 1)          # (B,) -> (B, 1)
-    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
-             pack_output=packed)
+    # occupancy=False: no S=1 consumer reads the map (the sparse decode step
+    # derives word liveness in-register; the GEMM skip granule needs >= 8
+    # token rows), so the pack epilogues skip the popcount pass per step
+    if packed and "train_words" in params["embed"]:
+        # sparse train re-use (core.bundling.attach_train_table): the
+        # encoding train is a pure function of the embedding row, so the
+        # step fetches the token's precomputed packed train instead of
+        # re-running the T-step encoding LIF per generated token
+        words = jnp.take(params["embed"]["train_words"], tokens, axis=1)
+        x = packing.PackedSpikes(words, meta.cfg.t)     # (W, B, 1, D)
+    else:
+        x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
+                 pack_output=packed, occupancy=False)
     kvs: list = []
     for bparams, kv in zip(params["blocks"], state.kv):
         x = _lm_block_exec(meta, bparams, x, packed=packed,
-                           ssa=_decode_ssa(meta, packed, kv, kvs))
+                           ssa=_decode_ssa(meta, packed, kv, kvs),
+                           lif_occupancy=False)
     logits = _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
     return logits[:, 0], DecodeState(kv=tuple(kvs), pos=state.pos + 1)
 

@@ -144,6 +144,7 @@ class PlanMeta:
     block_units: tuple[ProjUnit, ...]
     num_layers: int
     family: str = "vision"            # "vision" | "lm"
+    bundle: Any = None                # core.bundling.BundleInfo | None
 
     @property
     def decode(self) -> DecodeEntry | None:
@@ -174,16 +175,51 @@ class DeployPlan:
 
 
 def compile_plan(params, state, cfg, *, backend="jnp",
-                 ordering: str | None = None) -> DeployPlan:
+                 ordering: str | None = None, checkpoint: str | None = None,
+                 bundle: float | None = None) -> DeployPlan:
     """Fold a trained (params, state, cfg) into a deploy plan.
 
     ``backend``: Backend | "jnp" | "pallas" | bool (legacy ``use_kernel``).
     ``ordering`` selects the LM plan's causal-SSA dataflow ("quadratic" |
     "linear"); vision plans take it from ``cfg.attn_ordering`` instead.
+    ``checkpoint``: optional ``repro.checkpoint`` directory -- the trained
+    arrays are restored into the passed ``params``/``state`` skeleton
+    (shapes/dtypes/structure come from the skeleton, values from disk)
+    before folding, so serving goes checkpoint -> plan without a separate
+    restore step.
+    ``bundle``: optional max-abs logit-error budget for the embedding
+    row-bundling transform (:mod:`repro.core.bundling`; LM plans only;
+    ``0.0`` = exact duplicate-train dedup).
     """
+    if checkpoint is not None:
+        from repro.checkpoint import checkpoint as ckpt
+
+        target = (params if state is None
+                  else {"params": params, "state": state})
+        restored, _manifest = ckpt.restore(checkpoint, target)
+        if state is None:
+            params = restored
+        else:
+            params, state = restored["params"], restored["state"]
     if not hasattr(cfg, "tokenizer_config"):
-        return _compile_lm_plan(params, state, cfg, backend=backend,
+        plan = _compile_lm_plan(params, state, cfg, backend=backend,
                                 ordering=ordering or "quadratic")
+        if bundle is not None:
+            from repro.core import bundling
+
+            plan = bundling.bundle(plan, budget=bundle)
+        if plan.meta.backend.sparse:
+            # sparse train re-use: precompute every vocab row's packed
+            # encoding train so the decode step fetches instead of re-running
+            # the T-step encoding LIF per generated token
+            from repro.core import bundling
+
+            plan = bundling.attach_train_table(plan)
+        return plan
+    if bundle is not None:
+        raise ValueError(
+            "row bundling applies to LM embedding tables only; vision plans "
+            "have no token-row/spike-train factorisation to bundle")
     if ordering is not None:
         raise ValueError(
             "ordering is a plan-compile choice only for LM configs; vision "
@@ -290,10 +326,20 @@ def plan_stats(plan: DeployPlan) -> dict:
             "attn_ordering": cfg.attn_ordering,
             "backend": meta.backend.kind,
             "packed": meta.backend.packed,
+            "sparse": meta.backend.sparse,
             "bits_per_spike": (32 * -(-cfg.t // 32) / cfg.t
                                if meta.backend.packed else 32),
             "param_count": sum(
                 p.size for p in jax.tree_util.tree_leaves(plan.params)),
+            # row bundling: the MEASURED oracle deviation of the applied
+            # transform (None when bundling is off)
+            "bundled": meta.bundle is not None,
+            "bundle_rows_merged": (meta.bundle.rows_merged
+                                   if meta.bundle else 0),
+            "bundle_radius": meta.bundle.radius if meta.bundle else None,
+            "bundle_budget": meta.bundle.budget if meta.bundle else None,
+            "bundle_logit_err": (meta.bundle.logit_err
+                                 if meta.bundle else None),
         }
     n_tok = len(meta.tok_stages)
     n_units = len(meta.block_units)
@@ -317,6 +363,7 @@ def plan_stats(plan: DeployPlan) -> dict:
         "weight_reads": n_tok + n_units * meta.num_layers + 1,
         "backend": meta.backend.kind,
         "packed": meta.backend.packed,
+        "sparse": meta.backend.sparse,
         # bits per spike moved between layers: 32 (f32) dense, or the packed
         # word amortised over the T steps it carries
         "bits_per_spike": (32 * -(-cfg.t // 32) / cfg.t

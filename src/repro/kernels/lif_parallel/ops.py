@@ -110,8 +110,21 @@ def lif_iand_op(
     return out[:, :n].reshape(shape)
 
 
+def _occ_epilogue(words, occupancy: bool):
+    """Optional pack-epilogue occupancy map (the sparse datapath's skip
+    index), computed on the reshaped words inside the op's jit region so the
+    kernel route pays no extra dispatch."""
+    if not occupancy:
+        return words
+    from repro.core import packing
+
+    return words, packing.occupancy_map(words)
+
+
 @functools.partial(
-    jax.jit, static_argnames=("chain_len", "lam", "theta", "reset", "interpret"))
+    jax.jit,
+    static_argnames=("chain_len", "lam", "theta", "reset", "interpret",
+                     "occupancy"))
 def lif_pack_op(
     drive: jax.Array,
     *,
@@ -120,11 +133,14 @@ def lif_pack_op(
     theta: float = 0.5,
     reset: str = "hard",
     interpret: bool | None = None,
-) -> jax.Array:
+    occupancy: bool = False,
+):
     """LIF whose kernel epilogue packs the T-step train into uint32 words.
 
     drive: (T, ...) -> words (ceil(T/32), ...) uint32 (see
     ``repro.core.packing`` for the bit layout). Inference path.
+    ``occupancy=True`` also returns the pack-time occupancy map as a second
+    output (``(words, occ)``).
     """
     t = drive.shape[0]
     chain_len = chain_len or t
@@ -133,11 +149,14 @@ def lif_pack_op(
     out = K.lif_parallel_pack_fwd(
         padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
         reset=reset, skip_words=None, interpret=resolve_interpret(interpret))
-    return out[:, :n].reshape((out.shape[0],) + shape[1:])
+    words = out[:, :n].reshape((out.shape[0],) + shape[1:])
+    return _occ_epilogue(words, occupancy)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("chain_len", "lam", "theta", "reset", "interpret"))
+    jax.jit,
+    static_argnames=("chain_len", "lam", "theta", "reset", "interpret",
+                     "occupancy"))
 def lif_iand_pack_op(
     drive: jax.Array,
     skip_words: jax.Array,
@@ -147,12 +166,14 @@ def lif_iand_pack_op(
     theta: float = 0.5,
     reset: str = "hard",
     interpret: bool | None = None,
-) -> jax.Array:
+    occupancy: bool = False,
+):
     """Fused LIF+IAND, packed in/packed out: the residual is the bitwise
     ``skip & ~spikes`` on uint32 words inside the kernel epilogue.
 
     drive: (T, ...) f32; skip_words: (ceil(T/32), ...) uint32 of the same
-    element shape -> words (ceil(T/32), ...) uint32.
+    element shape -> words (ceil(T/32), ...) uint32.  ``occupancy=True`` also
+    returns the occupancy map of the post-IAND words (``(words, occ)``).
     """
     t = drive.shape[0]
     chain_len = chain_len or t
@@ -163,4 +184,5 @@ def lif_iand_pack_op(
     out = K.lif_parallel_pack_fwd(
         padded, chain_len=chain_len, lam=float(lam), theta=float(theta),
         reset=reset, skip_words=skip_p, interpret=resolve_interpret(interpret))
-    return out[:, :n].reshape((out.shape[0],) + shape[1:])
+    words = out[:, :n].reshape((out.shape[0],) + shape[1:])
+    return _occ_epilogue(words, occupancy)

@@ -69,6 +69,70 @@ def packed_matmul_kernel(xw_ref, w_ref, o_ref, acc_ref, *, t_total: int):
         o_ref[...] = acc_ref[...].astype(o_ref.dtype)
 
 
+def sparse_packed_matmul_kernel(occ_ref, xw_ref, w_ref, o_ref, acc_ref, *,
+                                t_total: int):
+    """Occupancy-predicated packed GEMM tile: the unpack-and-accumulate body
+    runs only when the occupancy map says the (bm, bk) word tile carries at
+    least one spike.  Skipping is exact -- an all-zero spike tile's
+    contribution to the accumulator is exactly 0.0 -- and saves both the T
+    shift-and-mask unpacks and the T MXU dots of a dead tile.
+
+    ``occ_ref`` is a (1, 1) uint32 tile of the per-(M-tile, K-tile) popcount
+    map derived from the pack-time occupancy map (ops.py reduces it to this
+    grid's tiling).
+    """
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(occ_ref[0, 0] > 0)
+    def _body():
+        words = xw_ref[...]
+        w = w_ref[...]
+        for t in range(t_total):
+            xt = ((words >> jnp.uint32(t)) & jnp.uint32(1)).astype(jnp.float32)
+            acc_ref[t] += jnp.dot(xt, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _write():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def sparse_packed_spike_matmul_fwd(xw: jax.Array, w: jax.Array,
+                                   occ_tiles: jax.Array, *, t_total: int,
+                                   interpret: bool) -> jax.Array:
+    """Sparse variant of :func:`packed_spike_matmul_fwd`: same grid and tile
+    schedule, with the tile body predicated on ``occ_tiles`` (the
+    (m/bm, k/bk) per-tile popcounts).  Bit-exact vs the dense-tile kernel:
+    the K accumulation order of surviving tiles is unchanged."""
+    if t_total > 32:
+        raise ValueError(f"packed GEMM holds T<=32 steps per word, got {t_total}")
+    m, k = xw.shape
+    _, c = w.shape
+    bm = _tile(m, (256, 128, 64, 32, 16, 8))
+    bc = _tile(c, (256, 128))
+    bk = _tile(k, (512, 256, 128))
+    grid = (m // bm, c // bc, k // bk)
+    if occ_tiles.shape != (m // bm, k // bk):
+        raise ValueError(
+            f"occupancy tiles {occ_tiles.shape} do not match the "
+            f"({m // bm}, {k // bk}) grid tiling")
+    kern = functools.partial(sparse_packed_matmul_kernel, t_total=t_total)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bc), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((t_total, bm, bc), lambda i, j, l: (0, i, j)),
+        out_shape=jax.ShapeDtypeStruct((t_total, m, c), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((t_total, bm, bc), jnp.float32)],
+        interpret=interpret,
+    )(occ_tiles, xw, w)
+
+
 def packed_spike_matmul_fwd(xw: jax.Array, w: jax.Array, *, t_total: int,
                             interpret: bool) -> jax.Array:
     """xw: (M, K) uint32 packed spike words (T <= 32 time steps per word),

@@ -73,6 +73,59 @@ def packed_spike_matmul_op(xw: jax.Array, w: jax.Array, *, t: int,
     return out[:, :m, :c]
 
 
+def _occ_to_grid_tiles(occ: jax.Array | None, xp: jax.Array, m: int, k: int,
+                       bm: int, bk: int) -> jax.Array:
+    """Reduce an occupancy map to the kernel grid's (m/bm, k/bk) per-tile
+    popcounts.
+
+    ``occ`` is the pack-time map over 128-element feature tiles of the
+    (unpadded) (M, K) words -- rows are zero-padded to ``m`` and feature tiles
+    to ``k/128`` (padding carries no spikes), then summed into grid tiles
+    (``bk`` is always a multiple of 128).  When no map was carried (e.g. the
+    im2col gather scrambled the feature axis), it is recomputed from the
+    padded words with one popcount pass -- still far cheaper than the T
+    unpack+dot passes the kernel skips.
+    """
+    from repro.core import packing
+
+    if occ is not None and bk % packing.OCC_TILE == 0:
+        m0, nt0 = occ.shape
+        occ = jnp.pad(occ, ((0, m - m0), (0, k // packing.OCC_TILE - nt0)))
+        grouped = occ.reshape(m // bm, bm, k // bk, bk // packing.OCC_TILE)
+        return jnp.sum(grouped, axis=(1, 3), dtype=jnp.uint32)
+    counts = jax.lax.population_count(xp)
+    grouped = counts.reshape(m // bm, bm, k // bk, bk)
+    return jnp.sum(grouped, axis=(1, 3), dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def sparse_packed_spike_matmul_op(xw: jax.Array, w: jax.Array, *, t: int,
+                                  occ: jax.Array | None = None,
+                                  interpret: bool | None = None) -> jax.Array:
+    """Occupancy-gated packed GEMM: bit-exact vs :func:`packed_spike_matmul_op`
+    (identical grid/tile schedule; a skipped tile's contribution is exactly
+    0.0 and the K order of surviving tiles is unchanged), but all-zero word
+    tiles never unpack or hit the MXU.
+
+    ``occ``: optional pack-time occupancy map for ``xw`` with the word axis
+    already dropped -- shape (M, ceil(K/128)) uint32 (see
+    ``packing.occupancy_map``); recomputed from the words when absent.
+    """
+    (m, k), (_, c) = xw.shape, w.shape
+    if 0 in (m, k, c):
+        return jnp.zeros((t, m, c), jnp.float32)
+    xp, m = _pad_to(xw, 0, 128)
+    xp, k = _pad_to(xp, 1, 128)
+    wp, _ = _pad_to(w, 0, 128)
+    wp, c = _pad_to(wp, 1, 128)
+    bm = K._tile(xp.shape[0], (256, 128, 64, 32, 16, 8))
+    bk = K._tile(xp.shape[1], (512, 256, 128))
+    occ_tiles = _occ_to_grid_tiles(occ, xp, xp.shape[0], xp.shape[1], bm, bk)
+    out = K.sparse_packed_spike_matmul_fwd(
+        xp, wp, occ_tiles, t_total=t, interpret=resolve_interpret(interpret))
+    return out[:, :m, :c]
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def conv1x1_op(x: jax.Array, w: jax.Array, *,
                interpret: bool | None = None) -> jax.Array:
@@ -123,4 +176,21 @@ def packed_conv3x3_op(xw: jax.Array, w: jax.Array, *, t: int,
     cols = _im2col(xw, 3)                      # (N*H*W, 9*Cin) uint32 words
     wmat = w.reshape(9 * c, cout)
     out = packed_spike_matmul_op(cols, wmat, t=t, interpret=interpret)
+    return out.reshape(t, n, h, wd, cout)
+
+
+@functools.partial(jax.jit, static_argnames=("t", "interpret"))
+def sparse_packed_conv3x3_op(xw: jax.Array, w: jax.Array, *, t: int,
+                             interpret: bool | None = None) -> jax.Array:
+    """Occupancy-gated 3x3 conv on packed words: im2col then the sparse
+    packed GEMM.  The patch gather scrambles the feature axis, so the
+    occupancy tiles are recomputed on the gathered words (one popcount pass)
+    rather than carried from pack time; spatially-silent patch rows -- common
+    in late-T IAND-thinned feature maps -- skip their T unpack+dot passes.
+    Bit-exact vs :func:`packed_conv3x3_op`."""
+    n, h, wd, c = xw.shape
+    cout = w.shape[-1]
+    cols = _im2col(xw, 3)
+    wmat = w.reshape(9 * c, cout)
+    out = sparse_packed_spike_matmul_op(cols, wmat, t=t, interpret=interpret)
     return out.reshape(t, n, h, wd, cout)

@@ -105,6 +105,62 @@ def packed_ssa_kernel(qw_ref, kw_ref, vw_ref, o_ref, *, t_total: int,
         o_ref[t, 0] = out.astype(o_ref.dtype)
 
 
+def sparse_packed_ssa_kernel(occ_ref, qw_ref, kw_ref, vw_ref, o_ref, *,
+                             t_total: int, scale: float, causal: bool):
+    """Occupancy-predicated packed SSA: each bitplane's two MXU contractions
+    run only when the plane is live for this (b, h) fold -- ``occ_ref[0, t]``
+    is 1 iff q, k AND v all carry at least one spike at time step ``t``
+    (ops.py derives it from a bitwise-OR reduce of the words).  A dead plane's
+    output is exactly zero (one of the two contractions has an all-zero
+    operand), so it is written as zeros without unpacking anything --
+    bit-exact vs :func:`packed_ssa_kernel` because bitplanes are independent.
+    """
+    mask = (_causal_tile_mask(qw_ref.shape[2], kw_ref.shape[2])
+            if causal else None)
+    for t in range(t_total):
+        wi, bit = divmod(t, 32)
+
+        @pl.when(occ_ref[0, t] > 0)
+        def _live(t=t, wi=wi, bit=bit):
+            qt = ((qw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+            kt = ((kw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+            vt = ((vw_ref[wi, 0] >> jnp.uint32(bit)) & jnp.uint32(1)).astype(jnp.float32)
+            scores = jnp.dot(qt, kt.T, preferred_element_type=jnp.float32)
+            if mask is not None:
+                scores = jnp.where(mask, scores, 0.0)
+            out = jnp.dot(scores, vt, preferred_element_type=jnp.float32) * scale
+            o_ref[t, 0] = out.astype(o_ref.dtype)
+
+        @pl.when(occ_ref[0, t] == 0)
+        def _dead(t=t):
+            o_ref[t, 0] = jnp.zeros_like(o_ref[t, 0])
+
+
+def sparse_packed_ssa_fwd(qw: jax.Array, kw: jax.Array, vw: jax.Array,
+                          occ: jax.Array, *, t_total: int, scale: float,
+                          interpret: bool, causal: bool = False) -> jax.Array:
+    """Sparse variant of :func:`packed_ssa_fwd`; ``occ`` is the (G, T_pad)
+    uint32 per-(fold, bitplane) liveness map."""
+    w, g, n, d = qw.shape
+    m = kw.shape[2]
+    bq = _block_q(n)
+    grid = (g, n // bq)
+    return pl.pallas_call(
+        functools.partial(sparse_packed_ssa_kernel, t_total=t_total,
+                          scale=scale, causal=causal),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, occ.shape[1]), lambda gi, qi: (gi, 0)),
+            pl.BlockSpec((w, 1, bq, d), lambda gi, qi: (0, gi, qi, 0)),
+            pl.BlockSpec((w, 1, m, d), lambda gi, qi: (0, gi, 0, 0)),
+            pl.BlockSpec((w, 1, m, d), lambda gi, qi: (0, gi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((t_total, 1, bq, d), lambda gi, qi: (0, gi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((t_total, g, n, d), jnp.float32),
+        interpret=interpret,
+    )(occ, qw, kw, vw)
+
+
 def packed_ssa_fwd(qw: jax.Array, kw: jax.Array, vw: jax.Array, *,
                    t_total: int, scale: float, interpret: bool,
                    causal: bool = False) -> jax.Array:

@@ -110,3 +110,48 @@ def packed_ssa_op(qw: jax.Array, kw: jax.Array, vw: jax.Array, *, t: int,
                            interpret=resolve_interpret(interpret),
                            causal=causal)
     return out[:, :, :n, :d].reshape(t, b, h, n, dh)
+
+
+def _plane_liveness(qf, kf, vf, t: int) -> jax.Array:
+    """Per-(fold, bitplane) liveness of three packed operands: (G, T_pad)
+    uint32, 1 iff q, k and v all spike somewhere at that time step.
+
+    One bitwise-OR reduce over the token/feature axes collapses each operand
+    to (W, G) or-words whose bit ``t % 32`` says "plane t has a spike" -- the
+    SSA analogue of the GEMM's popcount occupancy map, at bitplane (not tile)
+    granularity and computed without unpacking.  The lane axis is padded to
+    128 for the kernel's occupancy operand.
+    """
+    ors = [jax.lax.reduce(x, jnp.uint32(0), jax.lax.bitwise_or, (2, 3))
+           for x in (qf, kf, vf)]
+    comb = ors[0] & ors[1] & ors[2]                       # (W, G)
+    steps = jnp.arange(t, dtype=jnp.uint32)
+    live = (comb[steps // 32] >> (steps % 32)[:, None]) & jnp.uint32(1)
+    occ = live.T                                          # (G, T)
+    return jnp.pad(occ, ((0, 0), (0, (-t) % 128)))
+
+
+@functools.partial(jax.jit, static_argnames=("t", "scale", "interpret", "causal"))
+def sparse_packed_ssa_op(qw: jax.Array, kw: jax.Array, vw: jax.Array, *,
+                         t: int, scale: float = 0.125,
+                         interpret: bool | None = None,
+                         causal: bool = False) -> jax.Array:
+    """Occupancy-gated packed SSA: bit-exact vs :func:`packed_ssa_op`
+    (bitplanes are independent, so skipping dead planes re-associates
+    nothing), but time steps where q, k or v is silent for a (b, h) fold --
+    the common case late in IAND-thinned trains -- never unpack or touch the
+    MXU; their output planes are written as zeros."""
+    w, b, h, n, dh = qw.shape
+    fold = lambda x: x.reshape(w, b * h, x.shape[3], dh)
+    qf, d = _pad_d(fold(qw))
+    kf, _ = _pad_d(fold(kw))
+    vf, _ = _pad_d(fold(vw))
+    qf, n = _pad_tokens(qf, 2)
+    kf, _ = _pad_tokens(kf, 2)
+    vf, _ = _pad_tokens(vf, 2)
+    occ = _plane_liveness(qf, kf, vf, t)
+    out = K.sparse_packed_ssa_fwd(qf, kf, vf, occ, t_total=t,
+                                  scale=float(scale),
+                                  interpret=resolve_interpret(interpret),
+                                  causal=causal)
+    return out[:, :, :n, :d].reshape(t, b, h, n, dh)

@@ -149,7 +149,8 @@ def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
               f"deploy plan: {stats['folded_conv_bn'] + stats['folded_linear_bn']} "
               f"folded BN pairs, {stats['fused_lif_iand_dispatches']} fused "
               f"LIF+IAND dispatches, backend={stats['backend']}"
-              f"{', packed spikes' if stats['packed'] else ''})")
+              f"{', packed spikes' if stats['packed'] else ''}"
+              f"{' + occupancy skip' if stats['sparse'] else ''})")
     return done
 
 
@@ -227,7 +228,8 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
               f"{stats['fused_lif_iand_dispatches']} fused LIF+IAND "
               f"dispatches, ordering={stats['attn_ordering']}, "
               f"backend={stats['backend']}"
-              f"{', packed spikes' if stats['packed'] else ''}; "
+              f"{', packed spikes' if stats['packed'] else ''}"
+              f"{' + occupancy skip' if stats['sparse'] else ''}; "
               f"prefill+step decode, {stats['decode_state_bytes']} B "
               f"state/seq, flat in context)")
     return done
@@ -246,10 +248,12 @@ def main():
                     help="greedy-decode a spiking LM from a compiled deploy "
                          "plan (RMSNorm folded, backend-dispatched causal SSA)")
     ap.add_argument("--backend", default="jnp",
-                    choices=("jnp", "pallas", "jnp+packed", "pallas+packed"),
+                    choices=("jnp", "pallas", "jnp+packed", "pallas+packed",
+                             "jnp+packed+sparse", "pallas+packed+sparse"),
                     help="deploy-plan backend (vision / spiking-lm modes); "
                          "+packed serves bit-packed inter-layer spike "
-                         "activations")
+                         "activations, +sparse adds occupancy-map zero-word "
+                         "skipping (bit-exact)")
     ap.add_argument("--ordering", default="quadratic",
                     choices=("quadratic", "linear"),
                     help="causal-SSA dataflow of the LM plan: (QK^T)V vs the "

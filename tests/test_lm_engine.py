@@ -376,10 +376,12 @@ def test_lm_spike_traffic_accounting():
                                        backend=PALLAS_PACKED_KERNEL)
     assert closed["ssa_boundary_closed"]
     assert closed["reduction_ssa_dense"] == closed["reduction"] == 8.0
-    # the chunked-linear ordering never rides the quadratic packed kernel
+    # the chunked-linear ordering closes too since the packed linear prefill
+    # (ssa_causal_linear_with_state_packed consumes the words in-register)
     lin = analysis.lm_spike_traffic(cfg, seq_len=SEQ, ordering="linear",
                                     backend=PALLAS_PACKED_KERNEL)
-    assert not lin["ssa_boundary_closed"]
+    assert lin["ssa_boundary_closed"]
+    assert lin["reduction_ssa_dense"] == lin["reduction"] == 8.0
     # doubling the sequence doubles bytes, not ratios
     tr2 = analysis.lm_spike_traffic(cfg, seq_len=2 * SEQ)
     assert tr2["dense_bytes"] == 2 * tr["dense_bytes"]

@@ -1,0 +1,450 @@
+"""Sparsity-aware packed datapath suite (ISSUE 6).
+
+Covers the acceptance criteria:
+  * occupancy maps: per-tile popcounts equal the spike counts across
+    occupancy extremes (all-zero, all-one, single-spike, front-loaded) x
+    ragged tails x multi-word T (plus a hypothesis property when available),
+  * the sparse decode step (`ssa_linear_decode_step_packed_sparse`) is
+    bit-exact vs the dense oracle across the same extremes, including
+    accumulated state over multiple steps,
+  * sparse plans produce BIT-identical logits to the dense jnp oracle over
+    both orderings and through prefill + decode steps (the sparse datapath
+    is an execution strategy, not an approximation),
+  * row bundling: radius-0 dedup merges duplicate-train rows exactly
+    (logit-preserving, recorded in ``plan_stats``); the lossy path accepts a
+    positive radius only under the measured-error budget; vision plans are
+    rejected,
+  * checkpoint restore wired into ``compile_plan`` + the deterministic
+    trained-one-epoch fixture (memoized, loss decreased, one checkpoint
+    serves every T),
+  * the linear-ordering packed prefill never unpacks under the closed
+    Pallas backend, and the traffic model prices linear as closed,
+  * ``analysis.sparsity_report`` skip rates + occupancy-aware traffic
+    pricing.
+"""
+
+import functools
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.checkpoint import checkpoint as ckpt
+from repro.checkpoint import fixtures
+from repro.core import bundling, packing
+from repro.core import spikformer as sf
+from repro.core.spiking_attention import (
+    ssa_linear_decode_step, ssa_linear_decode_step_packed_sparse,
+    ssa_linear_state_init,
+)
+from repro.engine import analysis
+from repro.engine import backend as backend_lib
+from repro.engine import plan as planlib
+from repro.models import spiking_lm as slm
+from repro.models.lm import get_config
+
+KEY = jax.random.PRNGKey(0)
+BATCH = 2
+PALLAS_PACKED_KERNEL = engine.Backend("pallas", matmul_kernel=True,
+                                      packed=True)
+
+PATTERNS = ["all-zero", "all-one", "single-spike", "front-loaded", "random"]
+
+
+def _cfg(t=8, **kw):
+    return get_config("llama3.2-1b_smoke").replace(
+        spiking=True, spike_t=t, num_heads=4, head_dim=None, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _model(t):
+    cfg = _cfg(t=t)
+    return cfg, slm.init_spiking_lm(KEY, cfg)
+
+
+def _tokens(s, seed=1, batch=BATCH):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, s), 0,
+                              _cfg().vocab_size)
+
+
+def _pattern_spikes(pattern, t, shape, seed=0):
+    """Occupancy-extreme spike trains: (t, *shape) float {0,1}."""
+    full = (t,) + shape
+    if pattern == "all-zero":
+        return jnp.zeros(full, jnp.float32)
+    if pattern == "all-one":
+        return jnp.ones(full, jnp.float32)
+    if pattern == "single-spike":
+        z = np.zeros(full, np.float32)
+        z[t - 1].flat[0] = 1.0          # last plane: exercises the ragged tail
+        return jnp.asarray(z)
+    if pattern == "front-loaded":
+        z = np.zeros(full, np.float32)
+        z[: max(1, t // 4)] = 1.0       # tail words all-zero (trained shape)
+        return jnp.asarray(z)
+    assert pattern == "random"
+    u = jax.random.uniform(jax.random.PRNGKey(seed), full)
+    return (u > 0.7).astype(jnp.float32)
+
+
+# -- occupancy maps: popcounts == spike counts --------------------------------
+
+@pytest.mark.parametrize("t", [1, 8, 31, 32, 40, 65])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_occupancy_counts_spikes(pattern, t):
+    """Per-tile occupancy popcounts total exactly the spike count, across
+    occupancy extremes, ragged word tails (31, 40, 65), and ragged feature
+    tiles (130 = OCC_TILE + 2)."""
+    spikes = _pattern_spikes(pattern, t, (3, 130), seed=t)
+    ps = packing.pack(spikes, t, occupancy=True)
+    assert ps.occ is not None
+    np.testing.assert_array_equal(
+        np.asarray(ps.occ), np.asarray(packing.occupancy_map(ps.words)))
+    total = int(np.asarray(ps.occ, dtype=np.int64).sum())
+    assert total == int(packing.spike_counts(ps).sum()) == int(spikes.sum())
+
+
+def test_occupancy_counts_spikes_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+
+    @hypothesis.settings(deadline=None, max_examples=25)
+    @hypothesis.given(st.integers(1, 70), st.integers(1, 6),
+                      st.integers(1, 260), st.integers(0, 2**31 - 1),
+                      st.floats(0.0, 1.0))
+    def prop(t, rows, feats, seed, density):
+        u = jax.random.uniform(jax.random.PRNGKey(seed), (t, rows, feats))
+        spikes = (u < density).astype(jnp.float32)
+        ps = packing.pack(spikes, t, occupancy=True)
+        assert int(np.asarray(ps.occ, np.int64).sum()) == int(spikes.sum())
+
+    prop()
+
+
+def test_iand_refreshes_occupancy():
+    """The fused IAND epilogue recomputes the occupancy of its output --
+    stale maps would silently corrupt every skip decision downstream."""
+    t = 8
+    spikes = _pattern_spikes("random", t, (4, 256), seed=3)
+    skip = _pattern_spikes("random", t, (4, 256), seed=4)
+    ps = packing.pack(spikes, t, occupancy=True)
+    sk = packing.pack(skip, t, occupancy=True)
+    out = packing.iand(sk, ps)
+    assert out.occ is not None
+    np.testing.assert_array_equal(
+        np.asarray(out.occ), np.asarray(packing.occupancy_map(out.words)))
+
+
+# -- sparse decode step vs dense oracle ---------------------------------------
+
+@pytest.mark.parametrize("t", [8, 40])
+@pytest.mark.parametrize("pattern", PATTERNS)
+def test_sparse_decode_step_bit_exact(pattern, t):
+    """Word-liveness-predicated step == dense oracle, at every occupancy
+    extreme, through TWO chained steps (the second runs on accumulated
+    nonzero state, catching any mask leakage into the carried state)."""
+    b, h, dh = 2, 3, 8
+    shape = (b, h, 1, dh)
+    state = ssa_linear_state_init(t, b, h, dh)
+    state_p = state
+    for step in range(2):
+        q = _pattern_spikes("random", t, shape, seed=10 * step + 1)
+        k = _pattern_spikes(pattern, t, shape, seed=10 * step + 2)
+        v = _pattern_spikes(pattern, t, shape, seed=10 * step + 3)
+        state, out = ssa_linear_decode_step(state, q, k, v)
+        qw, kw, vw = (packing.pack(x, t).words for x in (q, k, v))
+        state_p, out_p = ssa_linear_decode_step_packed_sparse(
+            state_p, qw, kw, vw, t=t)
+        np.testing.assert_array_equal(np.asarray(out_p), np.asarray(out))
+        np.testing.assert_array_equal(np.asarray(state_p), np.asarray(state))
+
+
+def test_sparse_decode_step_mixed_liveness():
+    """Multi-word case where SOME words are provably silent (k and v never
+    coincide) and others are live -- the masked slab must not bleed."""
+    t, b, h, dh = 64, 1, 2, 8
+    shape = (b, h, 1, dh)
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 2, (t,) + shape).astype(np.float32)
+    k = np.zeros((t,) + shape, np.float32)
+    v = np.zeros((t,) + shape, np.float32)
+    k[:20] = rng.integers(0, 2, (20,) + shape)   # word 0 live on k
+    v[:20] = rng.integers(0, 2, (20,) + shape)
+    k[40:] = rng.integers(0, 2, (24,) + shape)   # word 1: k fires, v silent
+    state = ssa_linear_state_init(t, b, h, dh)
+    want_state, want = ssa_linear_decode_step(
+        state, jnp.asarray(q), jnp.asarray(k), jnp.asarray(v))
+    qw, kw, vw = (packing.pack(jnp.asarray(x), t).words for x in (q, k, v))
+    got_state, got = ssa_linear_decode_step_packed_sparse(
+        state, qw, kw, vw, t=t)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_state),
+                                  np.asarray(want_state))
+
+
+# -- engine: sparse plans are bit-exact execution strategies ------------------
+
+@pytest.mark.parametrize("ordering", ["quadratic", "linear"])
+@pytest.mark.parametrize("t", [8, 32])
+def test_sparse_plan_full_forward_bit_exact(t, ordering):
+    cfg, params = _model(t)
+    tokens = _tokens(12)
+    dense = engine.apply(
+        engine.compile_plan(params, None, cfg, ordering=ordering), tokens)
+    sparse = engine.apply(
+        engine.compile_plan(params, None, cfg, backend="jnp+packed+sparse",
+                            ordering=ordering), tokens)
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(dense))
+
+
+def test_sparse_plan_multiword_matches_packed():
+    """T=40 (two words, ragged tail): sparse == packed bit-for-bit.  (The
+    dense oracle differs from BOTH packed routes in the last ulp at non
+    power-of-two T: rate decode divides by T where dense mean multiplies by
+    1/T, and 1/40 is not a binary fraction -- a pre-existing property of the
+    packed datapath, not of sparsity.)"""
+    t = 40
+    cfg, params = _model(t)
+    tokens = _tokens(10)
+    packed = engine.apply(
+        engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                            ordering="linear"), tokens)
+    sparse = engine.apply(
+        engine.compile_plan(params, None, cfg, backend="jnp+packed+sparse",
+                            ordering="linear"), tokens)
+    np.testing.assert_array_equal(np.asarray(sparse), np.asarray(packed))
+    dense = engine.apply(
+        engine.compile_plan(params, None, cfg, ordering="linear"), tokens)
+    np.testing.assert_allclose(np.asarray(sparse), np.asarray(dense),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("t", [8, 32])
+def test_sparse_decode_bit_exact_vs_dense(t):
+    """Prefill + stepped decode under the sparse backend (train-table embed
+    re-use included) reproduces the dense decode logits exactly."""
+    cfg, params = _model(t)
+    prompt = _tokens(9)
+    ref_plan = engine.compile_plan(params, None, cfg, ordering="linear")
+    sp_plan = engine.compile_plan(params, None, cfg,
+                                  backend="jnp+packed+sparse",
+                                  ordering="linear")
+    ref_logits, ref_state = engine.prefill(ref_plan, prompt)
+    logits, state = engine.prefill(sp_plan, prompt)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    tok = jnp.argmax(ref_logits[:, -1], axis=-1).astype(jnp.int32)
+    for _ in range(4):
+        ref_logits, ref_state = engine.decode_step(ref_plan, ref_state, tok)
+        logits, state = engine.decode_step(sp_plan, state, tok)
+        np.testing.assert_array_equal(np.asarray(logits),
+                                      np.asarray(ref_logits))
+        tok = jnp.argmax(ref_logits, axis=-1).astype(jnp.int32)
+
+
+def test_sparse_plan_attaches_train_table():
+    """Sparse LM plans carry the precomputed packed train table the decode
+    step fetches from; its rows equal the encoding LIF's actual trains."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, backend="jnp+packed+sparse",
+                               ordering="linear")
+    words = plan.params["embed"]["train_words"]
+    v = cfg.vocab_size
+    assert words.shape[1] == v and words.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.asarray(bundling.row_train_table(plan)))
+    plain = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                                ordering="linear")
+    assert "train_words" not in plain.params["embed"]
+
+
+def test_backend_sparse_flag():
+    be = backend_lib.resolve("jnp+packed+sparse")
+    assert be.sparse and be.packed
+    assert backend_lib.resolve("jnp+sparse").packed      # sparse implies packed
+    with pytest.raises(ValueError):
+        engine.Backend("jnp", sparse=True)               # sparse needs packed
+
+
+# -- row bundling -------------------------------------------------------------
+
+def _dup_params(t=8):
+    """Model params whose embedding table has every odd row a copy of the
+    preceding even row -- 128 guaranteed duplicate spike trains."""
+    cfg, params = _model(t)
+    table = params["embed"]["table"]
+    dup = table.at[1::2].set(table[::2])
+    params = {**params, "embed": {**params["embed"], "table": dup}}
+    return cfg, params
+
+
+def test_bundle_radius0_dedup_bit_exact():
+    cfg, params = _dup_params()
+    probe = _tokens(16, seed=5)
+    plain = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                                ordering="linear")
+    bundled = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                                  ordering="linear", bundle=0.0)
+    info = bundled.meta.bundle
+    # a zero budget admits ANY radius whose MEASURED error is zero (here the
+    # only rows within reach are the exact duplicates), so pin the error and
+    # the merge count, not the radius
+    assert info.logit_err == 0.0
+    assert info.rows_merged >= cfg.vocab_size // 2
+    np.testing.assert_array_equal(np.asarray(engine.apply(bundled, probe)),
+                                  np.asarray(engine.apply(plain, probe)))
+    stats = planlib.plan_stats(bundled)
+    assert stats["bundled"] and stats["bundle_radius"] == info.radius
+    assert stats["bundle_rows_merged"] == info.rows_merged
+    assert stats["bundle_logit_err"] == 0.0
+    assert not planlib.plan_stats(plain)["bundled"]
+
+
+def test_bundle_budget_gates_lossy_radius():
+    """A radius that merges everything is accepted only when the measured
+    logit error fits the budget; a zero budget forces exact dedup."""
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                               ordering="linear")
+    nbits = 32 * bundling.row_signatures(plan).shape[1]
+    lossy = bundling.bundle(plan, budget=float("inf"), radii=[nbits])
+    info = lossy.meta.bundle
+    assert info.radius == nbits and info.num_bundles == 1
+    assert info.rows_merged == cfg.vocab_size - 1
+    assert info.logit_err > 0.0          # measured, and within (infinite) budget
+    strict = bundling.bundle(plan, budget=0.0, radii=[nbits, 0])
+    assert strict.meta.bundle.radius == 0
+    assert strict.meta.bundle.logit_err == 0.0
+
+
+def test_bundle_rewrites_sparse_train_table():
+    """Bundling a sparse plan refreshes the precomputed train table: bundled
+    rows share their representative's train, and decode still matches the
+    bundled plan's own full forward exactly."""
+    cfg, params = _dup_params()
+    plan = engine.compile_plan(params, None, cfg, backend="jnp+packed+sparse",
+                               ordering="linear", bundle=0.0)
+    words = plan.params["embed"]["train_words"]
+    np.testing.assert_array_equal(np.asarray(words[:, 1::2]),
+                                  np.asarray(words[:, ::2]))
+    prompt = _tokens(6, seed=9)
+    logits, state = engine.prefill(plan, prompt)
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    step_logits, _ = engine.decode_step(plan, state, tok)
+    full = engine.apply(plan, jnp.concatenate([prompt, tok[:, None]], axis=1))
+    np.testing.assert_array_equal(np.asarray(step_logits),
+                                  np.asarray(full[:, -1]))
+
+
+def test_bundle_rejects_vision_plans():
+    cfg = sf.SpikformerConfig(embed_dim=64, num_layers=1, num_heads=4, t=4)
+    params, state = sf.init(KEY, cfg)
+    with pytest.raises(ValueError, match="LM embedding tables only"):
+        engine.compile_plan(params, state, cfg, bundle=0.0)
+
+
+# -- checkpoint restore into compile_plan -------------------------------------
+
+def test_compile_plan_restores_checkpoint(tmp_path):
+    cfg = _cfg(8)
+    trained = slm.init_spiking_lm(jax.random.PRNGKey(7), cfg)
+    ckpt.save(tmp_path / "ck", 3, trained)
+    skel = slm.init_spiking_lm(KEY, cfg)         # same shapes, other values
+    tokens = _tokens(8)
+    want = engine.apply(engine.compile_plan(trained, None, cfg), tokens)
+    got = engine.apply(
+        engine.compile_plan(skel, None, cfg,
+                            checkpoint=str(tmp_path / "ck")), tokens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    base = engine.apply(engine.compile_plan(skel, None, cfg), tokens)
+    assert not np.array_equal(np.asarray(base), np.asarray(want))
+
+
+def test_trained_fixture_memoized_and_learned(tmp_path):
+    d = tmp_path / "fix"
+    ckpt_dir, cfg = fixtures.trained_lm_fixture(d)
+    step = ckpt.latest_step(ckpt_dir)
+    assert step is not None
+    manifest = json.loads(
+        (Path(ckpt_dir) / f"step_{step:08d}" / "manifest.json").read_text())
+    meta = manifest["meta"]
+    assert meta["loss_last"] < meta["loss_first"]        # it actually learned
+    pointer = Path(ckpt_dir) / "LATEST"
+    mtime = pointer.stat().st_mtime_ns
+    ckpt_dir2, _ = fixtures.trained_lm_fixture(d)        # memoized: no retrain
+    assert str(ckpt_dir2) == str(ckpt_dir)
+    assert pointer.stat().st_mtime_ns == mtime
+    # spike_t changes no parameter shape: ONE checkpoint serves every T
+    for t in (8, 32):
+        cfg_t = fixtures.fixture_config(spike_t=t)
+        skel = slm.init_spiking_lm(KEY, cfg_t)
+        plan = engine.compile_plan(skel, None, cfg_t, backend="jnp+packed",
+                                   ordering="linear", checkpoint=str(ckpt_dir))
+        out = engine.apply(plan, _tokens(4, seed=2, batch=1))
+        assert out.shape == (1, 4, cfg_t.vocab_size)
+
+
+# -- linear ordering closes the packed boundary (satellite a) -----------------
+
+def test_linear_prefill_never_unpacks(monkeypatch):
+    """Under the closed packed Pallas backend, the LINEAR-ordering prefill
+    consumes q/k/v words directly (in-register shift-and-mask) -- no
+    ``packing.unpack`` anywhere -- and matches the dense prefill exactly."""
+    cfg, params = _model(8)
+    seq = _tokens(9)
+    ref_plan = engine.compile_plan(params, None, cfg, ordering="linear")
+    ref_logits, ref_state = engine.prefill(ref_plan, seq)
+
+    def boom(*a, **kw):
+        raise AssertionError("packing.unpack called in the linear prefill")
+
+    monkeypatch.setattr(packing, "unpack", boom)
+    plan = engine.compile_plan(params, None, cfg,
+                               backend=PALLAS_PACKED_KERNEL,
+                               ordering="linear")
+    logits, state = engine.prefill(plan, seq)
+    np.testing.assert_array_equal(np.asarray(logits), np.asarray(ref_logits))
+    for got, want in zip(state.kv, ref_state.kv):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_linear_ordering_priced_closed():
+    cfg = _cfg(32)
+    tr = analysis.lm_spike_traffic(cfg, seq_len=64, ordering="linear",
+                                   backend=PALLAS_PACKED_KERNEL)
+    assert tr["ssa_boundary_closed"]
+    assert tr["reduction_ssa_dense"] == tr["reduction"] >= 32.0
+    tr_open = analysis.lm_spike_traffic(cfg, seq_len=64, ordering="linear",
+                                        backend="jnp+packed")
+    assert not tr_open["ssa_boundary_closed"]
+
+
+# -- measured skip rates + occupancy-aware traffic pricing --------------------
+
+def test_sparsity_report_measures_occupancy():
+    cfg, params = _model(8)
+    plan = engine.compile_plan(params, None, cfg, backend="jnp+packed+sparse",
+                               ordering="linear")
+    rep = analysis.sparsity_report(plan, _tokens(16, seed=6))
+    assert rep["num_taps"] > 0 and len(rep["taps"]) == rep["num_taps"]
+    for key in ("word_zero_rate", "occ_tile_zero_rate",
+                "token_granule_zero_rate", "spike_rate"):
+        assert 0.0 <= rep[key] <= 1.0
+    assert rep["word_zero_rate"] > 0.0           # something to skip
+    dense_plan = engine.compile_plan(params, None, cfg, ordering="linear")
+    with pytest.raises(ValueError, match="packed backend"):
+        analysis.sparsity_report(dense_plan, _tokens(16, seed=6))
+
+
+def test_traffic_prices_sparse_occupancy():
+    cfg = _cfg(8)
+    tr = analysis.lm_spike_traffic(cfg, seq_len=64,
+                                   backend="jnp+packed+sparse")
+    assert tr["packed_sparse_bytes"] == tr["packed_bytes"] + tr["occupancy_bytes"]
+    assert 0 < tr["reduction_sparse"] < tr["reduction"]
+    plain = analysis.lm_spike_traffic(cfg, seq_len=64, backend="jnp+packed")
+    assert "packed_sparse_bytes" not in plain
+    assert "reduction_sparse" not in plain

@@ -243,12 +243,14 @@ def test_spike_traffic_boundary_flip():
         assert not tr["ssa_boundary_closed"]
         assert tr["reduction_ssa_dense"] == open_tr["reduction_ssa_dense"]
 
-    # the linear ordering never rides the quadratic kernel: boundary open
+    # the linear ordering rides its own packed route (ssa_linear_packed
+    # shifts bitplanes out in-register): boundary closed here too
     lin = analysis.spike_traffic(
         sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=8,
                             attn_ordering="linear"),
         backend=PALLAS_PACKED_KERNEL)
-    assert not lin["ssa_boundary_closed"]
+    assert lin["ssa_boundary_closed"]
+    assert lin["packed_bytes_ssa_dense"] == lin["packed_bytes"]
 
 
 def test_spike_traffic_closed_t32():
