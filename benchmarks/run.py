@@ -10,6 +10,11 @@ each benchmark's own detailed report.
   sparsity -- occupancy-map zero-word skipping: measured skip rates + decode
              tokens/s dense vs packed vs sparse-packed on the trained-fixture
              checkpoint (real activations)
+  sharded -- cross-device spike bytes of mesh-sharded plans on a (1, 2)
+             mesh: analytic ring-collective pricing per crossing edge,
+             dense f32 vs packed uint32 words, cross-checked against the
+             jaxpr-measured collective wire bytes on a forced 2-device host
+             mesh
   table1  -- IAND vs ADD residual training proxy (paper Table I)
   table2  -- serial vs parallel tick-batching weight traffic (Table II /
              the -43.2% weight-access claim)
@@ -39,7 +44,7 @@ def _run(name, fn):
 
 
 def write_bench_json(engine_result, packed_result, lm_result=None,
-                     sparsity_result=None) -> None:
+                     sparsity_result=None, sharded_result=None) -> None:
     """Persist the engine perf trajectory machine-readably: per-config
     tokens/s and inter-layer activation bytes, tracked across PRs.
 
@@ -146,6 +151,34 @@ def write_bench_json(engine_result, packed_result, lm_result=None,
             entry["checkpoint"] = sparsity_result["checkpoint"]
             entry["bundle"] = sparsity_result["bundle"]
             configs[f"{row['config']}@sparse-T{row['t']}"] = entry
+    if sharded_result is not None:
+        # mesh rows (benchmarks/sharded_traffic.py): analytic cross-device
+        # ring-collective wire bytes per crossing spike edge on a (data,
+        # model) mesh, dense f32 vs packed uint32 words -- the interconnect
+        # keeps the full T/ceil(T/32) packing factor (8x at T=8) because the
+        # collectives move the SAME words as the on-chip datapath
+        d, m = sharded_result["mesh"]
+        measured = sharded_result["measured"]
+        for row in sharded_result["rows"]:
+            entry = {
+                "t": row["t"],
+                "family": row["family"],
+                "mesh": row["mesh"],
+                "crossing_edges": row["crossing_edges"],
+                "cross_device_bytes_dense": row["cross_device_dense_bytes"],
+                "cross_device_bytes_packed": row["cross_device_packed_bytes"],
+                "cross_device_reduction": row["cross_device_reduction"],
+            }
+            if "seq_len" in row:
+                entry["seq_len"] = row["seq_len"]
+            if measured is not None and row["family"] in measured:
+                mm = measured[row["family"]]
+                entry["measured_wire"] = {
+                    "config": mm["config"], "t": mm["t"],
+                    "wire_bytes": mm["wire_bytes"], "dtypes": mm["dtypes"],
+                    "num_collectives": mm["num_collectives"],
+                }
+            configs[f"{row['config']}@mesh{d}x{m}-T{row['t']}"] = entry
     BENCH_JSON.write_text(json.dumps({"configs": configs}, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
 
@@ -153,8 +186,8 @@ def write_bench_json(engine_result, packed_result, lm_result=None,
 def main() -> None:
     from benchmarks import (engine_fused_vs_naive, int8_decode, kernel_bench,
                             linear_attention_scaling, lm_plan, packed_traffic,
-                            perf_spiking, sparsity, table1_iand_vs_add,
-                            table2_weight_traffic)
+                            perf_spiking, sharded_traffic, sparsity,
+                            table1_iand_vs_add, table2_weight_traffic)
 
     print("name,us_per_call,derived")
     engine_result = _run("engine_fused_vs_naive", engine_fused_vs_naive.main)
@@ -164,7 +197,10 @@ def main() -> None:
     lm_result = _run("lm_plan", lm_plan.main)
     print()
     sparsity_result = _run("sparsity", sparsity.main)
-    write_bench_json(engine_result, packed_result, lm_result, sparsity_result)
+    print()
+    sharded_result = _run("sharded_traffic", sharded_traffic.main)
+    write_bench_json(engine_result, packed_result, lm_result, sparsity_result,
+                     sharded_result)
     print()
     _run("table2_weight_traffic", table2_weight_traffic.main)
     print()

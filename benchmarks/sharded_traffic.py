@@ -1,0 +1,163 @@
+"""Cross-device spike traffic of mesh-sharded deploy plans (ISSUE 8).
+
+Prices every crossing spike edge of the tensor-parallel schedules on a
+(1, 2) mesh -- analytic ring-collective wire bytes, dense f32 vs packed
+uint32 words -- for the Table-I ``spike-iand-former-8-384`` vision config
+and the smoke spiking-LM config at T in {8, 32}.  The packed interconnect
+keeps the full bitplane factor: T / ceil(T/32) (8x at T=8, 32x at T=32),
+because the collectives move the SAME uint32 words the on-chip datapath
+carries (``repro.engine`` ``word_allgather``; no unpack ever crosses).
+
+The analytic rows are cross-checked by a MEASURED pass: a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=2`` compiles the smoke
+plans on a real (1, 2) mesh and sums the collective wire bytes straight out
+of the jaxpr (``analysis.collective_report``).  Analytic == measured for the
+packed LM plan; environments that cannot fork the 2-device subprocess report
+``measured: None`` and keep the analytic rows.
+
+Run: PYTHONPATH=src python -m benchmarks.sharded_traffic
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+
+MESH = (1, 2)
+TS = (8, 32)
+SEQ_LEN = 64       # analytic LM pricing length
+VISION_CONFIG = "spike-iand-former-8-384"
+LM_CONFIG = "llama3.2-1b_smoke"
+
+# one subprocess measures BOTH smoke plans on a real 2-device host mesh;
+# it prints exactly one JSON line on fd 1
+_MEASURE_SRC = r"""
+import json, jax, jax.numpy as jnp
+import repro.configs
+from repro import engine
+from repro.configs.spike_iand_former import get_vision_config
+from repro.engine import analysis
+from repro.models import spiking_lm as slm
+from repro.models.lm import get_config
+
+out = {"device_count": jax.device_count()}
+
+from repro.core import spikformer as sf
+
+vcfg = get_vision_config("spike-iand-former_smoke")
+vp, vs = sf.init(jax.random.PRNGKey(0), vcfg)
+img = jnp.zeros((2, vcfg.img_size, vcfg.img_size, vcfg.in_channels))
+plan = engine.compile_plan(vp, vs, vcfg, backend="jnp+packed", mesh=(1, 2))
+rep = analysis.collective_report(engine.make_apply_fn(plan), plan.params, img)
+out["vision"] = {"config": "spike-iand-former_smoke", "t": vcfg.t, "batch": 2,
+                 "wire_bytes": rep["wire_bytes"], "dtypes": rep["dtypes"],
+                 "num_collectives": rep["num_collectives"]}
+
+lcfg = get_config("llama3.2-1b_smoke").replace(
+    spiking=True, spike_t=8, num_heads=4, head_dim=None)
+lp = slm.init_spiking_lm(jax.random.PRNGKey(0), lcfg)
+plan = engine.compile_plan(lp, None, lcfg, backend="jnp+packed",
+                           ordering="linear", mesh=(1, 2))
+toks = jnp.zeros((2, 8), dtype=jnp.int32)
+rep = analysis.collective_report(engine.make_apply_fn(plan), plan.params, toks)
+ana = analysis.lm_spike_traffic(lcfg, seq_len=8, batch=2, mesh=(1, 2))
+out["lm"] = {"config": "llama3.2-1b_smoke", "t": 8, "batch": 2, "seq_len": 8,
+             "wire_bytes": rep["wire_bytes"], "dtypes": rep["dtypes"],
+             "num_collectives": rep["num_collectives"],
+             "analytic_packed_bytes": ana["cross_device_packed_bytes"],
+             "matches_analytic":
+                 rep["wire_bytes"] == ana["cross_device_packed_bytes"]}
+print(json.dumps(out))
+"""
+
+
+def _measure():
+    """Measured collective wire bytes on a forced 2-device host mesh, or
+    ``None`` when the subprocess cannot run (no fork, broken env)."""
+    root = pathlib.Path(__file__).resolve().parent.parent
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = str(root / "src")
+    try:
+        proc = subprocess.run([sys.executable, "-c", _MEASURE_SRC],
+                              capture_output=True, text=True, timeout=600,
+                              env=env, cwd=root)
+        if proc.returncode != 0:
+            return None
+        return json.loads(proc.stdout.strip().splitlines()[-1])
+    except (OSError, subprocess.SubprocessError, ValueError):
+        return None
+
+
+def _analytic_rows():
+    import repro.configs  # noqa: F401  (registers LM archs)
+    from repro.configs.spike_iand_former import get_vision_config
+    from repro.engine import analysis
+    from repro.models.lm import get_config
+
+    rows = []
+    for t in TS:
+        vcfg = dataclasses.replace(get_vision_config(VISION_CONFIG), t=t)
+        tr = analysis.spike_traffic(vcfg, mesh=MESH)
+        rows.append(_row(VISION_CONFIG, "vision", t, tr))
+        lcfg = get_config(LM_CONFIG).replace(
+            spiking=True, spike_t=t, num_heads=4, head_dim=None)
+        tr = analysis.lm_spike_traffic(lcfg, seq_len=SEQ_LEN, mesh=MESH)
+        rows.append(_row(LM_CONFIG, "lm", t, tr, seq_len=SEQ_LEN))
+    return rows
+
+
+def _row(config, family, t, traffic, **extra):
+    crossing = [e for e in traffic["edges"] if e["crosses_devices"]]
+    return {
+        "config": config, "family": family, "t": t,
+        "mesh": list(MESH),
+        "crossing_edges": len(crossing),
+        "per_edge": [{"name": e["name"],
+                      "cross_device_dense_bytes": e["cross_device_dense_bytes"],
+                      "cross_device_packed_bytes": e["cross_device_packed_bytes"]}
+                     for e in crossing],
+        "cross_device_dense_bytes": traffic["cross_device_dense_bytes"],
+        "cross_device_packed_bytes": traffic["cross_device_packed_bytes"],
+        "cross_device_reduction": traffic["cross_device_reduction"],
+        **extra,
+    }
+
+
+def main():
+    rows = _analytic_rows()
+    print(f"== cross-device spike traffic on a {MESH[0]}x{MESH[1]} mesh ==")
+    print(f"{'config':<28} {'T':>3} {'edges':>5} {'dense B':>12} "
+          f"{'packed B':>12} {'reduction':>9}")
+    for r in rows:
+        print(f"{r['config']:<28} {r['t']:>3} {r['crossing_edges']:>5} "
+              f"{r['cross_device_dense_bytes']:>12} "
+              f"{r['cross_device_packed_bytes']:>12} "
+              f"{r['cross_device_reduction']:>8.1f}x")
+    measured = _measure()
+    if measured is None:
+        print("measured: None (2-device subprocess unavailable; "
+              "analytic rows stand alone)")
+    else:
+        for fam in ("vision", "lm"):
+            m = measured[fam]
+            print(f"measured[{fam}] {m['config']} T={m['t']}: "
+                  f"{m['num_collectives']} collectives, "
+                  f"{m['wire_bytes']} wire bytes, dtypes={m['dtypes']}")
+        assert measured["lm"]["matches_analytic"], (
+            "measured LM wire bytes diverged from the analytic pricing: "
+            f"{measured['lm']}")
+        assert all(m["dtypes"] == ["uint32"]
+                   for m in (measured["vision"], measured["lm"])), measured
+        print("measured packed collectives: uint32-only, LM wire bytes == "
+              "analytic pricing")
+    return {"mesh": list(MESH), "rows": rows, "measured": measured}
+
+
+if __name__ == "__main__":
+    main()

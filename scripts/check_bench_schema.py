@@ -1,15 +1,17 @@
 #!/usr/bin/env python
-"""Bench-schema sanity: the sparse-row keys ``benchmarks/run.py`` persists to
+"""Bench-schema sanity: the row keys ``benchmarks/run.py`` persists to
 ``BENCH_engine.json`` must match the keys ``README.md`` documents.
 
-Three-way check, no JAX needed (CI-cheap):
+Covers the sparse rows (``@sparse-T``, written by ``benchmarks/sparsity.py``)
+and the mesh rows (``@mesh``, written by ``benchmarks/sharded_traffic.py``).
+Three-way check per block, no JAX needed (CI-cheap):
 
   1. README documents exactly the keys the committed ``BENCH_engine.json``
-     sparse rows carry (documented == actual, both directions);
+     rows carry (documented == actual, both directions);
   2. every documented key appears as a string literal in the benchmark
      sources, so the docs cannot drift ahead of the writer either.
 
-README marks the documented list with ``bench-sparse-schema`` comment
+README marks each documented list with ``bench-<name>-schema`` comment
 markers; every backticked identifier between them is a schema key.
 """
 
@@ -22,55 +24,71 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 
+# marker name -> (row-key marker substring, benchmark sources beyond run.py)
+BLOCKS = {
+    "bench-sparse-schema": ("@sparse-T", ["sparsity.py"]),
+    "bench-sharded-schema": ("@mesh", ["sharded_traffic.py"]),
+}
 
-def main() -> int:
-    readme = (ROOT / "README.md").read_text()
-    m = re.search(r"<!-- bench-sparse-schema:begin -->(.*?)"
-                  r"<!-- bench-sparse-schema:end -->", readme, re.S)
+
+def _collect(obj, acc):
+    # README documents nested keys too (``bundle`` / ``measured_wire``
+    # sub-dicts), so gather keys at every depth
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            acc.add(k)
+            _collect(v, acc)
+
+
+def _check_block(readme: str, configs: dict, marker: str, key_tag: str,
+                 sources: list[str]) -> bool:
+    m = re.search(rf"<!-- {marker}:begin -->(.*?)<!-- {marker}:end -->",
+                  readme, re.S)
     if not m:
-        print("README.md: bench-sparse-schema markers not found")
-        return 1
+        print(f"README.md: {marker} markers not found")
+        return False
     documented = set(re.findall(r"`([a-z_][a-z0-9_]*)`", m.group(1)))
 
-    configs = json.loads((ROOT / "BENCH_engine.json").read_text())["configs"]
-    rows = {k: v for k, v in configs.items() if "@sparse-T" in k}
+    rows = {k: v for k, v in configs.items() if key_tag in k}
     if not rows:
-        print("BENCH_engine.json: no @sparse-T rows (run benchmarks/run.py)")
-        return 1
-
-    def collect(obj, acc):
-        # README documents nested keys too (the ``bundle`` sub-dict), so
-        # gather keys at every depth
-        if isinstance(obj, dict):
-            for k, v in obj.items():
-                acc.add(k)
-                collect(v, acc)
+        print(f"BENCH_engine.json: no {key_tag} rows (run benchmarks/run.py)")
+        return False
 
     actual = set()
     for row in rows.values():
-        collect(row, actual)
+        _collect(row, actual)
 
-    src = ((ROOT / "benchmarks" / "run.py").read_text()
-           + (ROOT / "benchmarks" / "sparsity.py").read_text())
+    src = (ROOT / "benchmarks" / "run.py").read_text()
+    for name in sources:
+        src += (ROOT / "benchmarks" / name).read_text()
     unwritten = {k for k in documented if f'"{k}"' not in src}
 
     ok = True
     if actual - documented:
-        print(f"keys in BENCH_engine.json but not in README: "
+        print(f"[{marker}] keys in BENCH_engine.json but not in README: "
               f"{sorted(actual - documented)}")
         ok = False
     if documented - actual:
-        print(f"keys documented in README but absent from BENCH_engine.json: "
-              f"{sorted(documented - actual)}")
+        print(f"[{marker}] keys documented in README but absent from "
+              f"BENCH_engine.json: {sorted(documented - actual)}")
         ok = False
     if unwritten:
-        print(f"keys documented in README but never written by the "
-              f"benchmarks: {sorted(unwritten)}")
+        print(f"[{marker}] keys documented in README but never written by "
+              f"the benchmarks: {sorted(unwritten)}")
         ok = False
     if ok:
-        print(f"bench schema OK: {len(documented)} keys consistent across "
-              f"README, BENCH_engine.json ({len(rows)} sparse rows), and the "
+        print(f"[{marker}] OK: {len(documented)} keys consistent across "
+              f"README, BENCH_engine.json ({len(rows)} rows), and the "
               "benchmark sources")
+    return ok
+
+
+def main() -> int:
+    readme = (ROOT / "README.md").read_text()
+    configs = json.loads((ROOT / "BENCH_engine.json").read_text())["configs"]
+    ok = True
+    for marker, (key_tag, sources) in BLOCKS.items():
+        ok = _check_block(readme, configs, marker, key_tag, sources) and ok
     return 0 if ok else 1
 
 

@@ -99,6 +99,39 @@ def make_rules(*, multi_pod: bool = False, preset: str = "base",
     return rules
 
 
+# Deploy-engine rule overrides per plan family (``engine.plan.ShardingCfg``
+# resolves through these).  The schedules differ because bit-exactness vs the
+# single-device plan is a hard contract of the sharded engine:
+#
+#   vision: folded Linear+BN units have no cross-feature epilogue, so the
+#     full column-parallel (Megatron-style) schedule is exact -- the residual
+#     spike stream itself lives feature-sharded between joins (embed ->
+#     model), heads and ffn columns are sharded, and every cross-device edge
+#     is a packed-word all-gather.
+#   lm: folded Linear+RMSNorm units keep a data-dependent normalizer that
+#     reduces over the FULL output-feature axis (``cnn.rms_epilogue``);
+#     splitting that f32 reduction across shards would reassociate it and
+#     break bitwise equality.  So LM units run model-replicated and the TP
+#     axis shards the SSA heads (and the per-head K^T V decode state) only:
+#     embed/ffn/vocab stay replicated, heads -> model.
+ENGINE_FAMILY_OVERRIDES: dict[str, dict[str, Any]] = {
+    "vision": {"embed": "model"},
+    "lm": {"embed": None, "ffn": None, "vocab": None},
+}
+
+
+def engine_rules(family: str, *, preset: str = "base",
+                 **overrides) -> dict[str, Any]:
+    """Logical-axis rules of a deploy-engine plan family ("vision" | "lm"):
+    :func:`make_rules` with the family's bit-exactness-preserving overrides
+    applied (explicit ``overrides`` still win)."""
+    if family not in ENGINE_FAMILY_OVERRIDES:
+        raise ValueError(f"unknown engine plan family: {family!r}")
+    ov = dict(ENGINE_FAMILY_OVERRIDES[family])
+    ov.update(overrides)
+    return make_rules(preset=preset, **ov)
+
+
 _ACTIVE_RULES: dict[str, Any] | None = None
 
 

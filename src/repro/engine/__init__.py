@@ -19,13 +19,22 @@ the training graph in ``repro.core`` -- one definition, two views.
 inter-layer activations travel as uint32 bitplane words
 (``repro.core.packing``), cutting inter-layer spike traffic by up to 32x
 (8x at T=8) while staying bit-exact with the dense plan.
+
+``compile_plan(..., mesh=...)`` makes a plan mesh-aware end to end
+(:class:`ShardingCfg` on ``PlanMeta``): executors run under ``shard_map`` on
+a (data, model) host mesh, and every cross-device spike edge moves as uint32
+bitplane words through the packed-word collectives
+(:func:`word_allgather` / :func:`word_psum` / :func:`word_reduce_scatter`) --
+bit-exact vs the single-device plan on every backend and ordering.
 """
 
 from repro.engine.backend import (
     JNP, JNP_PACKED, PALLAS, PALLAS_PACKED, Backend,
-    resolve as resolve_backend, ssa_apply, ssa_apply_packed, ssa_decode_step,
-    ssa_decode_step_packed, ssa_prefill_apply, ssa_prefill_apply_packed,
-    ssa_prefill_state, ssa_prefill_state_packed,
+    resolve as resolve_backend, spike_allgather, spike_shard, ssa_apply,
+    ssa_apply_packed, ssa_decode_step, ssa_decode_step_packed,
+    ssa_prefill_apply, ssa_prefill_apply_packed, ssa_prefill_state,
+    ssa_prefill_state_packed, unit_partition_specs, word_allgather, word_psum,
+    word_reduce_scatter,
 )
 from repro.engine.execute import (
     DecodeState, apply, decode_state_init, decode_step, make_apply_fn,
@@ -36,19 +45,22 @@ from repro.engine.layout import (
     lm_decode_spike_edges, lm_spike_edges, spike_edges, tokenizer_layout,
 )
 from repro.engine.plan import (
-    DecodeEntry, DeployPlan, LMDeployCfg, PlanMeta, compile_plan, plan_stats,
+    DecodeEntry, DeployPlan, LMDeployCfg, PlanMeta, ShardingCfg, compile_plan,
+    plan_stats,
 )
 
 __all__ = [
     "JNP", "JNP_PACKED", "PALLAS", "PALLAS_PACKED", "Backend",
-    "resolve_backend", "ssa_apply", "ssa_apply_packed", "ssa_decode_step",
-    "ssa_decode_step_packed", "ssa_prefill_apply", "ssa_prefill_apply_packed",
-    "ssa_prefill_state", "ssa_prefill_state_packed",
+    "resolve_backend", "spike_allgather", "spike_shard", "ssa_apply",
+    "ssa_apply_packed", "ssa_decode_step", "ssa_decode_step_packed",
+    "ssa_prefill_apply", "ssa_prefill_apply_packed", "ssa_prefill_state",
+    "ssa_prefill_state_packed", "unit_partition_specs", "word_allgather",
+    "word_psum", "word_reduce_scatter",
     "DecodeState", "apply", "decode_state_init", "decode_step",
     "make_apply_fn", "make_decode_step_fn", "make_prefill_fn", "prefill",
     "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "lm_block_layout",
     "lm_decode_spike_edges", "lm_spike_edges", "spike_edges",
     "tokenizer_layout",
-    "DecodeEntry", "DeployPlan", "LMDeployCfg", "PlanMeta", "compile_plan",
-    "plan_stats",
+    "DecodeEntry", "DeployPlan", "LMDeployCfg", "PlanMeta", "ShardingCfg",
+    "compile_plan", "plan_stats",
 ]

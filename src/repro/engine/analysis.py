@@ -92,7 +92,7 @@ def rmsnorm_op_count(fn, *args, **kwargs) -> int:
 
 
 def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
-                  backend=None) -> dict:
+                  backend=None, mesh=None) -> dict:
     """Inter-layer spike-activation bytes of one forward pass, dense vs
     packed.
 
@@ -110,29 +110,44 @@ def spike_traffic(cfg, *, batch: int = 1, img_size: int | None = None,
     attention op's boundary) they conservatively price those edges dense.
     Both are what ``benchmarks/packed_traffic.py`` reports against the
     Table-I configs.
+
+    ``mesh`` (ShardingCfg | "dxm" | (data, model)) additionally prices each
+    edge's CROSS-DEVICE bytes under the sharded vision plan, instead of one
+    blended on-chip number: an edge whose feature axis maps to a >1 model
+    axis is produced feature-sharded and all-gathered by its consumer
+    (fleet-total wire bytes = full edge bytes x (m-1), the ring all-gather
+    cost), EXCEPT the ssa_boundary q/k/v edges, whose consumer is the
+    head-local SSA and which never cross.  Data-parallel replicas move no
+    activations between them, so the data axis adds nothing.
     """
     from repro.engine.layout import spike_edges
 
     boundary_closed = _boundary_closed(backend, cfg.attn_ordering)
     return _price_edges(spike_edges(cfg, img_size=img_size), cfg.t,
                         batch=batch, boundary_closed=boundary_closed,
-                        sparse=_is_sparse(backend))
+                        sparse=_is_sparse(backend),
+                        scfg=_traffic_sharding(mesh, "vision"))
 
 
 def lm_spike_traffic(cfg, *, seq_len: int, batch: int = 1, backend=None,
-                     ordering: str = "quadratic") -> dict:
+                     ordering: str = "quadratic", mesh=None) -> dict:
     """Inter-layer spike-activation bytes of one spiking-LM forward pass at
     ``seq_len`` tokens (``cfg`` is an ``ArchConfig``; same pricing and
-    SSA-boundary semantics as :func:`spike_traffic`)."""
+    SSA-boundary semantics as :func:`spike_traffic`).  ``mesh`` prices
+    cross-device bytes under the head-sharded LM schedule: the attention
+    LIF output is the one crossing edge per block (embed/ffn edges are
+    consumed by model-replicated units, q/k/v by the head-local SSA)."""
     from repro.engine.layout import lm_spike_edges
 
     boundary_closed = _boundary_closed(backend, ordering)
     return _price_edges(lm_spike_edges(cfg, seq_len=seq_len), cfg.spike_t,
                         batch=batch, boundary_closed=boundary_closed,
-                        sparse=_is_sparse(backend))
+                        sparse=_is_sparse(backend),
+                        scfg=_traffic_sharding(mesh, "lm"))
 
 
-def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
+def lm_decode_traffic(cfg, *, batch: int = 1, backend=None,
+                      mesh=None) -> dict:
     """Per-generated-token traffic of the incremental decode mode: the S=1
     spike edges (:func:`repro.engine.layout.lm_decode_spike_edges`) plus the
     O(d^2) SSA state each step reads and writes back.
@@ -143,14 +158,20 @@ def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
     directly under ``Backend.closes_ssa_boundary`` (there is no quadratic
     score tile in the step, so the ordering condition of the full-forward
     pricing does not apply); other backends unpack at the op boundary and
-    price those edges dense."""
+    price those edges dense.
+
+    ``mesh`` prices cross-device bytes per step (head-sharded schedule --
+    the attention edge crosses, everything else is shard-local); the K^T V
+    decode state is PINNED to its head shard (``DecodeState`` sharded over
+    heads), so state bytes never cross devices at any mesh size."""
     from repro.engine.layout import lm_decode_spike_edges
     from repro.engine.backend import resolve
 
     closed = backend is not None and resolve(backend).closes_ssa_boundary
     priced = _price_edges(lm_decode_spike_edges(cfg), cfg.spike_t,
                           batch=batch, boundary_closed=closed,
-                          sparse=_is_sparse(backend))
+                          sparse=_is_sparse(backend),
+                          scfg=_traffic_sharding(mesh, "lm"))
     dh = cfg.d_model // cfg.num_heads
     state_bytes = 4 * cfg.num_layers * cfg.spike_t * batch * cfg.num_heads * dh * dh
     priced["decode_state_bytes"] = state_bytes
@@ -159,7 +180,35 @@ def lm_decode_traffic(cfg, *, batch: int = 1, backend=None) -> dict:
     priced["dense_bytes_per_step"] = priced["dense_bytes"] + 2 * state_bytes
     priced["packed_bytes_per_step"] = (priced["packed_bytes_ssa_dense"]
                                        + 2 * state_bytes)
+    if mesh is not None:
+        priced["cross_device_state_bytes"] = 0   # state pinned to its shard
     return priced
+
+
+def _traffic_sharding(mesh, family: str):
+    """Coerce a traffic function's ``mesh=`` argument into the family's
+    resolved ``ShardingCfg`` (None passes through)."""
+    if mesh is None:
+        return None
+    from repro.engine.plan import _resolve_sharding
+
+    return _resolve_sharding(mesh, family)
+
+
+def _edge_mesh_degree(edge, rules: dict, sizes: dict) -> int:
+    """Tensor-parallel degree of one spike edge: the product of mesh-axis
+    sizes its FEATURE (last) logical axis maps to under the plan rules
+    (1 = the edge is replicated / shard-local)."""
+    if not edge.axes:
+        return 1
+    mapped = rules.get(edge.axes[-1])
+    if mapped is None:
+        return 1
+    names = mapped if isinstance(mapped, tuple) else (mapped,)
+    m = 1
+    for n in names:
+        m *= sizes.get(n, 1)
+    return m
 
 
 def _is_sparse(backend) -> bool:
@@ -181,7 +230,7 @@ def _boundary_closed(backend, ordering: str) -> bool:
 
 
 def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool,
-                 sparse: bool = False) -> dict:
+                 sparse: bool = False, scfg=None) -> dict:
     from repro.core import packing
 
     per_edge = [{
@@ -192,6 +241,22 @@ def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool,
         "packed_bytes": packing.packed_nbytes(t, e.elems * batch),
         "occupancy_bytes": packing.occupancy_nbytes(t, e.elems * batch),
     } for e in edges]
+    if scfg is not None:
+        sizes = dict(zip(scfg.mesh_axes, scfg.mesh_shape))
+        rules = scfg.rules_dict
+        for e, pe in zip(edges, per_edge):
+            m = _edge_mesh_degree(e, rules, sizes)
+            # an ssa_boundary edge's consumer (the per-head-local SSA) reads
+            # only the local head shard: sharded, but never on the wire
+            crosses = m > 1 and not e.ssa_boundary
+            pe["tp_degree"] = m
+            pe["crosses_devices"] = crosses
+            # fleet-total ring-all-gather wire bytes over the whole (global)
+            # batch: every shard's block travels to the m-1 other shards
+            pe["cross_device_dense_bytes"] = (
+                (m - 1) * pe["dense_bytes"] if crosses else 0)
+            pe["cross_device_packed_bytes"] = (
+                (m - 1) * pe["packed_bytes"] if crosses else 0)
     dense = sum(e["dense_bytes"] for e in per_edge)
     packed = sum(e["packed_bytes"] for e in per_edge)
     occupancy = sum(e["occupancy_bytes"] for e in per_edge)
@@ -217,7 +282,65 @@ def _price_edges(edges, t: int, *, batch: int, boundary_closed: bool,
         out["occupancy_bytes"] = occupancy
         out["packed_sparse_bytes"] = packed + occupancy
         out["reduction_sparse"] = dense / (packed + occupancy)
+    if scfg is not None:
+        xd = sum(e["cross_device_dense_bytes"] for e in per_edge)
+        xp = sum(e["cross_device_packed_bytes"] for e in per_edge)
+        out["mesh"] = {"shape": tuple(scfg.mesh_shape),
+                       "axes": tuple(scfg.mesh_axes)}
+        out["cross_device_dense_bytes"] = xd
+        out["cross_device_packed_bytes"] = xp
+        # exactly t / ceil(t/32): every crossing edge moves words, so the
+        # interconnect keeps the full packing factor (8x at T=8, 32x at T=32)
+        out["cross_device_reduction"] = (xd / xp) if xp else None
     return out
+
+
+def collective_report(fn, *args, **kwargs) -> dict:
+    """Every cross-device collective in ``fn``'s jaxpr (shard_map bodies
+    included via :func:`iter_eqns`), with operand dtype and analytic wire
+    bytes -- the measured face of the sharded-traffic pricing, and the
+    falsifiable form of the packed-boundary contract: under a packed backend
+    every collective operand must be uint32 (no ``packing.unpack`` output
+    ever crosses devices).
+
+    Wire bytes are ring-algorithm totals PER MODEL GROUP (one data-parallel
+    replica): all_gather moves (size-1) x out_bytes, reduce_scatter
+    (size-1) x in_bytes, psum the sum of both.  Collectives whose axis size
+    is not recorded in the jaxpr (bare ``psum``) report ``wire_bytes=None``.
+    """
+    _WIRE = {
+        "all_gather": lambda size, inb, outb: (size - 1) * outb,
+        "reduce_scatter": lambda size, inb, outb: (size - 1) * inb,
+        "psum_scatter": lambda size, inb, outb: (size - 1) * inb,
+        "psum": lambda size, inb, outb: 2 * (size - 1) * inb,
+        "all_to_all": lambda size, inb, outb: (size - 1) * inb // size,
+    }
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    colls = []
+    for eqn in iter_eqns(closed.jaxpr):
+        name = eqn.primitive.name
+        if name not in _WIRE:
+            continue
+        inv = eqn.invars[0].aval
+        outv = eqn.outvars[0].aval
+        size = eqn.params.get("axis_size")
+        inb = math.prod(inv.shape) * inv.dtype.itemsize
+        outb = math.prod(outv.shape) * outv.dtype.itemsize
+        colls.append({
+            "primitive": name,
+            "dtype": str(inv.dtype),
+            "shape": tuple(int(s) for s in outv.shape),
+            "axis_size": None if size is None else int(size),
+            "wire_bytes": (None if size is None
+                           else int(_WIRE[name](int(size), inb, outb))),
+        })
+    known = [c["wire_bytes"] for c in colls if c["wire_bytes"] is not None]
+    return {
+        "num_collectives": len(colls),
+        "collectives": colls,
+        "wire_bytes": sum(known),
+        "dtypes": sorted({c["dtype"] for c in colls}),
+    }
 
 
 def sparsity_report(plan, batch) -> dict:

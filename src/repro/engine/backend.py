@@ -112,6 +112,138 @@ def resolve(spec) -> Backend:
     raise TypeError(f"cannot resolve backend from {spec!r}")
 
 
+# ---------------------------------------------------------------------------
+# Packed-word collectives: the cross-DEVICE face of the closed boundary.
+#
+# Under a sharded plan the tensor-parallel shards exchange inter-layer spike
+# activations.  These helpers keep that exchange in the packed domain: the
+# collective operand is the uint32 word tensor of a ``PackedSpikes`` train
+# (never the unpacked f32 spikes), so cross-device activation bytes shrink by
+# the same ceil(T/32)/T factor as on-chip traffic -- the multi-chip version
+# of the paper's spike-domain interconnect.  Occupancy maps reshard alongside
+# when their OCC_TILE tiling survives the reshape (local feature dim a
+# multiple of the tile), and are recomputed from the resharded words
+# otherwise -- either way the map stays exactly consistent with the words.
+# All helpers are shard_map-internal (they require a bound ``axis_name``).
+# ---------------------------------------------------------------------------
+
+
+def word_allgather(xp: packing.PackedSpikes,
+                   axis_name: str) -> packing.PackedSpikes:
+    """All-gather a feature-sharded packed train along its LAST (feature)
+    axis: local words (W, ..., F/m) -> full words (W, ..., F), uint32 on the
+    wire.  The gather is ``tiled`` so shard i's columns land at block i --
+    exactly the single-device feature order, which is what keeps downstream
+    GEMMs bit-exact."""
+    from jax import lax
+
+    words = lax.all_gather(xp.words, axis_name, axis=xp.words.ndim - 1,
+                           tiled=True)
+    occ = None
+    if xp.occ is not None:
+        if xp.words.shape[-1] % packing.OCC_TILE == 0:
+            occ = lax.all_gather(xp.occ, axis_name, axis=xp.occ.ndim - 1,
+                                 tiled=True)
+        else:
+            occ = packing.occupancy_map(words)
+    return packing.PackedSpikes(words, xp.t, occ=occ)
+
+
+def word_psum(xp: packing.PackedSpikes,
+              axis_name: str) -> packing.PackedSpikes:
+    """Sum partial packed trains across shards -- valid ONLY when the shards'
+    set bits are disjoint (each spike produced by exactly one shard), where
+    the uint32 sum IS the bitwise OR (the same disjoint-positions trick as
+    ``packing.pack``).  That is the packed analogue of an activation
+    all-reduce, at 1/32 of the wire bytes per word plane.  Occupancy
+    popcounts are additive under the same disjointness, so the map psums
+    alongside and stays exact."""
+    from jax import lax
+
+    words = lax.psum(xp.words, axis_name)
+    occ = None if xp.occ is None else lax.psum(xp.occ, axis_name)
+    return packing.PackedSpikes(words, xp.t, occ=occ)
+
+
+def word_reduce_scatter(xp: packing.PackedSpikes,
+                        axis_name: str) -> packing.PackedSpikes:
+    """Disjoint-support sum (see :func:`word_psum`) that leaves each shard
+    owning only ITS block of the feature axis: words (W, ..., F) ->
+    (W, ..., F/m).  The memory-lean half of a psum when the consumer is
+    itself feature-sharded; ``word_reduce_scatter`` then ``word_allgather``
+    composes to exactly :func:`word_psum`."""
+    from jax import lax
+
+    words = lax.psum_scatter(xp.words, axis_name,
+                             scatter_dimension=xp.words.ndim - 1, tiled=True)
+    occ = None
+    if xp.occ is not None:
+        # scatter blocks align with OCC_TILE boundaries iff the per-shard
+        # feature dim is a tile multiple (which also makes the tile count
+        # divisible by the axis size); otherwise recompute from the words
+        if words.shape[-1] % packing.OCC_TILE == 0:
+            occ = lax.psum_scatter(xp.occ, axis_name,
+                                   scatter_dimension=xp.occ.ndim - 1,
+                                   tiled=True)
+        else:
+            occ = packing.occupancy_map(words)
+    return packing.PackedSpikes(words, xp.t, occ=occ)
+
+
+def spike_allgather(x, axis_name: str):
+    """Backend-polymorphic feature all-gather of one spike edge: packed
+    trains take :func:`word_allgather` (uint32 words on the wire), dense
+    trains take a plain f32 all-gather of the last axis.  This is the ONE
+    entry point the executor uses for a cross-device edge, so 'packed
+    backends never move unpacked spikes between devices' is a property of
+    the dispatch, not of call-site discipline."""
+    from jax import lax
+
+    if isinstance(x, packing.PackedSpikes):
+        return word_allgather(x, axis_name)
+    return lax.all_gather(x, axis_name, axis=x.ndim - 1, tiled=True)
+
+
+def spike_shard(x, axis_name: str, size: int):
+    """Local feature block of a replicated spike tensor: (..., F) ->
+    (..., F/m), shard i taking columns [i*F/m, (i+1)*F/m).  The inverse of
+    :func:`spike_allgather` (round-trips bit-exactly); used to land the
+    replicated tokenizer output onto the feature-sharded residual stream.
+    ``size`` is the (static) axis size m -- slice extents must be static, and
+    jax 0.4 has no ``lax.axis_size``."""
+    from jax import lax
+
+    idx = lax.axis_index(axis_name)
+    m = size
+    if isinstance(x, packing.PackedSpikes):
+        f = x.words.shape[-1]
+        words = lax.dynamic_slice_in_dim(x.words, idx * (f // m), f // m,
+                                         axis=x.words.ndim - 1)
+        occ = None
+        if x.occ is not None:
+            occ = (lax.dynamic_slice_in_dim(
+                       x.occ, idx * (x.occ.shape[-1] // m),
+                       x.occ.shape[-1] // m, axis=x.occ.ndim - 1)
+                   if f // m % packing.OCC_TILE == 0
+                   else packing.occupancy_map(words))
+        return packing.PackedSpikes(words, x.t, occ=occ)
+    f = x.shape[-1]
+    return lax.dynamic_slice_in_dim(x, idx * (f // m), f // m,
+                                    axis=x.ndim - 1)
+
+
+def unit_partition_specs(u, params: dict, rules: dict) -> dict:
+    """PartitionSpecs of one folded unit's param dict, resolved from the
+    layout's logical ``w_axes`` through the plan's sharding rules: the weight
+    is (d_in, d_out)-annotated, every other leaf (bias, RMS normalizer) is a
+    per-OUTPUT-feature vector and shards with the output dim."""
+    from repro.distributed.sharding import spec
+
+    wspec = spec(*u.w_axes, rules=rules)
+    outspec = spec(u.w_axes[1], rules=rules)
+    return {k: (wspec if k == "w" else outspec) for k in params}
+
+
 def lif_apply(backend: Backend, drive: jax.Array, *, theta, lam, schedule,
               chain_len, iand_skip=None, reset: str = "hard",
               pack_output: bool = False, occupancy: bool | None = None):

@@ -85,6 +85,98 @@ def _lif(meta: PlanMeta, drive, iand_skip=None, pack_output=False,
     return out
 
 
+# -- mesh execution ----------------------------------------------------------
+#
+# A sharded plan runs the SAME walkers under ``shard_map``, with every
+# cross-shard exchange routed through one small op table (:class:`_MeshOps`).
+# The table's null value is the identity on every method, and the walkers
+# default to it -- so the single-device path is byte-identical to before and
+# the sharded path cannot structurally diverge from it.  The two families
+# shard differently (see ``distributed.sharding.ENGINE_FAMILY_OVERRIDES``):
+#
+# * vision (``feature_tp``): column-parallel units -- the residual spike
+#   stream lives feature-sharded between joins, and each unit consumes the
+#   gathered full-feature stream (``gather_stream``, cached per stream
+#   version) while producing only its local output columns.  Exactly four
+#   feature all-gathers per block, each a packed-word collective under
+#   packed backends.
+# * lm: units replicated (the folded RMSNorm epilogue reduces over the full
+#   feature row -- column slices would reassociate it), TP shards the SSA
+#   heads instead: ``wrap_ssa`` slices the local heads out of the head-split
+#   q/k/v, and the attention LIF output is the ONE cross-device spike edge
+#   per block (``gather_heads``).
+
+
+def _slice_heads(x, idx, h_loc: int):
+    """Local head block of head-split q/k/v: dense (T, B, H, N, Dh) or packed
+    words (W, B, H, N, Dh) -> the ``h_loc`` heads starting at ``idx * h_loc``
+    (head axis is axis 2 in both layouts)."""
+    sl = functools.partial(jax.lax.dynamic_slice_in_dim,
+                           start_index=idx * h_loc, slice_size=h_loc, axis=2)
+    if isinstance(x, packing.PackedSpikes):
+        return packing.PackedSpikes(
+            sl(x.words), x.t, occ=None if x.occ is None else sl(x.occ))
+    return sl(x)
+
+
+@dataclass(frozen=True)
+class _MeshOps:
+    """Cross-shard exchange table of one sharded execution (static: closed
+    over by the shard_map body).  ``tp`` is the model-axis size; with
+    ``tp == 1`` every method is the identity (:data:`_NULL_OPS`)."""
+
+    tp_axis: str | None = None
+    tp: int = 1
+    feature_tp: bool = True     # vision column-parallel vs LM head-sharded
+
+    def local_heads(self, h: int) -> int:
+        """Heads resident on this shard (vision: the q/k/v units already
+        produced only the local head columns)."""
+        return h // self.tp if (self.feature_tp and self.tp > 1) else h
+
+    def gather_stream(self, x):
+        """Feature-sharded residual stream -> full feature row (the view
+        every column-parallel unit GEMM consumes)."""
+        if self.feature_tp and self.tp > 1:
+            return B.spike_allgather(x, self.tp_axis)
+        return x
+
+    def shard_stream(self, x):
+        """Replicated spikes -> this shard's feature block (lands the
+        tokenizer output onto the feature-sharded residual stream)."""
+        if self.feature_tp and self.tp > 1:
+            return B.spike_shard(x, self.tp_axis, self.tp)
+        return x
+
+    def gather_heads(self, x):
+        """Locally-produced spike features -> full feature row (the
+        post-attention / post-fc1 all-gather; packed words on the wire
+        under packed backends)."""
+        if self.tp > 1:
+            return B.spike_allgather(x, self.tp_axis)
+        return x
+
+    def wrap_ssa(self, ssa):
+        """LM head parallelism: run the walker's attention on this shard's
+        head block only (binary-spike SSA is exact integer arithmetic per
+        head, so head-local compute is bit-exact)."""
+        if self.feature_tp or self.tp == 1:
+            return ssa
+
+        def sharded_ssa(q, k, v):
+            h = (q.words if isinstance(q, packing.PackedSpikes) else q).shape[2]
+            idx = jax.lax.axis_index(self.tp_axis)
+            h_loc = h // self.tp
+            return ssa(_slice_heads(q, idx, h_loc),
+                       _slice_heads(k, idx, h_loc),
+                       _slice_heads(v, idx, h_loc))
+
+        return sharded_ssa
+
+
+_NULL_OPS = _MeshOps()
+
+
 def _tokenizer_exec(meta: PlanMeta, tok_params, image):
     """image: (B, H, W, C) analog in [0, 1] -> spikes (T, B, N, D)."""
     cfg = meta.cfg
@@ -116,36 +208,47 @@ def _unit_linear(meta: PlanMeta, p, x):
     return y.reshape(t, b, n, -1)
 
 
-def _block_exec(meta: PlanMeta, bparams, x):
-    """One block in deploy form. x: (T, B, N, D) spikes."""
+def _block_exec(meta: PlanMeta, bparams, x, *, ops: _MeshOps = _NULL_OPS,
+                xg=None):
+    """One block in deploy form. x: (T, B, N, D) spikes (the local feature
+    block under a feature-sharded mesh; ``xg`` caches the gathered full
+    row per residual-stream version -- callers that already hold the full
+    row, like the first block after the replicated tokenizer, pass it in
+    so no redundant gather runs)."""
     cfg = meta.cfg
     res = connective(cfg.residual)  # only reached for residual="add"
     acts: dict = {}
     h = None
     for u in meta.block_units:
         if u.role == "qkv":
-            acts[u.name] = _lif(meta, _unit_linear(meta, bparams[u.name], x))
+            if xg is None:
+                xg = ops.gather_stream(x)
+            acts[u.name] = _lif(meta, _unit_linear(meta, bparams[u.name], xg))
             continue
         if u.role == "attn_out":
+            heads = ops.local_heads(cfg.num_heads)
             attn = B.ssa_apply(
                 meta.backend,
-                split_heads(acts["q"], cfg.num_heads),
-                split_heads(acts["k"], cfg.num_heads),
-                split_heads(acts["v"], cfg.num_heads),
+                split_heads(acts["q"], heads),
+                split_heads(acts["k"], heads),
+                split_heads(acts["v"], heads),
                 scale=cfg.attn_scale, ordering=cfg.attn_ordering)
             attn = _lif(meta, merge_heads(attn))          # attn spikes
-            drive = _unit_linear(meta, bparams[u.name], attn)
+            drive = _unit_linear(meta, bparams[u.name], ops.gather_heads(attn))
         elif u.role == "mlp_hidden":
-            h = _lif(meta, _unit_linear(meta, bparams[u.name], x))
+            if xg is None:
+                xg = ops.gather_stream(x)
+            h = _lif(meta, _unit_linear(meta, bparams[u.name], xg))
             continue
         elif u.role == "mlp_out":
-            drive = _unit_linear(meta, bparams[u.name], h)
+            drive = _unit_linear(meta, bparams[u.name], ops.gather_heads(h))
         else:
             raise ValueError(f"unknown unit role: {u.role}")
         if u.fuse_residual:      # AND-NOT inside the LIF epilogue
             x = _lif(meta, drive, iand_skip=x)
         else:
             x = res(x, _lif(meta, drive))
+        xg = None                # the residual stream advanced: stale gather
     return x
 
 
@@ -176,40 +279,51 @@ def _unit_linear_packed(meta: PlanMeta, p, xp: packing.PackedSpikes):
     return B.linear_apply_packed(meta.backend, p, xp)
 
 
-def _block_exec_packed(meta: PlanMeta, bparams, xp: packing.PackedSpikes):
+def _block_exec_packed(meta: PlanMeta, bparams, xp: packing.PackedSpikes, *,
+                       ops: _MeshOps = _NULL_OPS, xg=None):
     """One block on packed activations.  Only reached for residual='iand'
     (compile_plan rejects packed ADD plans), so every residual join is the
-    bitwise AND-NOT in a LIF epilogue."""
+    bitwise AND-NOT in a LIF epilogue.  Under a mesh every cross-shard
+    gather here moves uint32 words (``backend.word_allgather``); ``xg`` as
+    in :func:`_block_exec`."""
     cfg = meta.cfg
     acts: dict = {}
     h = None
     for u in meta.block_units:
         if u.role == "qkv":
+            if xg is None:
+                xg = ops.gather_stream(xp)
             acts[u.name] = _lif(
-                meta, _unit_linear_packed(meta, bparams[u.name], xp),
+                meta, _unit_linear_packed(meta, bparams[u.name], xg),
                 pack_output=True)
             continue
         if u.role == "attn_out":
             # q/k/v stay packed through the head split; the backend feeds the
             # words straight to the packed SSA kernel (or unpacks at ITS op
             # boundary on the oracle route -- never here)
+            heads = ops.local_heads(cfg.num_heads)
             attn = B.ssa_apply_packed(
                 meta.backend,
-                split_heads_packed(acts["q"], cfg.num_heads),
-                split_heads_packed(acts["k"], cfg.num_heads),
-                split_heads_packed(acts["v"], cfg.num_heads),
+                split_heads_packed(acts["q"], heads),
+                split_heads_packed(acts["k"], heads),
+                split_heads_packed(acts["v"], heads),
                 scale=cfg.attn_scale, ordering=cfg.attn_ordering)
             attn_sp = _lif(meta, merge_heads(attn), pack_output=True)
-            drive = _unit_linear_packed(meta, bparams[u.name], attn_sp)
+            drive = _unit_linear_packed(meta, bparams[u.name],
+                                        ops.gather_heads(attn_sp))
         elif u.role == "mlp_hidden":
-            h = _lif(meta, _unit_linear_packed(meta, bparams[u.name], xp),
+            if xg is None:
+                xg = ops.gather_stream(xp)
+            h = _lif(meta, _unit_linear_packed(meta, bparams[u.name], xg),
                      pack_output=True)
             continue
         elif u.role == "mlp_out":
-            drive = _unit_linear_packed(meta, bparams[u.name], h)
+            drive = _unit_linear_packed(meta, bparams[u.name],
+                                        ops.gather_heads(h))
         else:
             raise ValueError(f"unknown unit role: {u.role}")
         xp = _lif(meta, drive, iand_skip=xp, pack_output=True)
+        xg = None                # the residual stream advanced: stale gather
     return xp
 
 
@@ -241,7 +355,7 @@ def _lm_full_ssa(meta: PlanMeta, packed: bool, q, k, v):
 
 
 def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None,
-                   lif_occupancy=None):
+                   lif_occupancy=None, ops: _MeshOps = _NULL_OPS):
     """One spiking-LM decoder block in deploy form: x is (T, B, S, D) spikes
     dense, a ``PackedSpikes`` (words (W, B, S, D)) when ``packed``.
 
@@ -257,6 +371,7 @@ def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None,
     split = split_heads_packed if packed else split_heads
     if ssa is None:
         ssa = functools.partial(_lm_full_ssa, meta, packed)
+    ssa = ops.wrap_ssa(ssa)     # head-sharded mesh: local head block only
     acts: dict = {}
     h = None
     for u in meta.block_units:
@@ -271,7 +386,9 @@ def _lm_block_exec(meta: PlanMeta, bparams, x, *, packed: bool, ssa=None,
                 split(acts["v"], cfg.num_heads))
             attn_sp = _lif(meta, merge_heads(attn), pack_output=packed,
                            occupancy=lif_occupancy)
-            drive = unit(meta, bparams[u.name], attn_sp)
+            # the LM's one cross-device spike edge: local-head attention
+            # spikes -> the full feature row the replicated proj consumes
+            drive = unit(meta, bparams[u.name], ops.gather_heads(attn_sp))
         elif u.role == "mlp_hidden":
             h = _lif(meta, unit(meta, bparams[u.name], x), pack_output=packed,
                      occupancy=lif_occupancy)
@@ -326,26 +443,36 @@ def _lm_rate(meta: PlanMeta, params, x, *, packed: bool):
     return packing.spike_counts(x).astype(dtype) / jnp.asarray(x.t, dtype)
 
 
-def _lm_exec(meta: PlanMeta, params, tokens, *, packed: bool):
+def _lm_exec(meta: PlanMeta, params, tokens, *, packed: bool,
+             ops: _MeshOps = _NULL_OPS):
     x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
              pack_output=packed)
     for bparams in params["blocks"]:
-        x = _lm_block_exec(meta, bparams, x, packed=packed)
+        x = _lm_block_exec(meta, bparams, x, packed=packed, ops=ops)
     return _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
 
 
-def _execute(meta: PlanMeta, params, batch):
+def _execute(meta: PlanMeta, params, batch, *, ops: _MeshOps = _NULL_OPS):
     if meta.family == "lm":
         tokens = batch["tokens"] if isinstance(batch, dict) else batch
-        return _lm_exec(meta, params, tokens, packed=meta.backend.packed)
+        return _lm_exec(meta, params, tokens, packed=meta.backend.packed,
+                        ops=ops)
     if meta.backend.packed:
-        xp = _tokenizer_exec_packed(meta, params["tokenizer"], batch)
+        xg = _tokenizer_exec_packed(meta, params["tokenizer"], batch)
+        xp = ops.shard_stream(xg)       # land on the feature-sharded stream
         for bparams in params["blocks"]:
-            xp = _block_exec_packed(meta, bparams, xp)
+            # the replicated tokenizer output doubles as the first block's
+            # gathered view -- the tokenizer edge never crosses devices
+            xp = _block_exec_packed(meta, bparams, xp, ops=ops, xg=xg)
+            xg = None
+        xp = ops.gather_stream(xp)      # replicated head reads the full row
         return _head_packed(meta, params["head"], xp)
-    x = _tokenizer_exec(meta, params["tokenizer"], batch)
+    xg = _tokenizer_exec(meta, params["tokenizer"], batch)
+    x = ops.shard_stream(xg)
     for bparams in params["blocks"]:
-        x = _block_exec(meta, bparams, x)
+        x = _block_exec(meta, bparams, x, ops=ops, xg=xg)
+        xg = None
+    x = ops.gather_stream(x)
     feats = x.mean(axis=(0, 2))              # rate decoding over (T, tokens)
     return cnn.linear_apply(params["head"], feats)
 
@@ -439,8 +566,12 @@ def _decode_ssa(meta: PlanMeta, packed: bool, kv, out_kv: list):
     return ssa
 
 
-def _lm_prefill(meta: PlanMeta, params, tokens):
-    """tokens (B, S) -> (logits (B, S, V), DecodeState after the prompt)."""
+def _lm_prefill(meta: PlanMeta, params, tokens, *, ops: _MeshOps = _NULL_OPS):
+    """tokens (B, S) -> (logits (B, S, V), DecodeState after the prompt).
+
+    Under a head-sharded mesh the captured K^T V states are the LOCAL head
+    block's (the walker's ssa runs inside ``ops.wrap_ssa``), so each layer's
+    accumulator lives on its owning shard -- decode never gathers state."""
     packed = meta.backend.packed
     _decode_entry(meta)
     x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
@@ -448,14 +579,15 @@ def _lm_prefill(meta: PlanMeta, params, tokens):
     kvs: list = []
     for bparams in params["blocks"]:
         x = _lm_block_exec(meta, bparams, x, packed=packed,
-                           ssa=_prefill_ssa(meta, packed, kvs))
+                           ssa=_prefill_ssa(meta, packed, kvs), ops=ops)
     logits = _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
     state = DecodeState(kv=tuple(kvs),
                         pos=jnp.asarray(tokens.shape[1], jnp.int32))
     return logits, state
 
 
-def _lm_decode_step(meta: PlanMeta, params, state: DecodeState, token):
+def _lm_decode_step(meta: PlanMeta, params, state: DecodeState, token, *,
+                    ops: _MeshOps = _NULL_OPS):
     """One generated token: (B,) int32 -> (logits (B, V), advanced state).
 
     The step's jaxpr mentions no prefix-length dimension at all -- its cost
@@ -485,43 +617,158 @@ def _lm_decode_step(meta: PlanMeta, params, state: DecodeState, token):
     for bparams, kv in zip(params["blocks"], state.kv):
         x = _lm_block_exec(meta, bparams, x, packed=packed,
                            ssa=_decode_ssa(meta, packed, kv, kvs),
-                           lif_occupancy=False)
+                           lif_occupancy=False, ops=ops)
     logits = _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
     return logits[:, 0], DecodeState(kv=tuple(kvs), pos=state.pos + 1)
 
 
+# -- sharded executor construction -------------------------------------------
+
+
+def _sharded_context(meta: PlanMeta):
+    """(mesh, data_size, _MeshOps) of a sharded plan: the concrete host mesh
+    (largest feasible shape if the host is smaller than the plan asked for --
+    the ops table reads the ACTUAL axis sizes, so a shrunk mesh still runs
+    correctly) plus the cross-shard op table the walkers thread."""
+    scfg = meta.sharding
+    mesh = scfg.build_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    tp = sizes.get(scfg.model_axis, 1)
+    ops = _MeshOps(tp_axis=scfg.model_axis, tp=tp,
+                   feature_tp=(meta.family != "lm"))
+    return mesh, sizes.get(scfg.data_axis, 1), ops
+
+
+def _param_specs(meta: PlanMeta, params):
+    """PartitionSpec pytree mirroring the plan params.  LM plans replicate
+    every unit (the TP axis lives in the SSA heads); vision plans shard each
+    block unit by its layout ``w_axes`` through the plan's rules (tokenizer
+    and head replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    specs = jax.tree_util.tree_map(lambda _: P(), params)
+    if meta.family == "lm":
+        return specs
+    rules = meta.sharding.rules_dict
+    specs["blocks"] = tuple(
+        {u.name: B.unit_partition_specs(u, bp[u.name], rules)
+         for u in meta.block_units}
+        for bp in params["blocks"])
+    return specs
+
+
+def _shard_mapped(meta: PlanMeta, body, batch_specs, out_specs):
+    """Wrap a walker body in ``shard_map`` on the plan's mesh: params by
+    :func:`_param_specs`, batch/state/outputs by the given specs.  Explicit
+    shard_map (not GSPMD constraints) so the per-op collectives are exactly
+    the ones the walkers emit -- which is what makes 'no unpack crosses
+    devices' checkable on the jaxpr (``analysis.collective_report``)."""
+    from jax.experimental.shard_map import shard_map
+
+    mesh, _, ops = _sharded_context(meta)
+
+    def fn(params, *args):
+        in_specs = (_param_specs(meta, params),) + batch_specs
+        sharded = shard_map(functools.partial(body, ops=ops), mesh=mesh,
+                            in_specs=in_specs, out_specs=out_specs,
+                            check_rep=False)
+        return sharded(params, *args)
+
+    return fn
+
+
+def _decode_state_specs(meta: PlanMeta):
+    from jax.sharding import PartitionSpec as P
+
+    scfg = meta.sharding
+    # per-layer (T, B, H, Dh, Dh): batch over data, heads over model -- each
+    # accumulator lives on the shard that owns its heads, for good
+    kv = P(None, scfg.data_axis, scfg.model_axis, None, None)
+    return DecodeState(kv=tuple(kv for _ in range(meta.num_layers)), pos=P())
+
+
 def make_prefill_fn(plan: DeployPlan):
     """Pure ``fn(params, tokens) -> (logits, DecodeState)`` (jit-friendly;
-    LM plans only)."""
-    _decode_entry(plan.meta)
-    return functools.partial(_lm_prefill, plan.meta)
+    LM plans only).  Sharded plans return the shard_map-wrapped executor on
+    the plan's mesh (``DecodeState`` sharded over heads x batch)."""
+    meta = plan.meta
+    _decode_entry(meta)
+    if meta.sharding is None:
+        return functools.partial(_lm_prefill, meta)
+    from jax.sharding import PartitionSpec as P
+
+    da = meta.sharding.data_axis
+    return _shard_mapped(
+        meta, functools.partial(_lm_prefill, meta),
+        batch_specs=(P(da, None),),
+        out_specs=(P(da, None, None), _decode_state_specs(meta)))
 
 
 def make_decode_step_fn(plan: DeployPlan):
     """Pure ``fn(params, state, token) -> (logits, state')`` -- ONE warm
-    shape per batch size serves the whole decode, at any context length."""
-    _decode_entry(plan.meta)
-    return functools.partial(_lm_decode_step, plan.meta)
+    shape per batch size serves the whole decode, at any context length.
+    Sharded plans step under shard_map with the K^T V state resident on its
+    head shard (no state movement per token)."""
+    meta = plan.meta
+    _decode_entry(meta)
+    if meta.sharding is None:
+        return functools.partial(_lm_decode_step, meta)
+    from jax.sharding import PartitionSpec as P
+
+    da = meta.sharding.data_axis
+    state_specs = _decode_state_specs(meta)
+    return _shard_mapped(
+        meta, functools.partial(_lm_decode_step, meta),
+        batch_specs=(state_specs, P(da)),
+        out_specs=(P(da, None), state_specs))
 
 
 def prefill(plan: DeployPlan, tokens) -> tuple[jax.Array, DecodeState]:
     """One-shot convenience: score a prompt and initialise decode state."""
-    return _lm_prefill(plan.meta, plan.params, jnp.asarray(tokens))
+    return make_prefill_fn(plan)(plan.params, jnp.asarray(tokens))
 
 
 def decode_step(plan: DeployPlan, state: DecodeState, token):
     """One-shot convenience: advance the decode by one token."""
-    return _lm_decode_step(plan.meta, plan.params, state, jnp.asarray(token))
+    return make_decode_step_fn(plan)(plan.params, state, jnp.asarray(token))
 
 
 def make_apply_fn(plan: DeployPlan):
     """Pure ``fn(params, batch) -> logits`` with the plan's static metadata
     closed over (jit-friendly: arrays stay arguments, not constants).
     ``batch`` is an image batch for vision plans, a (B, S) token array (or a
-    ``{"tokens": ...}`` dict) for LM plans."""
-    return functools.partial(_execute, plan.meta)
+    ``{"tokens": ...}`` dict) for LM plans.
+
+    Plans compiled with ``mesh=`` return the shard_map-wrapped executor:
+    batch data-parallel over the mesh's data axis (the global batch must
+    divide by it), the family's tensor-parallel schedule over the model
+    axis, bit-exact vs the unsharded plan."""
+    meta = plan.meta
+    if meta.sharding is None:
+        return functools.partial(_execute, meta)
+    from jax.sharding import PartitionSpec as P
+
+    da = meta.sharding.data_axis
+    if meta.family == "lm":
+        body_specs = (P(da, None),)              # (B, S) tokens
+        out_specs = P(da, None, None)            # (B, S, V) logits
+
+        def body(params, tokens, *, ops):
+            return _execute(meta, params, tokens, ops=ops)
+
+        sharded = _shard_mapped(meta, body, body_specs, out_specs)
+
+        def fn(params, batch):
+            tokens = batch["tokens"] if isinstance(batch, dict) else batch
+            return sharded(params, tokens)
+
+        return fn
+    body_specs = (P(da, None, None, None),)      # (B, H, W, C) images
+    out_specs = P(da, None)                      # (B, classes) logits
+    return _shard_mapped(meta, functools.partial(_execute, meta),
+                         body_specs, out_specs)
 
 
 def apply(plan: DeployPlan, batch) -> jax.Array:
     """One-shot convenience: run the plan on a batch (images or tokens)."""
-    return _execute(plan.meta, plan.params, batch)
+    return make_apply_fn(plan)(plan.params, batch)

@@ -41,13 +41,22 @@ class ProjUnit:
 
     ``fuse_residual`` marks the units whose LIF output feeds the block's
     AND-NOT residual: at deploy time the IAND executes inside the neuron's
-    epilogue (one dispatch, no standalone residual pass)."""
+    epilogue (one dispatch, no standalone residual pass).
+
+    ``w_axes`` annotates the folded weight's (d_in, d_out) dims with LOGICAL
+    sharding axes (``distributed.sharding`` rule names; None = replicated
+    dim).  The engine resolves them through the plan's ``ShardingCfg`` rules
+    into per-op ``PartitionSpec``s (``engine.backend.unit_partition_specs``).
+    Only the OUTPUT dim is ever annotated: column-parallel slices keep every
+    per-element contraction whole, which is what keeps the sharded plan
+    bit-exact vs the single-device plan."""
 
     name: str           # param key within the block ("q", ..., "fc2")
     d_in: int
     d_out: int
     role: str           # "qkv" | "attn_out" | "mlp_hidden" | "mlp_out"
     fuse_residual: bool
+    w_axes: tuple[str | None, str | None] = (None, None)
 
 
 def tokenizer_layout(tcfg) -> tuple[TokStage, ...]:
@@ -77,6 +86,14 @@ class SpikeEdge:
     name: str
     elems: int
     ssa_boundary: bool = False
+    # logical axes of the edge tensor's (batch, position, feature) dims --
+    # ``distributed.sharding`` rule names.  Under a mesh, an edge whose
+    # FEATURE axis maps to a >1 mesh axis is produced feature-sharded; it
+    # crosses devices (one packed-word all-gather) exactly when its consumer
+    # needs the full feature row -- i.e. unless it is an ``ssa_boundary``
+    # edge, whose consumer (the per-head-local SSA) reads only the local
+    # head shard.  ``engine.analysis`` prices cross-device bytes from this.
+    axes: tuple[str | None, ...] = ()
 
 
 def tokenizer_grid(tcfg, img_size: int) -> tuple[tuple[int, int], ...]:
@@ -102,17 +119,20 @@ def spike_edges(cfg, *, img_size: int | None = None) -> tuple[SpikeEdge, ...]:
     img = img_size if img_size is not None else cfg.img_size
     grid = tokenizer_grid(tcfg, img)
     edges = [
-        SpikeEdge(f"tok{st.index}", gh * gw * st.c_out)
+        SpikeEdge(f"tok{st.index}", gh * gw * st.c_out,
+                  axes=("batch", "seq", "channels"))
         for st, (gh, gw) in zip(tokenizer_layout(tcfg), grid)
     ]
     n = grid[-1][0] * grid[-1][1]     # token count
     for i in range(cfg.num_layers):
         for u in block_layout(cfg):
             if u.role == "attn_out":  # spikes of the SSA output, pre-proj
-                edges.append(SpikeEdge(f"block{i}.attn", n * cfg.embed_dim))
+                edges.append(SpikeEdge(f"block{i}.attn", n * cfg.embed_dim,
+                                       axes=("batch", "seq", "heads")))
             edges.append(SpikeEdge(
                 f"block{i}.{u.name}", n * u.d_out,
-                ssa_boundary=(u.role == "qkv")))
+                ssa_boundary=(u.role == "qkv"),
+                axes=("batch", "seq", u.w_axes[1] or "embed")))
     return tuple(edges)
 
 
@@ -125,13 +145,16 @@ def block_layout(cfg) -> tuple[ProjUnit, ...]:
     d = cfg.embed_dim
     hidden = int(cfg.embed_dim * cfg.mlp_ratio)
     fuse = cfg.residual == "iand"
+    # full column-parallel TP: q/k/v by heads, proj/fc2 back onto the
+    # feature-sharded residual stream, fc1 by ffn columns -- every slice is
+    # over the OUTPUT dim only, so the sharded GEMMs stay bit-exact
     return (
-        ProjUnit("q", d, d, "qkv", False),
-        ProjUnit("k", d, d, "qkv", False),
-        ProjUnit("v", d, d, "qkv", False),
-        ProjUnit("proj", d, d, "attn_out", fuse),
-        ProjUnit("fc1", d, hidden, "mlp_hidden", False),
-        ProjUnit("fc2", hidden, d, "mlp_out", fuse),
+        ProjUnit("q", d, d, "qkv", False, w_axes=(None, "heads")),
+        ProjUnit("k", d, d, "qkv", False, w_axes=(None, "heads")),
+        ProjUnit("v", d, d, "qkv", False, w_axes=(None, "heads")),
+        ProjUnit("proj", d, d, "attn_out", fuse, w_axes=(None, "embed")),
+        ProjUnit("fc1", d, hidden, "mlp_hidden", False, w_axes=(None, "ffn")),
+        ProjUnit("fc2", hidden, d, "mlp_out", fuse, w_axes=(None, "embed")),
     )
 
 
@@ -143,7 +166,14 @@ def lm_block_layout(cfg) -> tuple[ProjUnit, ...]:
     the norm is RMSNorm instead of BatchNorm (folded by
     ``fold_linear_rmsnorm`` rather than ``fold_linear_bn``) and the SSA
     between ``qkv`` and ``attn_out`` is causal-masked.  The LM always uses
-    the IAND residual (spikes stay binary), so both joins fuse."""
+    the IAND residual (spikes stay binary), so both joins fuse.
+
+    Every unit's ``w_axes`` stays replicated: the folded Linear+RMSNorm
+    epilogue reduces over the FULL output-feature row (a data-dependent f32
+    normalizer), so a column slice would split that reduction and reassociate
+    it -- breaking bitwise equality with the single-device plan.  Under a
+    mesh the LM's TP axis shards the SSA heads and the per-head K^T V decode
+    state instead (``sharding.ENGINE_FAMILY_OVERRIDES['lm']``)."""
     d, f = cfg.d_model, cfg.d_ff
     return (
         ProjUnit("q", d, d, "qkv", False),
@@ -160,14 +190,18 @@ def lm_spike_edges(cfg, *, seq_len: int) -> tuple[SpikeEdge, ...]:
     ``seq_len`` tokens, in execution order (the LM analogue of
     :func:`spike_edges`; elems counted per sequence per time step)."""
     d = cfg.d_model
-    edges = [SpikeEdge("embed", seq_len * d)]
+    edges = [SpikeEdge("embed", seq_len * d, axes=("batch", "seq", "embed"))]
+    feature = {"qkv": "heads", "attn_out": "embed", "mlp_hidden": "ffn",
+               "mlp_out": "embed"}
     for i in range(cfg.num_layers):
         for u in lm_block_layout(cfg):
             if u.role == "attn_out":   # spikes of the causal SSA output
-                edges.append(SpikeEdge(f"block{i}.attn", seq_len * d))
+                edges.append(SpikeEdge(f"block{i}.attn", seq_len * d,
+                                       axes=("batch", "seq", "heads")))
             edges.append(SpikeEdge(
                 f"block{i}.{u.name}", seq_len * u.d_out,
-                ssa_boundary=(u.role == "qkv")))
+                ssa_boundary=(u.role == "qkv"),
+                axes=("batch", "seq", feature[u.role])))
     return tuple(edges)
 
 

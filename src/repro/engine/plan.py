@@ -27,7 +27,7 @@ over and the arrays as arguments.
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Any
 
 import jax
@@ -37,6 +37,110 @@ from repro.engine.backend import Backend, resolve
 from repro.engine.layout import (
     ProjUnit, TokStage, block_layout, lm_block_layout, tokenizer_layout,
 )
+
+
+@dataclass(frozen=True)
+class ShardingCfg:
+    """Mesh-awareness of a deploy plan: mesh axes plus the logical-axis rules
+    that resolve the layout annotations (``ProjUnit.w_axes`` /
+    ``SpikeEdge.axes``) into ``PartitionSpec``s.
+
+    Hashable (rules stored as a sorted item tuple), so it rides on
+    :class:`PlanMeta` and jitted executors cache per sharding.  The rules
+    come from ``distributed.sharding.engine_rules(family, preset=...)`` --
+    the same rules dict the training substrate uses, with the engine
+    families' bit-exactness overrides applied.  The concrete ``jax.Mesh`` is
+    NOT stored here (device objects are process state); the executor builds
+    it from ``mesh_shape`` via ``launch.mesh.make_host_mesh`` at
+    ``make_*_fn`` time, so a plan compiled for ``(2, 2)`` still runs -- at
+    reduced parallelism, with a warning -- on a host with fewer devices.
+    """
+
+    mesh_shape: tuple[int, int] = (1, 1)
+    mesh_axes: tuple[str, str] = ("data", "model")
+    preset: str = "base"
+    rules: tuple[tuple[str, Any], ...] = field(default=(), repr=False)
+
+    @property
+    def data_axis(self) -> str:
+        return self.mesh_axes[0]
+
+    @property
+    def model_axis(self) -> str:
+        return self.mesh_axes[1]
+
+    @property
+    def data(self) -> int:
+        return self.mesh_shape[0]
+
+    @property
+    def model(self) -> int:
+        return self.mesh_shape[1]
+
+    @property
+    def rules_dict(self) -> dict[str, Any]:
+        return dict(self.rules)
+
+    def build_mesh(self):
+        """Concrete host mesh for this cfg (largest feasible shape if the
+        host has fewer devices than ``mesh_shape`` asks for)."""
+        from repro.launch.mesh import make_host_mesh
+
+        return make_host_mesh(self.mesh_shape, self.mesh_axes)
+
+
+def _resolve_sharding(mesh, family: str) -> ShardingCfg | None:
+    """Coerce a user-facing mesh spec -- ShardingCfg | "dxm" | (d, m) | None
+    -- into a ShardingCfg with the family's engine rules resolved."""
+    from repro.distributed import sharding as shd
+
+    if mesh is None:
+        return None
+    if isinstance(mesh, ShardingCfg):
+        cfg = mesh
+    else:
+        if isinstance(mesh, str):
+            try:
+                d, m = (int(p) for p in mesh.lower().split("x"))
+            except ValueError:
+                raise ValueError(
+                    f"mesh spec must be 'dxm' (e.g. '2x1'), got {mesh!r}")
+            shape = (d, m)
+        else:
+            shape = tuple(int(s) for s in mesh)
+            if len(shape) != 2:
+                raise ValueError(
+                    f"mesh shape must be (data, model), got {shape}")
+        cfg = ShardingCfg(mesh_shape=shape)
+    if min(cfg.mesh_shape) < 1:
+        raise ValueError(f"mesh axes must be >= 1, got {cfg.mesh_shape}")
+    if not cfg.rules:
+        rules = shd.engine_rules(family, preset=cfg.preset)
+        cfg = ShardingCfg(
+            mesh_shape=cfg.mesh_shape, mesh_axes=cfg.mesh_axes,
+            preset=cfg.preset, rules=tuple(sorted(rules.items())))
+    return cfg
+
+
+def _validate_sharding(scfg: ShardingCfg, cfg, family: str) -> None:
+    """Divisibility the bit-exact sharded schedules require.  Batch
+    divisibility by the data axis is checked at shard_map call time (batch
+    size is not a plan property)."""
+    m = scfg.model
+    if m == 1:
+        return
+    heads = cfg.num_heads
+    if heads % m:
+        raise ValueError(
+            f"model axis {m} must divide num_heads={heads} (the SSA runs "
+            "per-head-local on its shard)")
+    if family == "vision":
+        d = cfg.embed_dim
+        hidden = int(cfg.embed_dim * cfg.mlp_ratio)
+        if d % m or hidden % m:
+            raise ValueError(
+                f"model axis {m} must divide embed_dim={d} and the MLP "
+                f"hidden dim {hidden} (column-parallel unit shards)")
 
 
 @dataclass(frozen=True)
@@ -145,6 +249,7 @@ class PlanMeta:
     num_layers: int
     family: str = "vision"            # "vision" | "lm"
     bundle: Any = None                # core.bundling.BundleInfo | None
+    sharding: ShardingCfg | None = None   # None = single-device plan
 
     @property
     def decode(self) -> DecodeEntry | None:
@@ -176,7 +281,7 @@ class DeployPlan:
 
 def compile_plan(params, state, cfg, *, backend="jnp",
                  ordering: str | None = None, checkpoint: str | None = None,
-                 bundle: float | None = None) -> DeployPlan:
+                 bundle: float | None = None, mesh=None) -> DeployPlan:
     """Fold a trained (params, state, cfg) into a deploy plan.
 
     ``backend``: Backend | "jnp" | "pallas" | bool (legacy ``use_kernel``).
@@ -190,6 +295,13 @@ def compile_plan(params, state, cfg, *, backend="jnp",
     ``bundle``: optional max-abs logit-error budget for the embedding
     row-bundling transform (:mod:`repro.core.bundling`; LM plans only;
     ``0.0`` = exact duplicate-train dedup).
+    ``mesh``: optional :class:`ShardingCfg` | ``"dxm"`` | ``(data, model)``
+    -- makes the plan mesh-aware: the executors run under ``shard_map`` on a
+    (data, model) host mesh, batch data-parallel over ``data`` and the
+    family's tensor-parallel schedule over ``model`` (vision: column-parallel
+    units + feature-sharded residual stream; LM: head-sharded SSA + decode
+    state), with every cross-device spike edge a packed-word all-gather under
+    packed backends.  Bit-exact vs the ``mesh=None`` plan by construction.
     """
     if checkpoint is not None:
         from repro.checkpoint import checkpoint as ckpt
@@ -203,7 +315,8 @@ def compile_plan(params, state, cfg, *, backend="jnp",
             params, state = restored["params"], restored["state"]
     if not hasattr(cfg, "tokenizer_config"):
         plan = _compile_lm_plan(params, state, cfg, backend=backend,
-                                ordering=ordering or "quadratic")
+                                ordering=ordering or "quadratic",
+                                mesh=mesh)
         if bundle is not None:
             from repro.core import bundling
 
@@ -229,6 +342,9 @@ def compile_plan(params, state, cfg, *, backend="jnp",
         raise ValueError(
             "packed backends require residual='iand': the ADD residual sums "
             "spike trains into non-binary tensors, which cannot be bit-packed")
+    scfg = _resolve_sharding(mesh, "vision")
+    if scfg is not None:
+        _validate_sharding(scfg, cfg, "vision")
     tcfg = cfg.tokenizer_config()
     tok_stages = tokenizer_layout(tcfg)
     units = block_layout(cfg)
@@ -247,7 +363,8 @@ def compile_plan(params, state, cfg, *, backend="jnp",
             for u in units})
 
     meta = PlanMeta(cfg=cfg, backend=be, tok_stages=tok_stages,
-                    block_units=units, num_layers=cfg.num_layers)
+                    block_units=units, num_layers=cfg.num_layers,
+                    sharding=scfg)
     plan_params = {
         "tokenizer": folded_tok,
         "blocks": tuple(folded_blocks),
@@ -256,7 +373,8 @@ def compile_plan(params, state, cfg, *, backend="jnp",
     return DeployPlan(meta=meta, params=plan_params)
 
 
-def _compile_lm_plan(params, state, cfg, *, backend, ordering) -> DeployPlan:
+def _compile_lm_plan(params, state, cfg, *, backend, ordering,
+                     mesh=None) -> DeployPlan:
     """Fold a spiking-LM ``ArchConfig`` model (``models.spiking_lm`` params)
     into a deploy plan: RMSNorm gains into the GEMM weights
     (``fold_linear_rmsnorm``), the embedding norm into the embedding table,
@@ -273,6 +391,9 @@ def _compile_lm_plan(params, state, cfg, *, backend, ordering) -> DeployPlan:
         raise ValueError(f"unknown attention ordering: {ordering!r}")
     be = resolve(backend)
     dcfg = LMDeployCfg(arch=cfg, attn_ordering=ordering)
+    scfg = _resolve_sharding(mesh, "lm")
+    if scfg is not None:
+        _validate_sharding(scfg, cfg, "lm")
     units = lm_block_layout(cfg)
 
     # embedding norm: token rows are normalized independently, so the fold is
@@ -290,7 +411,7 @@ def _compile_lm_plan(params, state, cfg, *, backend, ordering) -> DeployPlan:
             for u in units})
 
     meta = PlanMeta(cfg=dcfg, backend=be, tok_stages=(), block_units=units,
-                    num_layers=cfg.num_layers, family="lm")
+                    num_layers=cfg.num_layers, family="lm", sharding=scfg)
     plan_params = {
         "embed": embed,
         "blocks": tuple(folded_blocks),

@@ -9,7 +9,11 @@ per step).
 
 from __future__ import annotations
 
+import math
+import warnings
+
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,15 +22,46 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(shape=(1, 1), axes=("data", "model")):
-    """Tiny mesh over however many real devices exist (tests/examples)."""
-    n = len(jax.devices())
-    import numpy as np
+def feasible_mesh_shape(shape: tuple[int, ...], n: int) -> tuple[int, ...]:
+    """Largest mesh shape elementwise <= ``shape`` whose total fits ``n``
+    devices.
 
+    Axes are capped left to right, so the LEFTMOST axes absorb the shrink
+    first -- with ``(data, model)`` ordering that keeps the model axis (TP
+    degree is dictated by model memory), matching the elastic-remesh policy
+    of ``distributed.fault_tolerance.plan_remesh``.  E.g. ``(2, 2)`` on 2
+    devices becomes ``(1, 2)``, not ``(1, 1)``.
+    """
+    if n < 1:
+        raise ValueError(f"need at least one device, got n={n}")
+    new = list(shape)
+    for i in range(len(new)):
+        rest = math.prod(new[i + 1:])
+        new[i] = max(1, min(new[i], n // max(1, rest)))
+    return tuple(new)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over however many real devices exist (tests/examples).
+
+    When the requested shape needs more devices than exist, the mesh shrinks
+    to the largest feasible shape (leftmost/data axes first -- see
+    :func:`feasible_mesh_shape`) with a warning, instead of silently
+    collapsing all the way to the trivial ``(1,) * len(shape)`` mesh.
+    """
+    devs = jax.devices()
+    n = len(devs)
     total = int(np.prod(shape))
     if total > n:
-        shape = (1,) * len(shape)
-    return jax.make_mesh(shape, axes)
+        fit = feasible_mesh_shape(tuple(shape), n)
+        warnings.warn(
+            f"requested mesh {tuple(shape)} needs {total} devices but only "
+            f"{n} exist; shrinking to the largest feasible shape {fit}",
+            stacklevel=2)
+        shape = fit
+        total = int(np.prod(shape))
+    return jax.sharding.Mesh(
+        np.asarray(devs[:total]).reshape(shape), axes)
 
 
 def batch_axes(multi_pod: bool):

@@ -18,6 +18,14 @@ linear-SSA ``DecodeState`` from the prompt, then a jitted ``decode_step``
 advances one token at a time -- no full-prefix re-scoring, one warm shape per
 batch size, per-token cost flat in context length.
 
+``--mesh DxM`` serves from a mesh-sharded deploy plan (``repro.engine``'s
+``compile_plan(..., mesh=...)``): slot batches fan out over the data axis,
+attention heads shard over the model axis, and under a packed backend every
+cross-device spike edge moves uint32 bitplane words.  The shape is ELASTIC:
+when the live fleet is short (a dead shard), ``fault_tolerance.plan_remesh``
+shrinks the data axis and the slot count proportionally -- capacity degrades,
+the service stays up.
+
 Usage:
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b_smoke \
         --requests 8 --prompt-len 32 --max-new 16
@@ -25,6 +33,9 @@ Usage:
         --arch spike-iand-former_smoke --requests 16 --slots 4 --backend jnp
     PYTHONPATH=src python -m repro.launch.serve --spiking-lm \
         --requests 4 --prompt-len 16 --max-new 8 --backend pallas+packed
+    XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+        PYTHONPATH=src python -m repro.launch.serve --spiking-lm \
+        --backend jnp+packed --mesh 2x2 --requests 4 --max-new 8
 """
 
 from __future__ import annotations
@@ -42,6 +53,55 @@ from repro.models import lm, transformer as T
 
 def greedy_sample(logits):
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def parse_mesh(spec):
+    """``--mesh dxm`` -> (data, model), e.g. "2x1" -> (2, 1)."""
+    if spec is None or isinstance(spec, tuple):
+        return spec
+    d, m = (int(s) for s in spec.lower().split("x"))
+    return (d, m)
+
+
+def _elastic_mesh(shape, slots: int, *, verbose: bool = True):
+    """The serving mesh that actually fits the live device fleet.
+
+    Routes the requested (data, model) shape through
+    :func:`repro.distributed.fault_tolerance.plan_remesh`: a dead shard
+    SHRINKS capacity (fewer data replicas, proportionally fewer slots)
+    instead of killing the service; only a fleet too small for even one
+    model group aborts to single-device serving.
+    """
+    from repro.distributed.fault_tolerance import plan_remesh
+
+    plan = plan_remesh(tuple(shape), jax.device_count(), slots)
+    if plan.action == "continue":
+        return tuple(shape), slots
+    if plan.action == "remesh":
+        if verbose:
+            print(f"[serve] mesh {tuple(shape)} needs "
+                  f"{shape[0] * shape[1]} devices, have "
+                  f"{jax.device_count()}: degrading to {plan.new_shape} "
+                  f"({plan.new_global_batch} slots) -- capacity shrinks, "
+                  "service stays up")
+        return plan.new_shape, max(1, plan.new_global_batch)
+    if verbose:
+        print(f"[serve] mesh {tuple(shape)} infeasible on "
+              f"{jax.device_count()} device(s) (model axis alone does not "
+              "fit): falling back to single-device serving")
+    return (1, 1), slots
+
+
+def _pad_batch(x, mult: int):
+    """Pad the leading (request) axis to a multiple of the data-parallel
+    degree by repeating the last row; returns (padded, true_size).  The
+    executor shards the batch over the data axis, so every slot batch must
+    divide evenly -- padded rows are dead weight, truncated from outputs."""
+    b = x.shape[0]
+    r = (-b) % mult
+    if r:
+        x = jnp.concatenate([x, jnp.repeat(x[-1:], r, axis=0)], axis=0)
+    return x, b
 
 
 def _warm_sizes(slots: int, num_requests: int) -> set[int]:
@@ -106,20 +166,29 @@ def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
 
 
 def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
-                 backend: str = "jnp", seed: int = 0, verbose: bool = True):
+                 backend: str = "jnp", mesh=None, seed: int = 0,
+                 verbose: bool = True):
     """Serve a vision Spikformer through the deploy engine.
 
     The (params, state, cfg) triple is compiled ONCE into a deploy plan --
     ConvBN/LinearBN folded, IAND fused into the neuron epilogue, backend a
     plan property -- then slot batches of images run the jitted executor.
+    ``mesh`` ("dxm" or (data, model)) compiles a mesh-sharded plan and fans
+    slot batches over the data axis; the shape degrades elastically
+    (:func:`_elastic_mesh`) when devices are missing.
     """
     from repro import engine
     from repro.configs.spike_iand_former import get_vision_config
     from repro.core import spikformer as sf
 
+    mesh = parse_mesh(mesh)
+    data_par = 1
+    if mesh is not None:
+        mesh, slots = _elastic_mesh(mesh, slots, verbose=verbose)
+        data_par = mesh[0]
     cfg = get_vision_config(arch)
     params, state = sf.init(jax.random.PRNGKey(seed), cfg)
-    plan = engine.compile_plan(params, state, cfg, backend=backend)
+    plan = engine.compile_plan(params, state, cfg, backend=backend, mesh=mesh)
     step = jax.jit(engine.make_apply_fn(plan))
 
     imgs = jax.random.uniform(
@@ -127,25 +196,28 @@ def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
         (num_requests, cfg.img_size, cfg.img_size, cfg.in_channels))
 
     # warm so the reported throughput is steady-state inference, not
-    # trace+compile time
+    # trace+compile time (warm the PADDED shapes -- those are what runs)
     for b in _warm_sizes(slots, num_requests):
-        jax.block_until_ready(step(plan.params, imgs[:b]))
+        warm, _ = _pad_batch(imgs[:b], data_par)
+        jax.block_until_ready(step(plan.params, warm))
 
     done, t0 = [], time.perf_counter()
     for start in range(0, num_requests, slots):
-        batch = imgs[start : start + slots]
+        batch, b = _pad_batch(imgs[start : start + slots], data_par)
         logits = step(plan.params, batch)
-        classes = np.asarray(jnp.argmax(logits, axis=-1))
+        classes = np.asarray(jnp.argmax(logits[:b], axis=-1))
         for j, c in enumerate(classes):
             done.append((start + j, int(c)))
         if verbose:
             print(f"[serve] slot batch {start//slots}: classified "
-                  f"{batch.shape[0]} images")
+                  f"{b} images")
     dt = time.perf_counter() - t0
     if verbose:
         stats = engine.plan_stats(plan)
+        where = (f"{mesh[0]}x{mesh[1]} mesh" if mesh is not None
+                 else jax.default_backend())
         print(f"[serve] {num_requests} images in {dt:.2f}s "
-              f"({num_requests/dt:.1f} img/s on {jax.default_backend()}; "
+              f"({num_requests/dt:.1f} img/s on {where}; "
               f"deploy plan: {stats['folded_conv_bn'] + stats['folded_linear_bn']} "
               f"folded BN pairs, {stats['fused_lif_iand_dispatches']} fused "
               f"LIF+IAND dispatches, backend={stats['backend']}"
@@ -164,7 +236,7 @@ def spiking_lm_config(arch: str):
 
 def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
                      max_new: int, slots: int = 4, backend: str = "jnp",
-                     ordering: str = "quadratic", seed: int = 0,
+                     ordering: str = "quadratic", mesh=None, seed: int = 0,
                      verbose: bool = True):
     """Serve a spiking LM from a compiled deploy plan (greedy decode).
 
@@ -182,10 +254,15 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
     from repro import engine
     from repro.models import spiking_lm as slm
 
+    mesh = parse_mesh(mesh)
+    data_par = 1
+    if mesh is not None:
+        mesh, slots = _elastic_mesh(mesh, slots, verbose=verbose)
+        data_par = mesh[0]
     cfg = spiking_lm_config(arch)
     params = slm.init_spiking_lm(jax.random.PRNGKey(seed), cfg)
     plan = engine.compile_plan(params, None, cfg, backend=backend,
-                               ordering=ordering)
+                               ordering=ordering, mesh=mesh)
     prefill = jax.jit(engine.make_prefill_fn(plan))
     step = jax.jit(engine.make_decode_step_fn(plan))
 
@@ -194,17 +271,20 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
     prompts = make_batch(dcfg, 0)["tokens"]
 
     # warm ONE (batch, prompt_len) prefill shape and ONE step shape per slot
-    # batch size (plus the ragged final batch) -- the step shape serves every
-    # subsequent token, however long the decode runs
+    # batch size (plus the ragged final batch; padded to the data-parallel
+    # degree) -- the step shape serves every subsequent token, however long
+    # the decode runs
     for b in _warm_sizes(slots, num_requests):
-        logits, st = prefill(plan.params, jnp.zeros((b, prompt_len), jnp.int32))
+        bp = b + ((-b) % data_par)
+        logits, st = prefill(plan.params,
+                             jnp.zeros((bp, prompt_len), jnp.int32))
         jax.block_until_ready(
-            step(plan.params, st, jnp.zeros((b,), jnp.int32))[0])
+            step(plan.params, st, jnp.zeros((bp,), jnp.int32))[0])
 
     done, t0 = [], time.perf_counter()
     for start in range(0, num_requests, slots):
-        seq = jnp.asarray(prompts[start : start + slots])
-        b = seq.shape[0]
+        seq, b = _pad_batch(jnp.asarray(prompts[start : start + slots]),
+                            data_par)
         logits, state = prefill(plan.params, seq)
         tok = greedy_sample(logits[:, -1])
         outs = [tok]
@@ -222,8 +302,10 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
     tot = num_requests * max_new
     if verbose:
         stats = engine.plan_stats(plan)
+        where = (f"{mesh[0]}x{mesh[1]} mesh" if mesh is not None
+                 else jax.default_backend())
         print(f"[serve] {num_requests} requests, {tot} new tokens in {dt:.2f}s "
-              f"({tot/dt:.1f} tok/s on {jax.default_backend()}; LM plan: "
+              f"({tot/dt:.1f} tok/s on {where}; LM plan: "
               f"{stats['folded_linear_rmsnorm']} folded Linear+RMSNorm units, "
               f"{stats['fused_lif_iand_dispatches']} fused LIF+IAND "
               f"dispatches, ordering={stats['attn_ordering']}, "
@@ -258,16 +340,22 @@ def main():
                     choices=("quadratic", "linear"),
                     help="causal-SSA dataflow of the LM plan: (QK^T)V vs the "
                          "chunked-linear Q(K^TV) long-sequence path")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="serve from a mesh-sharded plan, e.g. 2x1 (data-"
+                         "parallel fan-out) or 2x2 (+ tensor-parallel heads); "
+                         "packed backends move uint32 spike words between "
+                         "devices, and a short fleet elastically degrades "
+                         "capacity instead of failing")
     args = ap.parse_args()
     if args.vision:
         serve_vision(args.arch, num_requests=args.requests, slots=args.slots,
-                     backend=args.backend)
+                     backend=args.backend, mesh=args.mesh)
         return
     if args.spiking_lm:
         serve_spiking_lm(args.arch, num_requests=args.requests,
                          prompt_len=args.prompt_len, max_new=args.max_new,
                          slots=args.slots, backend=args.backend,
-                         ordering=args.ordering)
+                         ordering=args.ordering, mesh=args.mesh)
         return
     serve(args.arch, num_requests=args.requests, prompt_len=args.prompt_len,
           max_new=args.max_new, slots=args.slots)

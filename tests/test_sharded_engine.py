@@ -1,0 +1,433 @@
+"""Mesh-sharded engine suite (ISSUE 8): mesh-aware plans are bit-exact vs
+single-device, and every cross-device spike edge moves packed uint32 words.
+
+Covers the acceptance criteria:
+  * packed-word collective round-trips (``word_allgather`` /
+    ``word_psum`` / ``word_reduce_scatter`` / ``spike_shard``) over ragged
+    word tails T in {1, 8, 32, 40}, with occupancy maps consistent with the
+    resharded words on both the aligned and recompute paths,
+  * sharded-vs-single-device BIT-EXACTNESS of logits on host meshes
+    {1x1, 2x1, 1x2, 2x2} for a Table-I-family vision config and the smoke
+    spiking LM (both orderings, dense/packed/sparse backends and the forced
+    Pallas kernel routes), greedy decode token-for-token through
+    prefill + decode_step, and the trained LM fixture checkpoint at
+    T in {8, 32},
+  * the uint32-wire contract, falsified via the jaxpr: under a packed
+    backend every cross-device collective operand is uint32 (no
+    ``packing.unpack`` output ever crosses devices),
+  * ``ShardingCfg`` validation (mesh must divide heads / features) and the
+    ``feasible_mesh_shape`` largest-feasible fallback (satellite 1).
+
+Meshes larger than the device count skip at runtime; CI's shard-smoke job
+provides 8 host devices via ``XLA_FLAGS=--xla_force_host_platform_device_count``.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import packing
+from repro.core import spikformer as sf
+from repro.engine import analysis
+from repro.launch.mesh import feasible_mesh_shape, make_host_mesh
+from repro.models import spiking_lm as slm
+from repro.models.lm import get_config
+
+KEY = jax.random.PRNGKey(0)
+BATCH, SEQ = 2, 8
+
+MESHES = [
+    pytest.param((1, 1), id="1x1"),
+    pytest.param((2, 1), id="2x1"),
+    pytest.param((1, 2), id="1x2"),
+    pytest.param((2, 2), id="2x2"),
+]
+
+PALLAS_PACKED_KERNEL = engine.Backend("pallas", matmul_kernel=True,
+                                      packed=True)
+
+BACKENDS = [
+    pytest.param("jnp", id="jnp"),
+    pytest.param("jnp+packed", id="jnp-packed"),
+    pytest.param("jnp+packed+sparse", id="jnp-sparse"),
+    pytest.param(PALLAS_PACKED_KERNEL, id="pallas-kernel-packed"),
+]
+
+
+def _need(mesh):
+    n = math.prod(mesh)
+    if jax.device_count() < n:
+        pytest.skip(f"needs {n} devices, have {jax.device_count()} "
+                    "(CI shard-smoke sets "
+                    "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+
+def _need_model_axis(m=2):
+    if jax.device_count() < m:
+        pytest.skip(f"needs {m} devices for a model axis")
+
+
+# -- fixtures -----------------------------------------------------------------
+
+def _vcfg(**kw):
+    return sf.SpikformerConfig(embed_dim=64, num_layers=2, num_heads=4, t=4,
+                               **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _vision(ordering="quadratic"):
+    cfg = _vcfg(attn_ordering=ordering)
+    params, state = sf.init(KEY, cfg)
+    img = jax.random.uniform(jax.random.PRNGKey(3), (BATCH, 32, 32, 3))
+    return cfg, params, state, img
+
+
+def _lcfg(t=8, **kw):
+    return get_config("llama3.2-1b_smoke").replace(
+        spiking=True, spike_t=t, num_heads=4, head_dim=None, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _lm(t=8):
+    cfg = _lcfg(t=t)
+    return cfg, slm.init_spiking_lm(KEY, cfg)
+
+
+def _tokens(seq=SEQ, batch=BATCH, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (batch, seq), 0,
+                              _lcfg().vocab_size)
+
+
+@functools.lru_cache(maxsize=None)
+def _vision_ref(backend, ordering="quadratic"):
+    cfg, params, state, img = _vision(ordering)
+    plan = engine.compile_plan(params, state, cfg, backend=backend)
+    return np.asarray(jax.jit(engine.make_apply_fn(plan))(plan.params, img))
+
+
+@functools.lru_cache(maxsize=None)
+def _lm_ref(backend, ordering, t=8):
+    cfg, params = _lm(t)
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering=ordering)
+    return np.asarray(
+        jax.jit(engine.make_apply_fn(plan))(plan.params, _tokens()))
+
+
+def _spikes(key, shape):
+    return (jax.random.uniform(key, shape) > 0.7).astype(jnp.float32)
+
+
+# -- feasible_mesh_shape fallback (satellite 1) -------------------------------
+
+@pytest.mark.parametrize("shape,n,want", [
+    ((2, 2), 2, (1, 2)),      # model axis survives, data shrinks first
+    ((4, 1), 2, (2, 1)),
+    ((3, 2), 4, (2, 2)),
+    ((2, 2), 4, (2, 2)),      # already feasible: unchanged
+    ((2, 4), 1, (1, 1)),
+    ((8,), 2, (2,)),
+])
+def test_feasible_mesh_shape(shape, n, want):
+    assert feasible_mesh_shape(shape, n) == want
+
+
+def test_make_host_mesh_shrinks_with_warning():
+    n = jax.device_count()
+    with pytest.warns(UserWarning, match="shrink"):
+        mesh = make_host_mesh((n * 2, 1), axes=("data", "model"))
+    assert math.prod(mesh.devices.shape) <= n
+    assert mesh.axis_names == ("data", "model")
+    # the largest FEASIBLE shape, not a collapse to (1, 1)
+    assert mesh.devices.shape == feasible_mesh_shape((n * 2, 1), n)
+
+
+# -- packed-word collective round-trips (satellite 2) -------------------------
+
+def _on_model_axis(fn, *args):
+    """Run ``fn(*args)`` under shard_map on a 2-way model axis, every operand
+    and result replicated (the collectives under test do the sharding)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((2,), ("model",))
+    reps = jax.tree_util.tree_map(lambda _: P(), args)
+    return jax.jit(shard_map(fn, mesh=mesh, in_specs=reps, out_specs=P(),
+                             check_rep=False))(*args)
+
+
+def _assert_occ_consistent(xp):
+    assert xp.occ is not None
+    np.testing.assert_array_equal(np.asarray(xp.occ),
+                                  np.asarray(packing.occupancy_map(xp.words)))
+
+
+@pytest.mark.parametrize("t", [1, 8, 32, 40], ids=lambda t: f"T{t}")
+@pytest.mark.parametrize("feat", [256, 48], ids=["occ-aligned", "occ-ragged"])
+def test_word_allgather_shard_roundtrip(t, feat):
+    """spike_shard then word_allgather is the identity on words AND keeps the
+    occupancy map exactly consistent, on both the tile-aligned path
+    (256/2 = 128 = OCC_TILE) and the recompute path (48/2 = 24)."""
+    _need_model_axis()
+    xp = packing.pack(_spikes(KEY, (t, 3, feat)), occupancy=True)
+
+    def body(xp):
+        local = engine.spike_shard(xp, "model", 2)
+        return engine.word_allgather(local, "model")
+
+    got = _on_model_axis(body, xp)
+    np.testing.assert_array_equal(np.asarray(got.words), np.asarray(xp.words))
+    assert got.t == t
+    _assert_occ_consistent(got)
+
+
+@pytest.mark.parametrize("t", [1, 8, 32, 40], ids=lambda t: f"T{t}")
+def test_word_psum_is_disjoint_or(t):
+    """Shards holding disjoint spike sets psum to exactly the union train --
+    the uint32 sum IS the bitwise OR when set bits are disjoint -- and the
+    occupancy popcounts add to the union's map."""
+    _need_model_axis()
+    full = _spikes(KEY, (t, 2, 64))
+    even = full * (jnp.arange(64) % 2 == 0)
+    odd = full * (jnp.arange(64) % 2 == 1)
+    parts = jnp.stack([even, odd])          # shard i holds parity-i features
+
+    def body(parts):
+        from jax import lax
+        mine = parts[lax.axis_index("model")]
+        return engine.word_psum(packing.pack(mine, occupancy=True), "model")
+
+    got = _on_model_axis(body, parts)
+    want = packing.pack(full, occupancy=True)
+    np.testing.assert_array_equal(np.asarray(got.words),
+                                  np.asarray(want.words))
+    np.testing.assert_array_equal(np.asarray(got.occ), np.asarray(want.occ))
+
+
+@pytest.mark.parametrize("t", [1, 8, 32, 40], ids=lambda t: f"T{t}")
+@pytest.mark.parametrize("feat", [512, 96], ids=["occ-aligned", "occ-ragged"])
+def test_word_reduce_scatter_allgather_is_psum(t, feat):
+    """reduce_scatter then all_gather composes to exactly word_psum, with the
+    occupancy map consistent after every hop (512/2 = 256 keeps the tiled
+    occ scatter; 96/2 = 48 takes the recompute path)."""
+    _need_model_axis()
+    full = _spikes(KEY, (t, 2, feat))
+    even = full * (jnp.arange(feat) % 2 == 0)
+    odd = full * (jnp.arange(feat) % 2 == 1)
+    parts = jnp.stack([even, odd])
+
+    def body(parts):
+        from jax import lax
+        mine = packing.pack(parts[lax.axis_index("model")], occupancy=True)
+        scattered = engine.word_reduce_scatter(mine, "model")
+        return engine.word_allgather(scattered, "model")
+
+    got = _on_model_axis(body, parts)
+    want = packing.pack(full, occupancy=True)
+    np.testing.assert_array_equal(np.asarray(got.words),
+                                  np.asarray(want.words))
+    _assert_occ_consistent(got)
+
+
+def test_spike_allgather_dense_matches_packed():
+    """The backend-polymorphic gather: dense f32 and packed word routes land
+    the same spikes in the same feature order."""
+    _need_model_axis()
+    x = _spikes(KEY, (8, 2, 96))
+    xp = packing.pack(x, occupancy=True)
+
+    def body(x, xp):
+        dense = engine.spike_allgather(
+            engine.spike_shard(x, "model", 2), "model")
+        words = engine.spike_allgather(
+            engine.spike_shard(xp, "model", 2), "model")
+        return dense, words
+
+    dense, words = _on_model_axis(body, x, xp)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(packing.unpack(words)),
+                                  np.asarray(x))
+
+
+# -- sharded vs single-device bit-exactness (satellite 3) ---------------------
+
+@pytest.mark.parametrize("mesh", MESHES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_vision_sharded_bit_exact(backend, mesh):
+    """Vision plan logits on every host mesh == the single-device plan,
+    bit for bit (column-parallel TP splits no contraction dim)."""
+    _need(mesh)
+    cfg, params, state, img = _vision()
+    plan = engine.compile_plan(params, state, cfg, backend=backend, mesh=mesh)
+    got = jax.jit(engine.make_apply_fn(plan))(plan.params, img)
+    np.testing.assert_array_equal(np.asarray(got), _vision_ref(backend))
+
+
+@pytest.mark.parametrize("mesh", [(1, 2), (2, 2)], ids=["1x2", "2x2"])
+def test_vision_sharded_linear_ordering(mesh):
+    """Both SSA orderings survive the mesh: the chunked-linear vision plan is
+    sharded-vs-single-device bit-exact too."""
+    _need(mesh)
+    cfg, params, state, img = _vision("linear")
+    plan = engine.compile_plan(params, state, cfg, backend="jnp+packed",
+                               mesh=mesh)
+    got = jax.jit(engine.make_apply_fn(plan))(plan.params, img)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  _vision_ref("jnp+packed", "linear"))
+
+
+@pytest.mark.parametrize("ordering", ["quadratic", "linear"])
+@pytest.mark.parametrize("mesh", MESHES)
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_lm_sharded_bit_exact(backend, mesh, ordering):
+    """LM plan logits on every host mesh == the single-device plan, bit for
+    bit, both causal-SSA orderings (head-local SSA is exact integer
+    arithmetic on binary spikes -- sharding it cannot reassociate)."""
+    _need(mesh)
+    cfg, params = _lm()
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering=ordering, mesh=mesh)
+    got = jax.jit(engine.make_apply_fn(plan))(plan.params, _tokens())
+    np.testing.assert_array_equal(np.asarray(got), _lm_ref(backend, ordering))
+
+
+@pytest.mark.parametrize("mesh", MESHES)
+def test_lm_sharded_greedy_decode(mesh):
+    """Greedy decode through the sharded prefill + decode_step factories is
+    token-for-token AND logit-for-logit identical to single-device decode,
+    DecodeState sharded over heads."""
+    _need(mesh)
+    cfg, params = _lm()
+    seq = _tokens(seq=5)
+
+    def greedy(plan, steps=4):
+        pf = jax.jit(engine.make_prefill_fn(plan))
+        st = jax.jit(engine.make_decode_step_fn(plan))
+        logits, state = pf(plan.params, seq)
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        toks, outs = [tok], [logits[:, -1]]
+        for _ in range(steps):
+            step_logits, state = st(plan.params, state, tok)
+            tok = jnp.argmax(step_logits, axis=-1).astype(jnp.int32)
+            toks.append(tok)
+            outs.append(step_logits)
+        return np.asarray(jnp.stack(toks)), np.asarray(jnp.stack(outs))
+
+    base = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                               ordering="linear")
+    sharded = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                                  ordering="linear", mesh=mesh)
+    want_toks, want_logits = greedy(base)
+    got_toks, got_logits = greedy(sharded)
+    np.testing.assert_array_equal(got_toks, want_toks)
+    np.testing.assert_array_equal(got_logits, want_logits)
+
+
+@pytest.mark.parametrize("t", [8, 32], ids=["T8", "T32"])
+def test_trained_fixture_sharded_bit_exact(tmp_path_factory, t):
+    """The trained-one-epoch LM fixture checkpoint serves identically from a
+    (1, 2) mesh plan -- real learned weights, not just init noise."""
+    _need((1, 2))
+    from repro.checkpoint import fixtures
+
+    ckpt_dir, _ = fixtures.trained_lm_fixture(
+        tmp_path_factory.mktemp("lm_fixture") / "ck")
+    cfg = fixtures.fixture_config(spike_t=t)
+    skel = slm.init_spiking_lm(KEY, cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(7), (2, 6), 0,
+                                cfg.vocab_size)
+    base = engine.compile_plan(skel, None, cfg, backend="jnp+packed",
+                               ordering="linear", checkpoint=str(ckpt_dir))
+    sharded = engine.compile_plan(skel, None, cfg, backend="jnp+packed",
+                                  ordering="linear", checkpoint=str(ckpt_dir),
+                                  mesh=(1, 2))
+    want = jax.jit(engine.make_apply_fn(base))(base.params, tokens)
+    got = jax.jit(engine.make_apply_fn(sharded))(sharded.params, tokens)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# -- the uint32-wire contract, falsified in the jaxpr -------------------------
+
+@pytest.mark.parametrize("family", ["vision", "lm"])
+def test_packed_collectives_are_uint32_only(family):
+    """Under a packed backend, EVERY cross-device collective operand in the
+    sharded jaxpr is uint32 -- no ``packing.unpack`` output ever crosses
+    devices.  (The dense backend's collectives are float32; same graph shape,
+    8x the wire bytes at T=8.)"""
+    _need((1, 2))
+    if family == "vision":
+        cfg, params, state, img = _vision()
+        plan = engine.compile_plan(params, state, cfg, backend="jnp+packed",
+                                   mesh=(1, 2))
+        args = (plan.params, img)
+    else:
+        cfg, params = _lm()
+        state = None
+        plan = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                                   ordering="linear", mesh=(1, 2))
+        args = (plan.params, _tokens())
+    rep = analysis.collective_report(engine.make_apply_fn(plan), *args)
+    assert rep["num_collectives"] > 0
+    assert rep["dtypes"] == ["uint32"], rep["dtypes"]
+    assert rep["wire_bytes"] > 0
+
+    dense_plan = engine.compile_plan(
+        params, state, cfg, backend="jnp",
+        **({"ordering": "linear"} if family == "lm" else {}), mesh=(1, 2))
+    dense_rep = analysis.collective_report(
+        engine.make_apply_fn(dense_plan), dense_plan.params, args[1])
+    assert dense_rep["dtypes"] == ["float32"]
+    # same edges cross; the packed wire is ceil(T/32)/T of the dense wire
+    assert dense_rep["num_collectives"] == rep["num_collectives"]
+    t = cfg.t if family == "vision" else cfg.spike_t
+    assert dense_rep["wire_bytes"] == rep["wire_bytes"] * (
+        t // packing.num_words(t))
+
+
+def test_lm_decode_collectives_uint32_only():
+    """The decode STEP's cross-device edges are packed words too."""
+    _need((1, 2))
+    cfg, params = _lm()
+    plan = engine.compile_plan(params, None, cfg, backend="jnp+packed",
+                               ordering="linear", mesh=(1, 2))
+    logits, state = engine.prefill(plan, _tokens(seq=4))
+    tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+    rep = analysis.collective_report(
+        engine.make_decode_step_fn(plan), plan.params, state, tok)
+    assert rep["num_collectives"] > 0
+    assert rep["dtypes"] == ["uint32"], rep["dtypes"]
+
+
+# -- ShardingCfg resolution + validation --------------------------------------
+
+def test_plan_meta_carries_sharding():
+    cfg, params, state, img = _vision()
+    plan = engine.compile_plan(params, state, cfg, mesh="2x2")
+    scfg = plan.meta.sharding
+    assert isinstance(scfg, engine.ShardingCfg)
+    assert scfg.mesh_shape == (2, 2)
+    assert scfg.mesh_axes == ("data", "model")
+    assert scfg.rules_dict["heads"] == "model"
+    # single-device plans carry no sharding at all
+    assert engine.compile_plan(params, state, cfg).meta.sharding is None
+
+
+def test_sharding_validation_rejects_indivisible():
+    cfg, params, state, _ = _vision()
+    with pytest.raises(ValueError, match="num_heads"):
+        engine.compile_plan(params, state, cfg, mesh=(1, 3))
+    lcfg, lparams = _lm()
+    with pytest.raises(ValueError, match="num_heads"):
+        engine.compile_plan(lparams, None, lcfg, mesh=(1, 8))
+
+
+def test_mesh_string_and_tuple_forms_agree():
+    cfg, params = _lm()
+    a = engine.compile_plan(params, None, cfg, mesh="1x2").meta.sharding
+    b = engine.compile_plan(params, None, cfg, mesh=(1, 2)).meta.sharding
+    assert a == b
