@@ -44,7 +44,8 @@ def _run(name, fn):
 
 
 def write_bench_json(engine_result, packed_result, lm_result=None,
-                     sparsity_result=None, sharded_result=None) -> None:
+                     sparsity_result=None, sharded_result=None,
+                     serve_result=None) -> None:
     """Persist the engine perf trajectory machine-readably: per-config
     tokens/s and inter-layer activation bytes, tracked across PRs.
 
@@ -179,6 +180,13 @@ def write_bench_json(engine_result, packed_result, lm_result=None,
                     "num_collectives": mm["num_collectives"],
                 }
             configs[f"{row['config']}@mesh{d}x{m}-T{row['t']}"] = entry
+    if serve_result is not None:
+        # serving rows (benchmarks/serving_load.py): throughput-vs-latency of
+        # the continuous-batching scheduler vs the synchronous-slots and
+        # single-stream disciplines under one Poisson open-loop trace
+        from benchmarks import serving_load
+
+        configs.update(serving_load.bench_configs(serve_result))
     BENCH_JSON.write_text(json.dumps({"configs": configs}, indent=2) + "\n")
     print(f"wrote {BENCH_JSON}")
 
@@ -186,8 +194,9 @@ def write_bench_json(engine_result, packed_result, lm_result=None,
 def main() -> None:
     from benchmarks import (engine_fused_vs_naive, int8_decode, kernel_bench,
                             linear_attention_scaling, lm_plan, packed_traffic,
-                            perf_spiking, sharded_traffic, sparsity,
-                            table1_iand_vs_add, table2_weight_traffic)
+                            perf_spiking, serving_load, sharded_traffic,
+                            sparsity, table1_iand_vs_add,
+                            table2_weight_traffic)
 
     print("name,us_per_call,derived")
     engine_result = _run("engine_fused_vs_naive", engine_fused_vs_naive.main)
@@ -199,8 +208,10 @@ def main() -> None:
     sparsity_result = _run("sparsity", sparsity.main)
     print()
     sharded_result = _run("sharded_traffic", sharded_traffic.main)
+    print()
+    serve_result = _run("serving_load", serving_load.main)
     write_bench_json(engine_result, packed_result, lm_result, sparsity_result,
-                     sharded_result)
+                     sharded_result, serve_result)
     print()
     _run("table2_weight_traffic", table2_weight_traffic.main)
     print()

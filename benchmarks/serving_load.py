@@ -1,0 +1,288 @@
+"""Poisson open-loop serving load: throughput-vs-latency of the decode
+service schedulers.
+
+One trace of requests -- Poisson arrivals, mixed prompt-length buckets,
+ragged per-request decode lengths -- is replayed through three serving
+disciplines over the SAME compiled LM deploy plan:
+
+  continuous    -- ``launch.scheduler.ContinuousScheduler``: admission queue
+                   + backpressure, per-slot ``DecodeState`` paging, ragged
+                   completion/eviction; the step batch never idles behind a
+                   slow member.
+  sync_slots    -- the legacy synchronous-slots discipline (``launch.serve``
+                   shaped): take the next ``slots`` arrived requests, prefill
+                   each, decode the batch until its SLOWEST member finishes,
+                   admit nothing mid-batch.
+  single_stream -- the SpikingLlama-style ``serve_step`` cache loop
+                   (SNIPPETS.md): one request at a time, prefill + step.
+
+Open loop means arrivals are honoured against the wall clock -- a slow
+discipline pays queueing delay in its TTFT, exactly like live traffic.
+Recorded per discipline: completed-token throughput, p50/p95 TTFT, and
+p50/p95 per-token latency; the ``@serve`` rows of ``BENCH_engine.json``
+persist them, with ``continuous_over_sync >= 1`` the acceptance ratio.
+
+Run standalone (merges rows into the committed BENCH_engine.json in place):
+
+    PYTHONPATH=src python -m benchmarks.serving_load
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+BENCH_JSON = pathlib.Path(__file__).resolve().parent.parent / "BENCH_engine.json"
+
+ARCH = "llama3.2-1b_smoke"
+CONFIG = "spiking-lm-smoke"
+BACKEND = "jnp"
+ORDERING = "linear"
+SLOTS = 4
+NUM_REQUESTS = 32
+RATE_RPS = 250.0                 # open-loop arrival rate (requests/s) -- above
+                                 # the service rate, so the run is decode-bound
+                                 # (scheduling, not arrival, sets throughput)
+PROMPT_LENS = (4, 8, 12)         # mixed length buckets (one warm shape each)
+MAX_NEW_RANGE = (4, 24)          # ragged decode lengths force mid-flight
+MAX_PENDING = 2 * NUM_REQUESTS   # eviction in every discipline
+
+
+def poisson_requests(n: int, *, rate_rps: float, prompt_lens, max_new_range,
+                     vocab: int, seed: int = 0):
+    """One open-loop request trace: exponential interarrivals at
+    ``rate_rps``, prompt lengths drawn from the bucket list, per-request
+    ``max_new`` uniform over ``max_new_range`` (inclusive).  Deterministic in
+    ``seed`` so every discipline replays the identical workload."""
+    from repro.launch.scheduler import Request
+
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate_rps, size=n))
+    reqs = []
+    for i in range(n):
+        s = int(rng.choice(np.asarray(prompt_lens)))
+        reqs.append(Request(
+            rid=i,
+            prompt=rng.integers(0, vocab, size=(s,), dtype=np.int32),
+            max_new=int(rng.integers(max_new_range[0], max_new_range[1] + 1)),
+            arrival_s=float(arrivals[i])))
+    return reqs
+
+
+def _fresh(reqs):
+    """Replay copy of a request trace (per-discipline mutable state)."""
+    from repro.launch.scheduler import Request
+
+    return [Request(rid=r.rid, prompt=r.prompt, max_new=r.max_new,
+                    eos_id=r.eos_id, arrival_s=r.arrival_s) for r in reqs]
+
+
+def _percentile(xs, q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+def _metrics(completed, wall_s: float, *, rejected: int = 0) -> dict:
+    """Latency/throughput summary of one discipline's completed requests."""
+    ttft = [r.first_token_s - r.arrival_s for r in completed]
+    per_tok = [(r.finish_s - r.first_token_s) / (len(r.tokens) - 1)
+               for r in completed if len(r.tokens) > 1]
+    tokens = sum(len(r.tokens) for r in completed)
+    return {
+        "completed": len(completed),
+        "rejected": rejected,
+        "new_tokens": tokens,
+        "wall_s": wall_s,
+        "tokens_per_s": tokens / wall_s if wall_s else 0.0,
+        "ttft_p50_s": _percentile(ttft, 50),
+        "ttft_p95_s": _percentile(ttft, 95),
+        "per_token_p50_s": _percentile(per_tok, 50),
+        "per_token_p95_s": _percentile(per_tok, 95),
+    }
+
+
+def run_continuous(plan, reqs, *, slots: int, max_pending: int) -> dict:
+    from repro.launch.scheduler import ContinuousScheduler
+
+    sched = ContinuousScheduler(plan, slots=slots, max_pending=max_pending)
+    sched.warm(sorted({r.prompt_len for r in reqs}))
+    t0 = time.perf_counter()
+    completed = sched.run(reqs, open_loop=True)
+    wall = time.perf_counter() - t0
+    out = _metrics(completed, wall, rejected=len(sched.rejected))
+    out["slot_occupancy"] = sched.stats()["slot_occupancy"]
+    return out
+
+
+def run_sync_slots(plan, reqs, *, slots: int) -> dict:
+    """The legacy discipline: fixed slot batches in arrival order, each batch
+    held until its slowest member's ``max_new`` -- freed slots idle, nothing
+    admits mid-batch.  Prefills go through the same per-request paging as the
+    continuous path (batch-1 prefill + scatter), so the ONLY difference the
+    ratio measures is scheduling."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.launch.scheduler import greedy
+
+    prefill = jax.jit(engine.make_prefill_fn(plan))
+    step = jax.jit(engine.make_decode_step_fn(plan))
+    scatter = jax.jit(engine.decode_state_scatter)
+
+    # warm every shape (identical shape bill to the continuous path)
+    state0 = engine.decode_state_batch_init(plan.meta, slots)
+    for s in sorted({r.prompt_len for r in reqs}):
+        _, st = prefill(plan.params, jnp.zeros((1, s), jnp.int32))
+        jax.block_until_ready(scatter(state0, 0, st, 0).pos)
+    jax.block_until_ready(step(plan.params, state0,
+                               jnp.zeros((slots,), jnp.int32))[0])
+
+    pending = sorted(reqs, key=lambda r: (r.arrival_s, r.rid))
+    completed = []
+    t0 = time.perf_counter()
+    now = lambda: time.perf_counter() - t0  # noqa: E731
+    for start in range(0, len(pending), slots):
+        batch = pending[start : start + slots]
+        while now() < max(r.arrival_s for r in batch):
+            time.sleep(1e-4)                   # batch waits for every member
+        state = engine.decode_state_batch_init(plan.meta, slots)
+        toks = np.zeros((slots,), np.int32)
+        for i, r in enumerate(batch):
+            logits, st = prefill(plan.params,
+                                 jnp.asarray(r.prompt, jnp.int32)[None])
+            tok0 = int(jax.block_until_ready(greedy(logits[:, -1]))[0])
+            r.tokens.append(tok0)
+            r.first_token_s = now()
+            state = scatter(state, i, st, 0)
+            toks[i] = tok0
+        depth = max(r.max_new for r in batch)
+        for _ in range(depth - 1):
+            logits, state = step(plan.params, state, jnp.asarray(toks))
+            nxt = np.asarray(jax.block_until_ready(greedy(logits)))
+            t = now()
+            for i, r in enumerate(batch):
+                if len(r.tokens) < r.max_new:
+                    r.tokens.append(int(nxt[i]))
+                    toks[i] = int(nxt[i])
+                    if len(r.tokens) == r.max_new:
+                        r.finish_s = t
+        for r in batch:
+            if r.finish_s is None:             # max_new == 1
+                r.finish_s = r.first_token_s
+            completed.append(r)
+    return _metrics(completed, time.perf_counter() - t0)
+
+
+def run_single_stream(plan, reqs) -> dict:
+    """SpikingLlama-style serve loop: one request at a time, prefill then a
+    batch-1 step chain -- the single-stream baseline to beat."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import engine
+    from repro.launch.scheduler import greedy
+
+    prefill = jax.jit(engine.make_prefill_fn(plan))
+    step = jax.jit(engine.make_decode_step_fn(plan))
+    for s in sorted({r.prompt_len for r in reqs}):
+        _, st = prefill(plan.params, jnp.zeros((1, s), jnp.int32))
+        jax.block_until_ready(step(plan.params, st,
+                                   jnp.zeros((1,), jnp.int32))[0])
+
+    completed = []
+    t0 = time.perf_counter()
+    now = lambda: time.perf_counter() - t0  # noqa: E731
+    for r in sorted(reqs, key=lambda q: (q.arrival_s, q.rid)):
+        while now() < r.arrival_s:
+            time.sleep(1e-4)
+        logits, state = prefill(plan.params,
+                                jnp.asarray(r.prompt, jnp.int32)[None])
+        tok = greedy(logits[:, -1])
+        r.tokens.append(int(jax.block_until_ready(tok)[0]))
+        r.first_token_s = now()
+        for _ in range(r.max_new - 1):
+            logits, state = step(plan.params, state, tok)
+            tok = greedy(logits)
+            r.tokens.append(int(jax.block_until_ready(tok)[0]))
+        r.finish_s = now()
+        completed.append(r)
+    return _metrics(completed, time.perf_counter() - t0)
+
+
+def bench_configs(result) -> dict:
+    """``@serve`` row dict for BENCH_engine.json (shared by run.py and the
+    standalone in-place merge)."""
+    return {f"{row['config']}@serve-T{row['t']}":
+            {k: v for k, v in row.items() if k != "config"}
+            for row in result["rows"]}
+
+
+def merge_bench_json(result, path: pathlib.Path = BENCH_JSON) -> None:
+    data = json.loads(path.read_text()) if path.exists() else {"configs": {}}
+    data["configs"].update(bench_configs(result))
+    path.write_text(json.dumps(data, indent=2) + "\n")
+    print(f"merged {len(result['rows'])} @serve row(s) into {path}")
+
+
+def main() -> dict:
+    import jax
+
+    from repro import engine
+    from repro.launch.serve import spiking_lm_config
+    from repro.models import spiking_lm as slm
+
+    cfg = spiking_lm_config(ARCH)
+    params = slm.init_spiking_lm(jax.random.PRNGKey(0), cfg)
+    plan = engine.compile_plan(params, None, cfg, backend=BACKEND,
+                               ordering=ORDERING)
+    trace = poisson_requests(
+        NUM_REQUESTS, rate_rps=RATE_RPS, prompt_lens=PROMPT_LENS,
+        max_new_range=MAX_NEW_RANGE, vocab=cfg.vocab_size, seed=0)
+
+    print(f"[serving_load] {NUM_REQUESTS} requests, Poisson {RATE_RPS} req/s, "
+          f"prompts {PROMPT_LENS}, max_new {MAX_NEW_RANGE}, "
+          f"slots={SLOTS}, backend={BACKEND}, ordering={ORDERING}")
+    single = run_single_stream(plan, _fresh(trace))
+    sync = run_sync_slots(plan, _fresh(trace), slots=SLOTS)
+    cont = run_continuous(plan, _fresh(trace), slots=SLOTS,
+                          max_pending=MAX_PENDING)
+    for name, m in (("single_stream", single), ("sync_slots", sync),
+                    ("continuous", cont)):
+        print(f"  {name:>13}: {m['tokens_per_s']:8.1f} tok/s  "
+              f"ttft p50/p95 {m['ttft_p50_s']*1e3:6.1f}/"
+              f"{m['ttft_p95_s']*1e3:6.1f} ms  "
+              f"per-token p50/p95 {m['per_token_p50_s']*1e3:5.1f}/"
+              f"{m['per_token_p95_s']*1e3:5.1f} ms")
+    over_sync = (cont["tokens_per_s"] / sync["tokens_per_s"]
+                 if sync["tokens_per_s"] else float("inf"))
+    over_single = (cont["tokens_per_s"] / single["tokens_per_s"]
+                   if single["tokens_per_s"] else float("inf"))
+    print(f"  continuous/sync_slots = {over_sync:.3f}x, "
+          f"continuous/single_stream = {over_single:.3f}x")
+
+    row = {
+        "config": CONFIG,
+        "t": cfg.spike_t,
+        "slots": SLOTS,
+        "requests": NUM_REQUESTS,
+        "rate_rps": RATE_RPS,
+        "prompt_len_buckets": list(PROMPT_LENS),
+        "max_new_min": MAX_NEW_RANGE[0],
+        "max_new_max": MAX_NEW_RANGE[1],
+        "max_pending": MAX_PENDING,
+        "backend": BACKEND,
+        "ordering": ORDERING,
+        "continuous": cont,
+        "sync_slots": sync,
+        "single_stream": single,
+        "continuous_over_sync": over_sync,
+        "continuous_over_single": over_single,
+    }
+    return {"rows": [row]}
+
+
+if __name__ == "__main__":
+    merge_bench_json(main())

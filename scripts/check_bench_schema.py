@@ -2,8 +2,9 @@
 """Bench-schema sanity: the row keys ``benchmarks/run.py`` persists to
 ``BENCH_engine.json`` must match the keys ``README.md`` documents.
 
-Covers the sparse rows (``@sparse-T``, written by ``benchmarks/sparsity.py``)
-and the mesh rows (``@mesh``, written by ``benchmarks/sharded_traffic.py``).
+Covers the sparse rows (``@sparse-T``, written by ``benchmarks/sparsity.py``),
+the mesh rows (``@mesh``, written by ``benchmarks/sharded_traffic.py``), and
+the serving rows (``@serve``, written by ``benchmarks/serving_load.py``).
 Three-way check per block, no JAX needed (CI-cheap):
 
   1. README documents exactly the keys the committed ``BENCH_engine.json``
@@ -28,6 +29,7 @@ ROOT = pathlib.Path(__file__).resolve().parent.parent
 BLOCKS = {
     "bench-sparse-schema": ("@sparse-T", ["sparsity.py"]),
     "bench-sharded-schema": ("@mesh", ["sharded_traffic.py"]),
+    "bench-serve-schema": ("@serve", ["serving_load.py"]),
 }
 
 

@@ -117,9 +117,13 @@ def plan_remesh(old_shape: tuple[int, int], devices_left: int,
     data, model = old_shape
     if devices_left >= data * model:
         return ElasticPlan(old_shape, old_shape, global_batch, "continue")
-    new_data = data
-    while new_data > 0 and new_data * model > devices_left:
-        new_data //= 2
+    # largest ACTUAL divisor of the data degree that fits -- repeated halving
+    # only visits data/2^k, which for a non-power-of-two degree can land on a
+    # non-divisor (data=5 -> 2), breaking the per-replica batch split the
+    # proportional rescale below relies on
+    new_data = max((d for d in range(1, data + 1)
+                    if data % d == 0 and d * model <= devices_left),
+                   default=0)
     if new_data == 0:
         return ElasticPlan(old_shape, old_shape, global_batch, "abort")
     scale = new_data / data

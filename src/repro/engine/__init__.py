@@ -37,7 +37,8 @@ from repro.engine.backend import (
     word_reduce_scatter,
 )
 from repro.engine.execute import (
-    DecodeState, apply, decode_state_init, decode_step, make_apply_fn,
+    DecodeState, apply, decode_state_batch_init, decode_state_gather,
+    decode_state_init, decode_state_scatter, decode_step, make_apply_fn,
     make_decode_step_fn, make_prefill_fn, prefill,
 )
 from repro.engine.layout import (
@@ -56,7 +57,8 @@ __all__ = [
     "ssa_prefill_apply", "ssa_prefill_apply_packed", "ssa_prefill_state",
     "ssa_prefill_state_packed", "unit_partition_specs", "word_allgather",
     "word_psum", "word_reduce_scatter",
-    "DecodeState", "apply", "decode_state_init", "decode_step",
+    "DecodeState", "apply", "decode_state_batch_init", "decode_state_gather",
+    "decode_state_init", "decode_state_scatter", "decode_step",
     "make_apply_fn", "make_decode_step_fn", "make_prefill_fn", "prefill",
     "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "lm_block_layout",
     "lm_decode_spike_edges", "lm_spike_edges", "spike_edges",

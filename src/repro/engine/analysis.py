@@ -185,6 +185,38 @@ def lm_decode_traffic(cfg, *, batch: int = 1, backend=None,
     return priced
 
 
+def decode_slot_report(plan, *, slots: int, budget_bytes: int | None = None,
+                       prompt_lens=()) -> dict:
+    """Decode-slot accounting of a continuous-batching service on ``plan``:
+    per-slot and whole-batch ``DecodeState`` bytes, per-step wire bytes at the
+    slot count (state read+write plus the S=1 spike edges), the slot capacity
+    a device-memory budget buys (``max_slots`` -- exact, the state has no
+    context-length term), and the warm-shape bill: ONE step shape for the
+    slot batch plus one prefill shape per distinct prompt-length bucket."""
+    meta = plan.meta
+    entry = meta.decode
+    if entry is None:
+        raise ValueError("decode-slot stats are an LM-plan mode "
+                         f"(family={meta.family!r})")
+    cfg = meta.cfg.arch
+    traffic = lm_decode_traffic(cfg, batch=slots, backend=meta.backend,
+                                mesh=meta.sharding)
+    report = {
+        "slots": slots,
+        "state_bytes_per_slot": entry.state_bytes(1),
+        "state_bytes_batch": entry.state_bytes(slots),
+        "bytes_per_step_dense": traffic["dense_bytes_per_step"],
+        "bytes_per_step_packed": traffic["packed_bytes_per_step"],
+        "warm_step_shapes": 1,
+        "warm_prefill_shapes": len(set(prompt_lens)),
+        "prompt_len_buckets": tuple(sorted(set(prompt_lens))),
+    }
+    if budget_bytes is not None:
+        report["budget_bytes"] = budget_bytes
+        report["max_slots"] = entry.max_slots(budget_bytes)
+    return report
+
+
 def _traffic_sharding(mesh, family: str):
     """Coerce a traffic function's ``mesh=`` argument into the family's
     resolved ``ShardingCfg`` (None passes through)."""

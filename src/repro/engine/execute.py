@@ -527,6 +527,71 @@ def decode_state_init(meta: PlanMeta, batch: int) -> DecodeState:
         pos=jnp.zeros((), jnp.int32))
 
 
+# -- decode-state paging (continuous batching) --------------------------------
+#
+# A slot batch's DecodeState is independent per batch row: the kv accumulators
+# carry no cross-row terms (SSA state is per sequence) and nothing in the step
+# mixes rows.  So a serving scheduler can PAGE sequences in and out of a live
+# batched state -- prefill a new prompt at its own length, scatter its per-
+# layer K^T V planes into a freed slot, keep stepping the one warm batch shape
+# -- which is what ``launch.scheduler`` builds on.  The helpers below are the
+# whole device-side contract: pure jnp index updates over the DecodeState
+# pytree, jittable (slot/src may be traced), and layout-preserving -- under a
+# head-sharded mesh the update touches only the batch axis, so each kv plane
+# stays resident on the shard that owns its heads.
+
+
+def decode_state_batch_init(meta: PlanMeta, slots: int) -> DecodeState:
+    """Zero batched ``DecodeState`` for a ``slots``-wide serving batch, with a
+    PER-SLOT position vector ``pos: (slots,) int32`` (slots decode at ragged
+    depths under continuous batching, so a scalar token count cannot describe
+    the batch; ``decode_step``'s ``pos + 1`` advances it elementwise)."""
+    entry = _decode_entry(meta)
+    return DecodeState(
+        kv=tuple(jnp.zeros(s, jnp.float32) for s in entry.state_shapes(slots)),
+        pos=jnp.zeros((slots,), jnp.int32))
+
+
+def decode_state_scatter(batch_state: DecodeState, slot, seq_state: DecodeState,
+                         src=0) -> DecodeState:
+    """Page row ``src`` of ``seq_state`` into slot ``slot`` of a batched
+    state: every per-layer kv accumulator is a ``dynamic_update_index_in_dim``
+    on the batch axis (axis 1 of the (T, B, H, Dh, Dh) planes), and the
+    per-slot position picks up the source's token count.  Pure and jittable --
+    the admission path of the continuous scheduler."""
+    row = jax.tree.map(
+        lambda kv: jax.lax.dynamic_index_in_dim(kv, src, axis=1,
+                                                keepdims=False),
+        seq_state.kv)
+    kv = jax.tree.map(
+        lambda bkv, r: jax.lax.dynamic_update_index_in_dim(bkv, r, slot,
+                                                           axis=1),
+        batch_state.kv, row)
+    src_pos = (seq_state.pos if seq_state.pos.ndim == 0
+               else jax.lax.dynamic_index_in_dim(seq_state.pos, src, axis=0,
+                                                 keepdims=False))
+    if batch_state.pos.ndim == 0:
+        raise ValueError(
+            "scatter target must carry a per-slot pos vector (use "
+            "decode_state_batch_init for the serving batch)")
+    pos = jax.lax.dynamic_update_index_in_dim(batch_state.pos, src_pos, slot,
+                                              axis=0)
+    return DecodeState(kv=kv, pos=pos)
+
+
+def decode_state_gather(batch_state: DecodeState, slot) -> DecodeState:
+    """Slot ``slot`` of a batched state as a batch-1 ``DecodeState`` (the
+    inverse of :func:`decode_state_scatter`; eviction introspection, state
+    migration, and the paging round-trip tests)."""
+    kv = jax.tree.map(
+        lambda bkv: jax.lax.dynamic_slice_in_dim(bkv, slot, 1, axis=1),
+        batch_state.kv)
+    pos = (batch_state.pos if batch_state.pos.ndim == 0
+           else jax.lax.dynamic_index_in_dim(batch_state.pos, slot, axis=0,
+                                             keepdims=False))
+    return DecodeState(kv=kv, pos=pos)
+
+
 def _decode_entry(meta: PlanMeta):
     if meta.decode is None:
         raise ValueError(

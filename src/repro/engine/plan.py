@@ -237,6 +237,14 @@ class DecodeEntry:
             itemsize * s[0] * s[1] * s[2] * s[3] * s[4]
             for s in self.state_shapes(batch))
 
+    def max_slots(self, budget_bytes: int, itemsize: int = 4) -> int:
+        """Largest slot count whose batched ``DecodeState`` fits in
+        ``budget_bytes`` -- the capacity planning number of the continuous-
+        batching scheduler (state is per-slot linear: no context-length term,
+        so the answer is exact, not an estimate)."""
+        per_slot = self.state_bytes(1, itemsize)
+        return budget_bytes // per_slot if per_slot else 0
+
 
 @dataclass(frozen=True)
 class PlanMeta:

@@ -1,0 +1,311 @@
+"""Continuous-batching scheduler for incremental spiking-LM decode.
+
+The PR-5 decode mode made a decode step cheap and its carried state tiny --
+one O(d^2)-per-head K^T V accumulator per layer, constant in context length
+-- so the binding constraint on serving throughput is no longer compute per
+token but SCHEDULING: the legacy slot loop (``launch.serve``) admits nothing
+until its slowest batch member finishes, leaving freed slots idle for the
+whole tail of every batch.
+
+This module closes that gap with the standard continuous-batching shape
+(vLLM-style), built directly on the engine's decode entry points:
+
+* **Admission queue + backpressure** (:class:`AdmissionQueue`): a bounded
+  pending queue in front of the slots.  ``submit`` refuses work when the
+  bound is hit; the policy string records whether refused work is DROPPED
+  (``"reject"`` -- the open-loop load generator counts it against the
+  service) or RETRIED by the caller (``"defer"``).
+* **Per-slot state paging**: a newly admitted prompt is prefilled at its own
+  length bucket (batch 1, padded to the mesh's data degree), and its decode
+  state is scattered into the freed slot of the ONE live batched
+  ``DecodeState`` (``engine.decode_state_scatter`` -- a
+  ``dynamic_update_index_in_dim`` per kv plane, layout-preserving under a
+  head-sharded mesh).
+* **Ragged completion / eviction**: every slot tracks its own ``max_new`` and
+  optional EOS; finished sequences retire mid-flight and their slots refill
+  on the next tick instead of dragging the batch.
+
+Shape discipline is the point: the decode step always runs the full
+``slots``-wide batch, so there is ONE warm step shape per slot count, plus
+one warm prefill shape per distinct prompt-length bucket -- however the
+admission order interleaves.  Greedy outputs are bit-exact per request vs
+the synchronous-slots path (and the single-stream loop): batch rows are
+independent through every engine op, which ``tests/test_serving.py`` locks
+down.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine
+
+
+def greedy(logits) -> jax.Array:
+    """The serving sampler: argmax over the vocab axis (matches
+    ``launch.serve.greedy_sample`` -- the bit-exactness contract compares
+    token ids, so both paths must sample identically)."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+@dataclass
+class Request:
+    """One decode request plus its service-time record.
+
+    ``arrival_s`` is the open-loop arrival offset (seconds from the run
+    start) the load generator stamps; the scheduler fills the rest:
+    ``first_token_s`` is when the prefill's greedy token was ready (TTFT =
+    ``first_token_s - arrival_s``) and ``finish_s`` when the last token was.
+    """
+
+    rid: int
+    prompt: np.ndarray                    # (S,) int32 prompt tokens
+    max_new: int = 16
+    eos_id: int | None = None
+    arrival_s: float = 0.0
+    # filled in by the scheduler:
+    tokens: list[int] = field(default_factory=list)
+    admit_s: float | None = None
+    first_token_s: float | None = None
+    finish_s: float | None = None
+    rejected: bool = False
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.shape(self.prompt)[0])
+
+    @property
+    def done(self) -> bool:
+        if len(self.tokens) >= self.max_new:
+            return True
+        return (self.eos_id is not None and len(self.tokens) > 0
+                and self.tokens[-1] == self.eos_id)
+
+
+class AdmissionQueue:
+    """Bounded FIFO in front of the slots: the service's backpressure point.
+
+    ``submit`` returns False once ``max_pending`` requests wait (the caller
+    drops or retries per ``policy``); the high-water mark and refusal count
+    are the load generator's backpressure telemetry."""
+
+    def __init__(self, max_pending: int = 64, policy: str = "reject"):
+        if max_pending < 1:
+            raise ValueError(f"max_pending must be >= 1, got {max_pending}")
+        if policy not in ("reject", "defer"):
+            raise ValueError(f"unknown admission policy: {policy!r}")
+        self.max_pending = max_pending
+        self.policy = policy
+        self._q: deque[Request] = deque()
+        self.submitted = 0
+        self.refused = 0
+        self.high_water = 0
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def submit(self, req: Request) -> bool:
+        if len(self._q) >= self.max_pending:
+            self.refused += 1
+            return False
+        self._q.append(req)
+        self.submitted += 1
+        self.high_water = max(self.high_water, len(self._q))
+        return True
+
+    def pop(self) -> Request:
+        return self._q.popleft()
+
+
+class ContinuousScheduler:
+    """Continuous-batching decode service over one compiled LM deploy plan.
+
+    The device-side story is three jitted functions and one resident pytree:
+    ``prefill`` (one warm shape per prompt-length bucket), ``decode_step``
+    (ONE warm shape: the full slot batch), and the ``decode_state_scatter``
+    admission paging -- all operating on the single batched ``DecodeState``
+    that lives for the whole service.  Everything else is host bookkeeping.
+    """
+
+    def __init__(self, plan, *, slots: int = 4, max_pending: int = 64,
+                 admission: str = "reject", clock=time.perf_counter):
+        meta = plan.meta
+        if meta.decode is None:
+            raise ValueError(
+                "continuous batching is an LM-plan mode (needs the "
+                f"incremental decode entry); family={meta.family!r}")
+        self.plan = plan
+        self.data_par = 1
+        if meta.sharding is not None:
+            mesh = meta.sharding.build_mesh()
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            self.data_par = sizes.get(meta.sharding.data_axis, 1)
+        if slots < 1 or slots % self.data_par:
+            raise ValueError(
+                f"slots={slots} must be a positive multiple of the mesh data "
+                f"degree {self.data_par} (the step batch shards over it)")
+        self.slots = slots
+        self.queue = AdmissionQueue(max_pending, admission)
+        self._clock = clock
+        self._prefill = jax.jit(engine.make_prefill_fn(plan))
+        self._step = jax.jit(engine.make_decode_step_fn(plan))
+        self._scatter = jax.jit(engine.decode_state_scatter)
+        self.state = engine.decode_state_batch_init(meta, slots)
+        self._tok = np.zeros((slots,), np.int32)      # next feed per slot
+        self._active: list[Request | None] = [None] * slots
+        self._free: deque[int] = deque(range(slots))
+        self.completed: list[Request] = []
+        self.rejected: list[Request] = []
+        # telemetry
+        self.steps = 0
+        self.admitted = 0
+        self.active_slot_steps = 0                    # occupancy numerator
+        self.prefill_s = 0.0
+        self.decode_s = 0.0
+
+    # -- shape warming --------------------------------------------------------
+
+    def warm(self, prompt_lens) -> int:
+        """Trace-warm every shape serving will touch: one prefill + scatter
+        shape per DISTINCT prompt-length bucket, one step shape for the slot
+        batch.  Returns the number of prefill shapes warmed (ragged lengths
+        that bucket identically warm once)."""
+        meta = self.plan.meta
+        warmed = 0
+        for s in sorted({int(s) for s in prompt_lens}):
+            tokens = jnp.zeros((self.data_par, s), jnp.int32)
+            logits, st = self._prefill(self.plan.params, tokens)
+            scratch = engine.decode_state_batch_init(meta, self.slots)
+            jax.block_until_ready(self._scatter(scratch, 0, st, 0).pos)
+            warmed += 1
+        jax.block_until_ready(self._step(
+            self.plan.params, self.state, jnp.asarray(self._tok))[0])
+        return warmed
+
+    # -- admission ------------------------------------------------------------
+
+    @property
+    def num_active(self) -> int:
+        return self.slots - len(self._free)
+
+    def submit(self, req: Request) -> bool:
+        """Offer a request to the admission queue (backpressure applies)."""
+        ok = self.queue.submit(req)
+        if not ok and self.queue.policy == "reject":
+            req.rejected = True
+            self.rejected.append(req)
+        return ok
+
+    def _pad_prompt_batch(self, prompt: np.ndarray) -> jax.Array:
+        """(S,) prompt -> (data_par, S) prefill batch (rows past the first
+        are dead weight the data axis requires; only row 0 is paged in)."""
+        seq = jnp.asarray(prompt, jnp.int32)[None]
+        if self.data_par > 1:
+            seq = jnp.repeat(seq, self.data_par, axis=0)
+        return seq
+
+    def _admit_one(self, req: Request, now: float) -> None:
+        t0 = self._clock()
+        logits, st = self._prefill(self.plan.params,
+                                   self._pad_prompt_batch(req.prompt))
+        tok0 = int(jax.block_until_ready(greedy(logits[:, -1]))[0])
+        self.prefill_s += self._clock() - t0
+        self.admitted += 1
+        req.admit_s = now
+        req.first_token_s = now + (self._clock() - t0)
+        req.tokens.append(tok0)
+        if req.done:                       # max_new == 1 (or instant EOS):
+            req.finish_s = req.first_token_s   # never occupies a slot
+            self.completed.append(req)
+            return
+        slot = self._free.popleft()
+        self.state = self._scatter(self.state, slot, st, 0)
+        self._tok[slot] = tok0
+        self._active[slot] = req
+
+    def _admit(self, now: float) -> None:
+        while self._free and len(self.queue):
+            self._admit_one(self.queue.pop(), now)
+
+    # -- decode ---------------------------------------------------------------
+
+    def _decode_tick(self, now: float) -> None:
+        """One batched decode step + harvest: every ACTIVE slot appends its
+        greedy token; finished requests retire and free their slot (ragged
+        eviction -- the batch keeps stepping without them)."""
+        t0 = self._clock()
+        logits, self.state = self._step(self.plan.params, self.state,
+                                        jnp.asarray(self._tok))
+        nxt = np.asarray(jax.block_until_ready(greedy(logits)))
+        dt = self._clock() - t0
+        self.decode_s += dt
+        self.steps += 1
+        self.active_slot_steps += self.num_active
+        for slot, req in enumerate(self._active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.tokens.append(tok)
+            self._tok[slot] = tok
+            if req.done:
+                req.finish_s = now + dt
+                self._active[slot] = None
+                self._free.append(slot)
+                self.completed.append(req)
+
+    # -- service loop ---------------------------------------------------------
+
+    def run(self, requests=(), *, open_loop: bool = False) -> list[Request]:
+        """Serve ``requests`` to completion (plus anything already pending).
+
+        Closed loop (default): every request is available immediately, in
+        iteration order.  ``open_loop=True`` honours each request's
+        ``arrival_s`` against the wall clock -- the Poisson load-generator
+        mode -- so admission, backpressure, and eviction interleave exactly
+        as live traffic would drive them.  Returns the completed requests
+        (rejected ones accumulate on ``self.rejected``)."""
+        arrivals = deque(sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
+        t0 = self._clock()
+        while arrivals or len(self.queue) or self.num_active:
+            now = self._clock() - t0
+            while arrivals and (not open_loop
+                                or arrivals[0].arrival_s <= now):
+                req = arrivals[0]
+                if self.submit(req):
+                    arrivals.popleft()
+                elif self.queue.policy == "reject":
+                    arrivals.popleft()        # dropped: counted on .rejected
+                else:
+                    break                     # defer: retry after the tick
+            self._admit(now)
+            if self.num_active:
+                self._decode_tick(self._clock() - t0)
+            elif arrivals and open_loop and not len(self.queue):
+                wait = arrivals[0].arrival_s - (self._clock() - t0)
+                if wait > 0:
+                    time.sleep(min(wait, 1e-3))
+        return self.completed
+
+    def stats(self) -> dict:
+        """Service telemetry: the numbers the ``@serve`` bench rows record."""
+        denom = self.steps * self.slots
+        return {
+            "slots": self.slots,
+            "steps": self.steps,
+            "admitted": self.admitted,
+            "completed": len(self.completed),
+            "rejected": len(self.rejected),
+            "queue_refused": self.queue.refused,
+            "queue_high_water": self.queue.high_water,
+            "slot_occupancy": (self.active_slot_steps / denom
+                               if denom else 0.0),
+            "prefill_s": self.prefill_s,
+            "decode_s": self.decode_s,
+            "new_tokens": sum(len(r.tokens) for r in self.completed),
+        }

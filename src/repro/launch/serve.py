@@ -1,8 +1,13 @@
-"""Batched serving launcher: continuous-batching decode loop.
+"""Batched serving launcher: synchronous slots and continuous batching.
 
-Prefill incoming requests (batched), then decode with a shared step function;
-finished sequences are retired and their slots refilled -- the standard
-continuous-batching pattern (vLLM-style, simplified to synchronous slots).
+The legacy loops (``serve``, ``serve_vision``, ``serve_spiking_lm``) run
+SYNCHRONOUS slots: prefill a batch, decode it to completion, admit the next
+batch.  ``--continuous`` (``serve_spiking_lm_continuous``) upgrades the
+spiking-LM path to true continuous batching via ``launch.scheduler``:
+admission queue + backpressure, per-slot ``DecodeState`` paging into one live
+batched state, and ragged completion/eviction -- finished sequences retire
+mid-flight and freed slots refill immediately, with greedy outputs bit-exact
+per request vs the synchronous path (scheduling is the only difference).
 
 Vision serving goes through the deploy engine: ``--vision`` compiles the
 Spike-(IAND-)Former into a folded/fused deploy plan (``repro.engine``) once at
@@ -114,8 +119,18 @@ def _warm_sizes(slots: int, num_requests: int) -> set[int]:
     return sizes
 
 
+def _warm_padded_sizes(slots: int, num_requests: int,
+                       data_par: int = 1) -> set[int]:
+    """The POST-padding warm shapes: what actually traces.  Two ragged sizes
+    that collapse to the same padded batch (e.g. {4, 3} at data_par=2 -> both
+    4) must warm ONCE -- deduping pre-padding sizes and then padding each
+    defeats the set semantics and trace-warms the shared shape twice."""
+    return {b + ((-b) % data_par) for b in _warm_sizes(slots, num_requests)}
+
+
 def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
-          slots: int = 4, seed: int = 0, verbose: bool = True):
+          slots: int = 4, seed: int = 0, verbose: bool = True,
+          return_stats: bool = False):
     cfg = lm.get_config(arch)
     assert cfg.modality == "text", "serving demo targets text archs"
     params = T.init_lm(jax.random.PRNGKey(seed), cfg)
@@ -131,7 +146,11 @@ def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
             params, T.cache_init(cfg, b, cap),
             {"token": jnp.zeros((b, 1), jnp.int32)}, jnp.asarray(0))[0])
 
-    done, t0 = [], time.perf_counter()
+    # prompt feed and generation are timed SEPARATELY: the prompt-feed loop
+    # runs prompt_len extra serve_step calls per batch, so folding it into
+    # one wall-clock interval understates decode throughput by the factor
+    # prompt_len/max_new (the old single-dt report did exactly that)
+    done, prefill_s, decode_s = [], 0.0, 0.0
     for start in range(0, num_requests, slots):
         batch_prompts = jnp.asarray(prompts[start : start + slots])
         b = batch_prompts.shape[0]
@@ -139,10 +158,14 @@ def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
         # feed the prompt through serve_step to fill the decode cache (one
         # code path for prompt and generation; production would run a batched
         # prefill and reshard its cache instead)
+        t0 = time.perf_counter()
         for t in range(prompt_len):
             logits, cache = serve_step(
                 params, cache, {"token": batch_prompts[:, t : t + 1]},
                 jnp.asarray(t))
+        jax.block_until_ready(logits)
+        t1 = time.perf_counter()
+        prefill_s += t1 - t0
         tok = greedy_sample(logits[:, -1])
         outs = [tok]
         for i in range(max_new - 1):
@@ -151,17 +174,31 @@ def serve(arch: str, *, num_requests: int, prompt_len: int, max_new: int,
                 jnp.asarray(prompt_len + i))
             tok = greedy_sample(logits[:, -1])
             outs.append(tok)
-        gen = jnp.stack(outs, axis=1)
+        gen = jax.block_until_ready(jnp.stack(outs, axis=1))
+        decode_s += time.perf_counter() - t1
         for j in range(b):
             done.append((start + j, np.asarray(gen[j])))
         if verbose:
             print(f"[serve] slot batch {start//slots}: generated "
                   f"{b}x{max_new} tokens")
-    dt = time.perf_counter() - t0
     tot = num_requests * max_new
+    fed = num_requests * prompt_len
+    stats = {
+        "prefill_s": prefill_s,
+        "decode_s": decode_s,
+        "prompt_tokens": fed,
+        "new_tokens": tot,
+        "prefill_tokens_per_s": fed / prefill_s if prefill_s else float("inf"),
+        "decode_tokens_per_s": tot / decode_s if decode_s else float("inf"),
+    }
     if verbose:
-        print(f"[serve] {num_requests} requests, {tot} new tokens in {dt:.2f}s "
-              f"({tot/dt:.1f} tok/s on CPU)")
+        print(f"[serve] {num_requests} requests on CPU: prefill {fed} prompt "
+              f"tokens in {prefill_s:.2f}s "
+              f"({stats['prefill_tokens_per_s']:.1f} tok/s), decode {tot} new "
+              f"tokens in {decode_s:.2f}s "
+              f"({stats['decode_tokens_per_s']:.1f} tok/s)")
+    if return_stats:
+        return done, stats
     return done
 
 
@@ -196,9 +233,10 @@ def serve_vision(arch: str, *, num_requests: int, slots: int = 4,
         (num_requests, cfg.img_size, cfg.img_size, cfg.in_channels))
 
     # warm so the reported throughput is steady-state inference, not
-    # trace+compile time (warm the PADDED shapes -- those are what runs)
-    for b in _warm_sizes(slots, num_requests):
-        warm, _ = _pad_batch(imgs[:b], data_par)
+    # trace+compile time (warm the PADDED shapes -- those are what runs, and
+    # ragged sizes that pad to the same shape warm once)
+    for bp in sorted(_warm_padded_sizes(slots, num_requests, data_par)):
+        warm, _ = _pad_batch(imgs[:min(bp, num_requests)], data_par)
         jax.block_until_ready(step(plan.params, warm))
 
     done, t0 = [], time.perf_counter()
@@ -234,6 +272,26 @@ def spiking_lm_config(arch: str):
     return cfg.replace(spiking=True, spike_t=4, num_heads=4, head_dim=None)
 
 
+def _compile_lm_serving(arch: str, *, backend, ordering, mesh, slots, seed,
+                        verbose):
+    """Shared setup of both spiking-LM serving modes: elastic mesh
+    resolution, config adaptation, param init, and the ONE plan compile --
+    returns (cfg, plan, data_par, resolved_slots)."""
+    from repro import engine
+    from repro.models import spiking_lm as slm
+
+    mesh = parse_mesh(mesh)
+    data_par = 1
+    if mesh is not None:
+        mesh, slots = _elastic_mesh(mesh, slots, verbose=verbose)
+        data_par = mesh[0]
+    cfg = spiking_lm_config(arch)
+    params = slm.init_spiking_lm(jax.random.PRNGKey(seed), cfg)
+    plan = engine.compile_plan(params, None, cfg, backend=backend,
+                               ordering=ordering, mesh=mesh)
+    return cfg, plan, data_par, slots
+
+
 def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
                      max_new: int, slots: int = 4, backend: str = "jnp",
                      ordering: str = "quadratic", mesh=None, seed: int = 0,
@@ -252,17 +310,10 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
     equals the per-token cost at 8.
     """
     from repro import engine
-    from repro.models import spiking_lm as slm
 
-    mesh = parse_mesh(mesh)
-    data_par = 1
-    if mesh is not None:
-        mesh, slots = _elastic_mesh(mesh, slots, verbose=verbose)
-        data_par = mesh[0]
-    cfg = spiking_lm_config(arch)
-    params = slm.init_spiking_lm(jax.random.PRNGKey(seed), cfg)
-    plan = engine.compile_plan(params, None, cfg, backend=backend,
-                               ordering=ordering, mesh=mesh)
+    cfg, plan, data_par, slots = _compile_lm_serving(
+        arch, backend=backend, ordering=ordering, mesh=mesh, slots=slots,
+        seed=seed, verbose=verbose)
     prefill = jax.jit(engine.make_prefill_fn(plan))
     step = jax.jit(engine.make_decode_step_fn(plan))
 
@@ -272,10 +323,10 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
 
     # warm ONE (batch, prompt_len) prefill shape and ONE step shape per slot
     # batch size (plus the ragged final batch; padded to the data-parallel
-    # degree) -- the step shape serves every subsequent token, however long
-    # the decode runs
-    for b in _warm_sizes(slots, num_requests):
-        bp = b + ((-b) % data_par)
+    # degree, POST-padding deduped -- ragged sizes that collapse to the same
+    # padded shape warm once) -- the step shape serves every subsequent
+    # token, however long the decode runs
+    for bp in sorted(_warm_padded_sizes(slots, num_requests, data_par)):
         logits, st = prefill(plan.params,
                              jnp.zeros((bp, prompt_len), jnp.int32))
         jax.block_until_ready(
@@ -302,8 +353,7 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
     tot = num_requests * max_new
     if verbose:
         stats = engine.plan_stats(plan)
-        where = (f"{mesh[0]}x{mesh[1]} mesh" if mesh is not None
-                 else jax.default_backend())
+        where = _plan_where(plan)
         print(f"[serve] {num_requests} requests, {tot} new tokens in {dt:.2f}s "
               f"({tot/dt:.1f} tok/s on {where}; LM plan: "
               f"{stats['folded_linear_rmsnorm']} folded Linear+RMSNorm units, "
@@ -314,6 +364,98 @@ def serve_spiking_lm(arch: str, *, num_requests: int, prompt_len: int,
               f"{' + occupancy skip' if stats['sparse'] else ''}; "
               f"prefill+step decode, {stats['decode_state_bytes']} B "
               f"state/seq, flat in context)")
+    return done
+
+
+def _plan_where(plan) -> str:
+    """Human-readable execution locus of a plan for the serve reports."""
+    scfg = plan.meta.sharding
+    if scfg is not None:
+        return f"{scfg.data}x{scfg.model} mesh"
+    return jax.default_backend()
+
+
+def serving_requests(prompts, *, prompt_lens, max_new, max_new_spread: int = 0,
+                     eos_id: int | None = None):
+    """Request list for continuous serving from a (N, S_max) prompt batch:
+    request ``i`` takes the first ``prompt_lens[i % len(prompt_lens)]`` tokens
+    of row ``i`` (mixed length buckets) and decodes
+    ``max_new - (i % (max_new_spread + 1))`` tokens (ragged completion --
+    spread 0 is uniform).  Deterministic, so the bit-exactness tests can
+    rebuild the exact same workload for the reference paths."""
+    from repro.launch.scheduler import Request
+
+    prompts = np.asarray(prompts)
+    lens = [int(s) for s in prompt_lens]
+    reqs = []
+    for i in range(prompts.shape[0]):
+        s = lens[i % len(lens)]
+        reqs.append(Request(
+            rid=i, prompt=prompts[i, :s].astype(np.int32),
+            max_new=max(1, max_new - (i % (max_new_spread + 1))),
+            eos_id=eos_id))
+    return reqs
+
+
+def serve_spiking_lm_continuous(arch: str, *, num_requests: int,
+                                prompt_len: int, max_new: int, slots: int = 4,
+                                backend: str = "jnp",
+                                ordering: str = "quadratic", mesh=None,
+                                seed: int = 0, prompt_lens=None,
+                                max_new_spread: int = 0,
+                                max_pending: int | None = None,
+                                verbose: bool = True,
+                                return_stats: bool = False):
+    """Serve a spiking LM with CONTINUOUS batching (greedy decode).
+
+    Same plan, same prompts, same sampler as :func:`serve_spiking_lm` -- the
+    difference is purely scheduling: a ``launch.scheduler``
+    ``ContinuousScheduler`` pages each admitted prompt's ``DecodeState`` into
+    a freed slot of one live batched state and retires finished sequences
+    mid-flight, so the decode step keeps ONE warm shape (the full slot batch)
+    and freed capacity never idles behind a slow batch member.  Greedy
+    outputs are bit-exact per request vs the synchronous-slots path.
+
+    ``prompt_lens`` (defaults to ``[prompt_len]``) cycles mixed prompt-length
+    buckets across requests; ``max_new_spread`` staggers per-request decode
+    lengths to force ragged completion.
+    """
+    from repro import engine
+    from repro.launch.scheduler import ContinuousScheduler
+
+    cfg, plan, data_par, slots = _compile_lm_serving(
+        arch, backend=backend, ordering=ordering, mesh=mesh, slots=slots,
+        seed=seed, verbose=verbose)
+    lens = sorted({int(s) for s in (prompt_lens or [prompt_len])})
+    dcfg = DataConfig(seed=seed, vocab_size=cfg.vocab_size, seq_len=max(lens),
+                      global_batch=num_requests)
+    prompts = make_batch(dcfg, 0)["tokens"]
+    reqs = serving_requests(prompts, prompt_lens=lens, max_new=max_new,
+                            max_new_spread=max_new_spread)
+
+    sched = ContinuousScheduler(
+        plan, slots=slots,
+        max_pending=max_pending if max_pending is not None
+        else max(num_requests, 1))
+    warmed = sched.warm(lens)
+    t0 = time.perf_counter()
+    completed = sched.run(reqs)
+    dt = time.perf_counter() - t0
+    done = [(r.rid, np.asarray(r.tokens, np.int32)) for r in completed]
+    sstats = sched.stats()
+    sstats.update(wall_s=dt, warm_prefill_shapes=warmed, warm_step_shapes=1)
+    if verbose:
+        stats = engine.plan_stats(plan)
+        print(f"[serve] continuous: {len(completed)}/{num_requests} requests, "
+              f"{sstats['new_tokens']} new tokens in {dt:.2f}s "
+              f"({sstats['new_tokens']/dt:.1f} tok/s on {_plan_where(plan)}; "
+              f"{sstats['steps']} steps at {slots} slots, occupancy "
+              f"{sstats['slot_occupancy']:.2f}, queue high-water "
+              f"{sstats['queue_high_water']}, {warmed} prefill shape(s) + 1 "
+              f"step shape; backend={stats['backend']}, "
+              f"ordering={stats['attn_ordering']})")
+    if return_stats:
+        return done, sstats
     return done
 
 
@@ -329,6 +471,21 @@ def main():
     ap.add_argument("--spiking-lm", action="store_true",
                     help="greedy-decode a spiking LM from a compiled deploy "
                          "plan (RMSNorm folded, backend-dispatched causal SSA)")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous-batching decode service (spiking-lm "
+                         "mode): admission queue + backpressure, per-slot "
+                         "DecodeState paging, ragged completion/eviction -- "
+                         "one warm step shape per slot count")
+    ap.add_argument("--prompt-lens", default=None, metavar="L1,L2,...",
+                    help="mixed prompt-length buckets for --continuous "
+                         "(cycled across requests; default: --prompt-len)")
+    ap.add_argument("--max-new-spread", type=int, default=0,
+                    help="stagger per-request decode lengths by up to this "
+                         "many tokens (--continuous: forces ragged "
+                         "completion/eviction)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission-queue bound for --continuous "
+                         "(backpressure; default: no practical bound)")
     ap.add_argument("--backend", default="jnp",
                     choices=("jnp", "pallas", "jnp+packed", "pallas+packed",
                              "jnp+packed+sparse", "pallas+packed+sparse"),
@@ -352,6 +509,17 @@ def main():
                      backend=args.backend, mesh=args.mesh)
         return
     if args.spiking_lm:
+        if args.continuous:
+            lens = ([int(s) for s in args.prompt_lens.split(",")]
+                    if args.prompt_lens else None)
+            serve_spiking_lm_continuous(
+                args.arch, num_requests=args.requests,
+                prompt_len=args.prompt_len, max_new=args.max_new,
+                slots=args.slots, backend=args.backend,
+                ordering=args.ordering, mesh=args.mesh, prompt_lens=lens,
+                max_new_spread=args.max_new_spread,
+                max_pending=args.max_pending)
+            return
         serve_spiking_lm(args.arch, num_requests=args.requests,
                          prompt_len=args.prompt_len, max_new=args.max_new,
                          slots=args.slots, backend=args.backend,

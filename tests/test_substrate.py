@@ -177,6 +177,36 @@ def test_elastic_remesh_plan():
     assert p.action == "abort"
 
 
+def test_elastic_remesh_plan_non_power_of_two():
+    """Regression: the old repeated-halving search only visited data/2^k, so
+    a non-power-of-two data degree could land on a NON-divisor (data=5 with
+    room for 2 -> new_data=2, which does not divide 5 and breaks the
+    per-replica batch split).  The search must return actual divisors."""
+    # data=5, model=1, 3 devices left: divisors of 5 that fit are {1} (5 > 3);
+    # halving would have proposed 2
+    p = plan_remesh((5, 1), 3, 40)
+    assert p.action == "remesh" and p.new_shape == (1, 1)
+    assert 5 % p.new_shape[0] == 0 and p.new_global_batch == 8
+    # data=6, model=2, 9 devices left: largest divisor d of 6 with 2d <= 9 is
+    # 3 (halving from 6 would also hit 3 -- but from 10 it would not)
+    p = plan_remesh((6, 2), 9, 60)
+    assert p.action == "remesh" and p.new_shape == (3, 2)
+    assert p.new_global_batch == 30
+    # data=10, model=1, 7 devices left: divisors {1, 2, 5} -> 5; halving
+    # visited only {5} here but {10 -> 5 -> 2 -> 1} misses nothing; the
+    # sharper case: data=9, 7 left -> 3 (halving 9 -> 4, a non-divisor)
+    p = plan_remesh((9, 1), 7, 90)
+    assert p.action == "remesh" and p.new_shape == (3, 1)
+    assert 9 % p.new_shape[0] == 0 and p.new_global_batch == 30
+    # every remesh result must divide the old data degree exactly
+    for data in (3, 5, 6, 7, 9, 12):
+        for left in range(1, data):
+            p = plan_remesh((data, 1), left, data * 4)
+            assert p.action == "remesh", (data, left)
+            assert data % p.new_shape[0] == 0, (data, left, p.new_shape)
+            assert p.new_shape[0] <= left
+
+
 # -- sharding rules -----------------------------------------------------------
 
 def test_rules_and_specs():
