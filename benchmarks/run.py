@@ -137,6 +137,12 @@ def write_bench_json(engine_result, packed_result, lm_result=None,
             "packed_reduction_ssa_dense": lm["reduction_ssa_dense"],
             "packed_reduction_ssa_open": lm["reduction_ssa_open"],
         }
+        # chunked resumable prefill (lm_plan.measured_chunked_prefill):
+        # bit-exact C-token steps through the DecodeState carry, resident
+        # bytes flat in the prompt length -- the @S500k-chunked rows
+        from benchmarks import lm_plan
+
+        configs.update(lm_plan.bench_configs(lm_result))
     if sparsity_result is not None:
         # sparsity rows (benchmarks/sparsity.py): measured occupancy skip
         # rates + bare decode-step tokens/s on the trained-fixture checkpoint

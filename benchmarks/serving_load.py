@@ -50,6 +50,12 @@ PROMPT_LENS = (4, 8, 12)         # mixed length buckets (one warm shape each)
 MAX_NEW_RANGE = (4, 24)          # ragged decode lengths force mid-flight
 MAX_PENDING = 2 * NUM_REQUESTS   # eviction in every discipline
 
+# chunked-admission stall bench (the @S500k-chunked-serve row): long prompts
+# admitted one C-token chunk per scheduler tick between decode steps
+PREFILL_CHUNK = 16
+LONG_PROMPT_LEN = 96             # 6 chunks -- the one-shot stall to beat
+CHUNKED_REQUESTS = 8             # alternating long/short, deterministic
+
 
 def poisson_requests(n: int, *, rate_rps: float, prompt_lens, max_new_range,
                      vocab: int, seed: int = 0):
@@ -212,19 +218,75 @@ def run_single_stream(plan, reqs) -> dict:
     return _metrics(completed, time.perf_counter() - t0)
 
 
+def run_chunked_stall(plan) -> dict:
+    """Decode-stall bound of decode-interleaved chunked admission -- the
+    ``@S500k-chunked-serve`` row.
+
+    The same deterministic trace (long prompts alternating with short ones,
+    closed loop) is drained twice through ``ContinuousScheduler``: one-shot
+    admission, then ``prefill_chunk=PREFILL_CHUNK``.  The token streams must
+    be bit-identical (chunked prefill is exact, not an approximation); the
+    per-tick admission device time (``sched.stall_s`` -- what a decode tick
+    waits behind) is summarised at p99, and the chunked p99 must come in
+    UNDER the one-shot p99: a long prompt no longer stalls decode for its
+    full length, only for one chunk."""
+    from repro.launch.scheduler import ContinuousScheduler, Request
+
+    rng = np.random.default_rng(7)
+    reqs = []
+    for i in range(CHUNKED_REQUESTS):
+        s = LONG_PROMPT_LEN if i % 2 == 0 else PROMPT_LENS[0]
+        reqs.append(Request(
+            rid=i, prompt=rng.integers(0, 256, size=(s,), dtype=np.int32),
+            max_new=8, arrival_s=0.0))
+
+    def drain(chunk):
+        sched = ContinuousScheduler(plan, slots=SLOTS,
+                                    max_pending=2 * CHUNKED_REQUESTS,
+                                    prefill_chunk=chunk)
+        sched.warm(sorted({r.prompt_len for r in reqs}))
+        done = sched.run(_fresh(reqs))
+        return {r.rid: list(r.tokens) for r in done}, sched
+
+    oneshot_tokens, oneshot = drain(None)
+    chunked_tokens, chunked = drain(PREFILL_CHUNK)
+    assert chunked_tokens == oneshot_tokens          # bit-exact, per request
+    p99_one = _percentile(oneshot.stall_s, 99)
+    p99_chunked = _percentile(chunked.stall_s, 99)
+    reduction = p99_one / p99_chunked if p99_chunked else float("inf")
+    return {
+        "config": f"{CONFIG}@S500k-chunked-serve",
+        "t": plan.meta.cfg.arch.spike_t,
+        "slots": SLOTS,
+        "prefill_chunk": PREFILL_CHUNK,
+        "long_prompt_len": LONG_PROMPT_LEN,
+        "requests": CHUNKED_REQUESTS,
+        "prefill_chunks": chunked.prefill_chunks,
+        "stall_p99_s_oneshot": p99_one,
+        "stall_p99_s_chunked": p99_chunked,
+        "stall_reduction": reduction,
+        "bit_exact": True,
+    }
+
+
 def bench_configs(result) -> dict:
-    """``@serve`` row dict for BENCH_engine.json (shared by run.py and the
-    standalone in-place merge)."""
-    return {f"{row['config']}@serve-T{row['t']}":
-            {k: v for k, v in row.items() if k != "config"}
-            for row in result["rows"]}
+    """``@serve`` + ``@S500k-chunked-serve`` row dicts for BENCH_engine.json
+    (shared by run.py and the standalone in-place merge)."""
+    configs = {f"{row['config']}@serve-T{row['t']}":
+               {k: v for k, v in row.items() if k != "config"}
+               for row in result["rows"]}
+    for row in result.get("chunked_rows", ()):
+        configs[row["config"]] = {k: v for k, v in row.items()
+                                  if k != "config"}
+    return configs
 
 
 def merge_bench_json(result, path: pathlib.Path = BENCH_JSON) -> None:
     data = json.loads(path.read_text()) if path.exists() else {"configs": {}}
-    data["configs"].update(bench_configs(result))
+    rows = bench_configs(result)
+    data["configs"].update(rows)
     path.write_text(json.dumps(data, indent=2) + "\n")
-    print(f"merged {len(result['rows'])} @serve row(s) into {path}")
+    print(f"merged {len(rows)} serving row(s) into {path}")
 
 
 def main() -> dict:
@@ -281,7 +343,15 @@ def main() -> dict:
         "continuous_over_sync": over_sync,
         "continuous_over_single": over_single,
     }
-    return {"rows": [row]}
+
+    crow = run_chunked_stall(plan)
+    print(f"  chunked admission (C={crow['prefill_chunk']}, long prompt "
+          f"{crow['long_prompt_len']}): stall p99 "
+          f"{crow['stall_p99_s_oneshot']*1e3:.2f} ms one-shot -> "
+          f"{crow['stall_p99_s_chunked']*1e3:.2f} ms chunked "
+          f"({crow['stall_reduction']:.2f}x, {crow['prefill_chunks']} chunk "
+          f"steps, token streams bit-identical)")
+    return {"rows": [row], "chunked_rows": [crow]}
 
 
 if __name__ == "__main__":

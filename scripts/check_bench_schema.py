@@ -3,8 +3,10 @@
 ``BENCH_engine.json`` must match the keys ``README.md`` documents.
 
 Covers the sparse rows (``@sparse-T``, written by ``benchmarks/sparsity.py``),
-the mesh rows (``@mesh``, written by ``benchmarks/sharded_traffic.py``), and
-the serving rows (``@serve``, written by ``benchmarks/serving_load.py``).
+the mesh rows (``@mesh``, written by ``benchmarks/sharded_traffic.py``), the
+serving rows (``@serve``, written by ``benchmarks/serving_load.py``), and the
+chunked-prefill rows (``@S500k-chunked``, written by ``benchmarks/lm_plan.py``
+and ``benchmarks/serving_load.py``).
 Three-way check per block, no JAX needed (CI-cheap):
 
   1. README documents exactly the keys the committed ``BENCH_engine.json``
@@ -30,6 +32,8 @@ BLOCKS = {
     "bench-sparse-schema": ("@sparse-T", ["sparsity.py"]),
     "bench-sharded-schema": ("@mesh", ["sharded_traffic.py"]),
     "bench-serve-schema": ("@serve", ["serving_load.py"]),
+    "bench-chunked-schema": ("@S500k-chunked", ["lm_plan.py",
+                                               "serving_load.py"]),
 }
 
 

@@ -29,11 +29,17 @@ import jax
 import jax.numpy as jnp
 
 
-def _causal_linear(q, k, v, *, chunk: int):
+def _causal_linear(q, k, v, *, chunk: int, state=None):
     """Chunked running-state causal linear ordering: O(S d^2), exactly equal
     to the masked quadratic product (no softmax, so chunking is exact).
     Returns ``(out, final_state)`` -- the scan's carry after the last chunk
     IS the end-of-prefix K^T V decode state, so prefill gets it for free.
+
+    ``state`` seeds the scan's carry with an EARLIER prefix's K^T V state
+    (default: zeros, a fresh sequence) -- integer arithmetic on binary
+    spikes makes resuming bit-identical to scanning the whole prefix at
+    once, which is what lets long-prompt prefill run chunk by chunk with
+    memory flat in the prompt length.
 
     Ragged lengths are zero-padded up to the chunk multiple -- exact, not
     approximate: padded keys/values are all-zero spikes (their products
@@ -48,11 +54,11 @@ def _causal_linear(q, k, v, *, chunk: int):
         widths = [(0, 0)] * q.ndim
         widths[3] = (0, pad)
         q, k, v = (jnp.pad(x, widths) for x in (q, k, v))
-    out, state = _causal_linear_aligned(q, k, v, chunk=chunk)
+    out, state = _causal_linear_aligned(q, k, v, chunk=chunk, state0=state)
     return (out[:, :, :, :s] if pad else out), state
 
 
-def _causal_linear_aligned(q, k, v, *, chunk: int):
+def _causal_linear_aligned(q, k, v, *, chunk: int, state0=None):
     s = q.shape[3]
     nc = s // chunk
     qc = q.reshape(q.shape[:3] + (nc, chunk, q.shape[-1]))
@@ -70,7 +76,8 @@ def _causal_linear_aligned(q, k, v, *, chunk: int):
         return state, y
 
     dh = q.shape[-1]
-    state0 = jnp.zeros(q.shape[:3] + (dh, dh), q.dtype)
+    if state0 is None:
+        state0 = jnp.zeros(q.shape[:3] + (dh, dh), q.dtype)
     state, ys = jax.lax.scan(
         step, state0,
         (qc.transpose(3, 0, 1, 2, 4, 5), kc.transpose(3, 0, 1, 2, 4, 5),
@@ -79,14 +86,19 @@ def _causal_linear_aligned(q, k, v, *, chunk: int):
 
 
 def ssa_causal_linear_with_state(q, k, v, *, scale: float = 0.125,
-                                 chunk: int = 512):
+                                 chunk: int = 512, state=None):
     """Causal linear-ordering SSA that ALSO returns the end-of-prefix K^T V
     state: ``(drive, state)`` with ``drive == ssa(..., ordering="linear",
     causal=True)`` and ``state == ssa_kv_state(k, v)`` (bit-identical for
     binary spikes -- integer sums in any association).  The state is the
     causal scan's final carry, so a prefill pays NO second contraction over
-    the prefix for its decode state."""
-    out, state = _causal_linear(q, k, v, chunk=chunk)
+    the prefix for its decode state.
+
+    ``state`` resumes the scan from an earlier prefix's carry: feeding the
+    prompt in any chunking, each call seeded with the previous call's
+    returned state, produces per-chunk drives and a final state bit-equal
+    to one shot over the whole prompt."""
+    out, state = _causal_linear(q, k, v, chunk=chunk, state=state)
     return out * scale, state
 
 
@@ -237,9 +249,24 @@ def _pad_words_s(words, chunk: int):
     return words, s
 
 
+def ssa_state_read(state, q, *, scale: float = 0.125):
+    """Cross-prefix attention read: drive contributed by an EARLIER prefix's
+    K^T V ``state`` (..., Dh, Dh) to this chunk's queries (..., N, Dh).
+    Added to the intra-chunk causal drive, it completes the lower triangle
+    across a chunk boundary -- exactly, by integer arithmetic on binary
+    spikes -- which is what lets the quadratic ordering prefill resumably."""
+    return jnp.einsum("...nd,...de->...ne", q, state) * scale
+
+
+def ssa_state_read_packed(state, qw, *, t: int, scale: float = 0.125):
+    """Packed-operand :func:`ssa_state_read`: query words (W, ..., N, Dh)
+    consumed in-register (shift-and-mask bitplanes, no ``packing.unpack``)."""
+    return ssa_state_read(state, _bitplanes(qw, t), scale=scale)
+
+
 def ssa_causal_linear_with_state_packed(qw, kw, vw, *, t: int,
                                         scale: float = 0.125,
-                                        chunk: int = 512):
+                                        chunk: int = 512, state=None):
     """Packed-operand counterpart of :func:`ssa_causal_linear_with_state`:
     the chunked causal Q(K^T V) scan consuming uint32 bitplane words
     (W, B, H, S, Dh) directly -> ``(drive (T, B, H, S, Dh), state)``.
@@ -275,7 +302,9 @@ def ssa_causal_linear_with_state_packed(qw, kw, vw, *, t: int,
         return state, y
 
     dh = qw.shape[-1]
-    state0 = jnp.zeros((t,) + qw.shape[1:3] + (dh, dh), jnp.float32)
+    state0 = state
+    if state0 is None:
+        state0 = jnp.zeros((t,) + qw.shape[1:3] + (dh, dh), jnp.float32)
     state, ys = jax.lax.scan(step, state0, (qc, kc, vc))
     out = ys.transpose(1, 2, 3, 0, 4, 5).reshape(
         (t,) + qw.shape[1:3] + (nc * chunk, dh))[:, :, :, :s]

@@ -32,14 +32,15 @@ from repro.engine.backend import (
     JNP, JNP_PACKED, PALLAS, PALLAS_PACKED, Backend,
     resolve as resolve_backend, spike_allgather, spike_shard, ssa_apply,
     ssa_apply_packed, ssa_decode_step, ssa_decode_step_packed,
-    ssa_prefill_apply, ssa_prefill_apply_packed, ssa_prefill_state,
-    ssa_prefill_state_packed, unit_partition_specs, word_allgather, word_psum,
-    word_reduce_scatter,
+    ssa_prefill_apply, ssa_prefill_apply_packed, ssa_prefill_chunk,
+    ssa_prefill_chunk_packed, ssa_prefill_state, ssa_prefill_state_packed,
+    unit_partition_specs, word_allgather, word_psum, word_reduce_scatter,
 )
 from repro.engine.execute import (
     DecodeState, apply, decode_state_batch_init, decode_state_gather,
     decode_state_init, decode_state_scatter, decode_step, make_apply_fn,
-    make_decode_step_fn, make_prefill_fn, prefill,
+    make_decode_step_fn, make_prefill_chunk_fn, make_prefill_fn, prefill,
+    prefill_chunk,
 )
 from repro.engine.layout import (
     ProjUnit, SpikeEdge, TokStage, block_layout, lm_block_layout,
@@ -54,12 +55,14 @@ __all__ = [
     "JNP", "JNP_PACKED", "PALLAS", "PALLAS_PACKED", "Backend",
     "resolve_backend", "spike_allgather", "spike_shard", "ssa_apply",
     "ssa_apply_packed", "ssa_decode_step", "ssa_decode_step_packed",
-    "ssa_prefill_apply", "ssa_prefill_apply_packed", "ssa_prefill_state",
+    "ssa_prefill_apply", "ssa_prefill_apply_packed", "ssa_prefill_chunk",
+    "ssa_prefill_chunk_packed", "ssa_prefill_state",
     "ssa_prefill_state_packed", "unit_partition_specs", "word_allgather",
     "word_psum", "word_reduce_scatter",
     "DecodeState", "apply", "decode_state_batch_init", "decode_state_gather",
     "decode_state_init", "decode_state_scatter", "decode_step",
-    "make_apply_fn", "make_decode_step_fn", "make_prefill_fn", "prefill",
+    "make_apply_fn", "make_decode_step_fn", "make_prefill_chunk_fn",
+    "make_prefill_fn", "prefill", "prefill_chunk",
     "ProjUnit", "SpikeEdge", "TokStage", "block_layout", "lm_block_layout",
     "lm_decode_spike_edges", "lm_spike_edges", "spike_edges",
     "tokenizer_layout",

@@ -217,6 +217,39 @@ def decode_slot_report(plan, *, slots: int, budget_bytes: int | None = None,
     return report
 
 
+def prefill_chunk_report(plan, *, seq_len: int, chunk: int,
+                         batch: int = 1) -> dict:
+    """Resident-memory accounting of chunked vs one-shot prefill at prompt
+    length ``seq_len``: the dominant activation plane of an LM prefill is a
+    (T, B, S, d_model) f32 spike/drive tensor per block edge, so one-shot
+    residency scales with S while the chunked path holds only a C-token
+    plane plus the O(d^2) carried ``DecodeState`` -- flat in S.  Analytic
+    (the jaxpr flatness check is the structural proof; this prices it), so
+    the 500k row costs nothing to produce.  ``chunk_buckets`` is the
+    warm-shape bill (the chunk size plus the ragged tail, if any)."""
+    meta = plan.meta
+    entry = meta.decode
+    if entry is None:
+        raise ValueError("prefill-chunk stats are an LM-plan mode "
+                         f"(family={meta.family!r})")
+    cfg = meta.cfg.arch
+    t, d = cfg.spike_t, cfg.d_model
+    plane = 4 * t * batch * d                       # bytes per token column
+    full, ragged = divmod(seq_len, chunk)
+    buckets = ([chunk] if full else []) + ([ragged] if ragged else [])
+    return {
+        "seq_len": seq_len,
+        "chunk": chunk,
+        "num_chunks": full + (1 if ragged else 0),
+        "chunk_buckets": buckets,
+        "state_bytes": entry.state_bytes(batch),
+        "oneshot_plane_bytes": plane * seq_len,
+        "chunked_plane_bytes": plane * chunk + entry.state_bytes(batch),
+        "plane_reduction": (plane * seq_len
+                            / (plane * chunk + entry.state_bytes(batch))),
+    }
+
+
 def _traffic_sharding(mesh, family: str):
     """Coerce a traffic function's ``mesh=`` argument into the family's
     resolved ``ShardingCfg`` (None passes through)."""

@@ -468,6 +468,62 @@ def ssa_prefill_apply_packed(backend: Backend, qp: packing.PackedSpikes,
     return ssa_prefill_apply(backend, q, k, v, scale=scale, ordering=ordering)
 
 
+def ssa_prefill_chunk(backend: Backend, state: jax.Array, q: jax.Array,
+                      k: jax.Array, v: jax.Array, *, scale: float,
+                      ordering: str):
+    """One resumable prefill chunk: causal SSA over ``q/k/v`` of a chunk of
+    the prompt, seeded by the running K^T V ``state`` of everything already
+    consumed.  Returns ``(drive, state')`` -- feeding a prompt through this
+    in any chunking yields per-chunk drives and a final state bit-equal to
+    :func:`ssa_prefill_apply` over the whole prompt at once (binary spikes:
+    exact integer sums in any association).
+
+    Linear ordering seeds the existing scan carry directly; quadratic pays
+    the intra-chunk N^2 score plus one cross-prefix state read
+    (:func:`~repro.core.spiking_attention.ssa_state_read`) and one state
+    GEMM -- N is now the CHUNK length, so memory is flat in the prompt."""
+    if ordering == "linear":
+        from repro.core.spiking_attention import ssa_causal_linear_with_state
+
+        return ssa_causal_linear_with_state(q, k, v, scale=scale, state=state)
+    from repro.core.spiking_attention import ssa_state_read
+
+    drive = ssa_apply(backend, q, k, v, scale=scale, ordering=ordering,
+                      causal=True)
+    drive = drive + ssa_state_read(state, q, scale=scale)
+    return drive, state + ssa_prefill_state(backend, k, v)
+
+
+def ssa_prefill_chunk_packed(backend: Backend, state: jax.Array,
+                             qp: packing.PackedSpikes,
+                             kp: packing.PackedSpikes,
+                             vp: packing.PackedSpikes, *, scale: float,
+                             ordering: str):
+    """Packed-train counterpart of :func:`ssa_prefill_chunk`: under the
+    closed boundary the chunk's uint32 words are the operands everywhere --
+    the linear route seeds the packed scan carry, the quadratic route runs
+    the packed kernel plus word-consuming cross-prefix read and state GEMM
+    -- so the 1/min(t,32) HBM read survives chunked long-prompt prefill.
+    Otherwise the chunk is unpacked at the op boundary."""
+    if ordering == "linear" and backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import (
+            ssa_causal_linear_with_state_packed)
+
+        return ssa_causal_linear_with_state_packed(
+            qp.words, kp.words, vp.words, t=qp.t, scale=scale, state=state)
+    if ordering == "quadratic" and backend.closes_ssa_boundary:
+        from repro.core.spiking_attention import ssa_state_read_packed
+
+        drive = ssa_apply_packed(backend, qp, kp, vp, scale=scale,
+                                 ordering=ordering, causal=True)
+        drive = drive + ssa_state_read_packed(state, qp.words, t=qp.t,
+                                              scale=scale)
+        return drive, state + ssa_prefill_state_packed(backend, kp, vp)
+    q, k, v = (packing.unpack(p) for p in (qp, kp, vp))
+    return ssa_prefill_chunk(backend, state, q, k, v, scale=scale,
+                             ordering=ordering)
+
+
 def normed_linear_apply(backend: Backend, p, x2d: jax.Array, *,
                         eps: float) -> jax.Array:
     """Folded Linear+RMSNorm unit (``fold_linear_rmsnorm``) on tick-folded

@@ -631,6 +631,24 @@ def _decode_ssa(meta: PlanMeta, packed: bool, kv, out_kv: list):
     return ssa
 
 
+def _chunk_ssa(meta: PlanMeta, packed: bool, kv, out_kv: list):
+    """Walker attention for one resumable prefill chunk: intra-chunk causal
+    SSA seeded by the layer's running K^T V state (the scan carry on the
+    linear ordering, a cross-prefix state read on the quadratic), capturing
+    the advanced state -- :func:`_prefill_ssa` and :func:`_decode_ssa`'s
+    middle ground."""
+
+    def ssa(q, k, v):
+        op = B.ssa_prefill_chunk_packed if packed else B.ssa_prefill_chunk
+        drive, new_kv = op(meta.backend, kv, q, k, v,
+                           scale=meta.cfg.attn_scale,
+                           ordering=meta.cfg.attn_ordering)
+        out_kv.append(new_kv)
+        return drive
+
+    return ssa
+
+
 def _lm_prefill(meta: PlanMeta, params, tokens, *, ops: _MeshOps = _NULL_OPS):
     """tokens (B, S) -> (logits (B, S, V), DecodeState after the prompt).
 
@@ -649,6 +667,35 @@ def _lm_prefill(meta: PlanMeta, params, tokens, *, ops: _MeshOps = _NULL_OPS):
     state = DecodeState(kv=tuple(kvs),
                         pos=jnp.asarray(tokens.shape[1], jnp.int32))
     return logits, state
+
+
+def _lm_prefill_chunk(meta: PlanMeta, params, state: DecodeState, tokens, *,
+                      ops: _MeshOps = _NULL_OPS):
+    """One prefill chunk: tokens (B, C) of the prompt's NEXT C tokens ->
+    (logits (B, C, V), advanced DecodeState).
+
+    Chained over a prompt split any way, the per-chunk logits concatenate to
+    :func:`_lm_prefill`'s and the final state is bit-equal -- everything in
+    the block except SSA is positionally local, and the SSA carry is exact
+    integer arithmetic on binary spikes.  The chunk's jaxpr mentions only C,
+    never the full prompt length, so a 500k prompt runs as S/C warm-shaped
+    steps with memory flat in S (the flatness check in the bench asserts
+    this on the jaxpr)."""
+    packed = meta.backend.packed
+    entry = _decode_entry(meta)
+    if len(state.kv) != entry.num_layers:
+        raise ValueError(
+            f"DecodeState carries {len(state.kv)} layer states, plan has "
+            f"{entry.num_layers} layers")
+    x = _lif(meta, _lm_embed_drive(meta, params["embed"], tokens),
+             pack_output=packed)
+    kvs: list = []
+    for bparams, kv in zip(params["blocks"], state.kv):
+        x = _lm_block_exec(meta, bparams, x, packed=packed,
+                           ssa=_chunk_ssa(meta, packed, kv, kvs), ops=ops)
+    logits = _lm_head(meta, params, _lm_rate(meta, params, x, packed=packed))
+    return logits, DecodeState(kv=tuple(kvs),
+                               pos=state.pos + tokens.shape[1])
 
 
 def _lm_decode_step(meta: PlanMeta, params, state: DecodeState, token, *,
@@ -769,6 +816,25 @@ def make_prefill_fn(plan: DeployPlan):
         out_specs=(P(da, None, None), _decode_state_specs(meta)))
 
 
+def make_prefill_chunk_fn(plan: DeployPlan):
+    """Pure ``fn(params, state, tokens) -> (logits, state')`` scoring the
+    prompt's next chunk against the running state -- ONE warm shape per
+    chunk size serves any prompt length.  Sharded plans run under shard_map
+    with the state resident on its head shard, like the decode step."""
+    meta = plan.meta
+    _decode_entry(meta)
+    if meta.sharding is None:
+        return functools.partial(_lm_prefill_chunk, meta)
+    from jax.sharding import PartitionSpec as P
+
+    da = meta.sharding.data_axis
+    state_specs = _decode_state_specs(meta)
+    return _shard_mapped(
+        meta, functools.partial(_lm_prefill_chunk, meta),
+        batch_specs=(state_specs, P(da, None)),
+        out_specs=(P(da, None, None), state_specs))
+
+
 def make_decode_step_fn(plan: DeployPlan):
     """Pure ``fn(params, state, token) -> (logits, state')`` -- ONE warm
     shape per batch size serves the whole decode, at any context length.
@@ -791,6 +857,13 @@ def make_decode_step_fn(plan: DeployPlan):
 def prefill(plan: DeployPlan, tokens) -> tuple[jax.Array, DecodeState]:
     """One-shot convenience: score a prompt and initialise decode state."""
     return make_prefill_fn(plan)(plan.params, jnp.asarray(tokens))
+
+
+def prefill_chunk(plan: DeployPlan, state: DecodeState,
+                  tokens) -> tuple[jax.Array, DecodeState]:
+    """One-shot convenience: consume the prompt's next chunk resumably."""
+    return make_prefill_chunk_fn(plan)(plan.params, state,
+                                       jnp.asarray(tokens))
 
 
 def decode_step(plan: DeployPlan, state: DecodeState, token):

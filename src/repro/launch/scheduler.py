@@ -32,6 +32,18 @@ admission order interleaves.  Greedy outputs are bit-exact per request vs
 the synchronous-slots path (and the single-stream loop): batch rows are
 independent through every engine op, which ``tests/test_serving.py`` locks
 down.
+
+**Decode-interleaved chunked admission** (``prefill_chunk=C``): instead of
+scoring a whole prompt in one graph on the decode thread -- where a 500k
+admission stalls every live slot for the full prefill -- an admitted prompt
+advances ONE C-token resumable chunk (``engine.prefill_chunk``) per
+scheduler tick, decode steps running between chunks.  The decode stall any
+single admission can cause is bounded by one chunk's latency, prefill
+memory is flat in the prompt length (the chunk jaxpr never mentions S), and
+the warm prefill shapes shrink from one per prompt-length bucket to one per
+CHUNK bucket (C plus each distinct ragged tail).  Token streams are
+bit-exact vs one-shot admission: the chunk carry is exact integer
+arithmetic on binary spikes.
 """
 
 from __future__ import annotations
@@ -123,6 +135,19 @@ class AdmissionQueue:
         return self._q.popleft()
 
 
+def _chunk_buckets(prompt_len: int, chunk: int) -> set[int]:
+    """The distinct chunk lengths a prompt prefills at under chunked
+    admission: the full chunk size (if the prompt spans at least one) plus
+    its ragged tail (if any) -- the warm-shape bill of a prompt bucket."""
+    full, ragged = divmod(prompt_len, chunk)
+    out = set()
+    if full:
+        out.add(chunk)
+    if ragged:
+        out.add(ragged)
+    return out
+
+
 class ContinuousScheduler:
     """Continuous-batching decode service over one compiled LM deploy plan.
 
@@ -134,7 +159,8 @@ class ContinuousScheduler:
     """
 
     def __init__(self, plan, *, slots: int = 4, max_pending: int = 64,
-                 admission: str = "reject", clock=time.perf_counter):
+                 admission: str = "reject", prefill_chunk: int | None = None,
+                 clock=time.perf_counter):
         meta = plan.meta
         if meta.decode is None:
             raise ValueError(
@@ -150,12 +176,21 @@ class ContinuousScheduler:
             raise ValueError(
                 f"slots={slots} must be a positive multiple of the mesh data "
                 f"degree {self.data_par} (the step batch shards over it)")
+        if prefill_chunk is not None and prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1 (tokens), got {prefill_chunk}")
         self.slots = slots
         self.queue = AdmissionQueue(max_pending, admission)
         self._clock = clock
+        self._t0 = self._clock()                      # run() resets this
         self._prefill = jax.jit(engine.make_prefill_fn(plan))
         self._step = jax.jit(engine.make_decode_step_fn(plan))
         self._scatter = jax.jit(engine.decode_state_scatter)
+        self.prefill_chunk = prefill_chunk
+        self._prefill_chunk = (jax.jit(engine.make_prefill_chunk_fn(plan))
+                               if prefill_chunk is not None else None)
+        # in-flight chunked admission: [request, running state, offset]
+        self._partial: list | None = None
         self.state = engine.decode_state_batch_init(meta, slots)
         self._tok = np.zeros((slots,), np.int32)      # next feed per slot
         self._active: list[Request | None] = [None] * slots
@@ -168,22 +203,38 @@ class ContinuousScheduler:
         self.active_slot_steps = 0                    # occupancy numerator
         self.prefill_s = 0.0
         self.decode_s = 0.0
+        self.prefill_chunks = 0                       # chunk steps run
+        self.stall_s: list[float] = []                # per-tick admission work
 
     # -- shape warming --------------------------------------------------------
 
     def warm(self, prompt_lens) -> int:
         """Trace-warm every shape serving will touch: one prefill + scatter
-        shape per DISTINCT prompt-length bucket, one step shape for the slot
-        batch.  Returns the number of prefill shapes warmed (ragged lengths
-        that bucket identically warm once)."""
+        shape per DISTINCT prompt-length bucket -- or, under chunked
+        admission, per distinct CHUNK bucket (the chunk size plus each
+        ragged tail), which no longer grows with the prompt lengths -- and
+        one step shape for the slot batch.  Returns the number of prefill
+        shapes warmed (lengths that bucket identically warm once)."""
         meta = self.plan.meta
         warmed = 0
-        for s in sorted({int(s) for s in prompt_lens}):
-            tokens = jnp.zeros((self.data_par, s), jnp.int32)
-            logits, st = self._prefill(self.plan.params, tokens)
-            scratch = engine.decode_state_batch_init(meta, self.slots)
-            jax.block_until_ready(self._scatter(scratch, 0, st, 0).pos)
-            warmed += 1
+        if self.prefill_chunk is None:
+            for s in sorted({int(s) for s in prompt_lens}):
+                tokens = jnp.zeros((self.data_par, s), jnp.int32)
+                logits, st = self._prefill(self.plan.params, tokens)
+                scratch = engine.decode_state_batch_init(meta, self.slots)
+                jax.block_until_ready(self._scatter(scratch, 0, st, 0).pos)
+                warmed += 1
+        else:
+            buckets: set[int] = set()
+            for s in {int(s) for s in prompt_lens}:
+                buckets |= _chunk_buckets(s, self.prefill_chunk)
+            for c in sorted(buckets):
+                tokens = jnp.zeros((self.data_par, c), jnp.int32)
+                st = engine.decode_state_init(meta, self.data_par)
+                logits, st = self._prefill_chunk(self.plan.params, st, tokens)
+                scratch = engine.decode_state_batch_init(meta, self.slots)
+                jax.block_until_ready(self._scatter(scratch, 0, st, 0).pos)
+                warmed += 1
         jax.block_until_ready(self._step(
             self.plan.params, self.state, jnp.asarray(self._tok))[0])
         return warmed
@@ -210,15 +261,18 @@ class ContinuousScheduler:
             seq = jnp.repeat(seq, self.data_par, axis=0)
         return seq
 
-    def _admit_one(self, req: Request, now: float) -> None:
-        t0 = self._clock()
-        logits, st = self._prefill(self.plan.params,
-                                   self._pad_prompt_batch(req.prompt))
-        tok0 = int(jax.block_until_ready(greedy(logits[:, -1]))[0])
-        self.prefill_s += self._clock() - t0
+    def _now(self) -> float:
+        """Seconds since the current run started -- re-read at every stamp
+        (admissions earlier in the same drain must show up in later
+        requests' ``admit_s``/``first_token_s``, so no caller-cached time)."""
+        return self._clock() - self._t0
+
+    def _seat(self, req: Request, st, tok0: int) -> None:
+        """Finish an admission whose prefill produced state ``st`` and first
+        token ``tok0``: stamp TTFT off a FRESH clock read, retire instantly-
+        done requests, otherwise page the state into a freed slot."""
         self.admitted += 1
-        req.admit_s = now
-        req.first_token_s = now + (self._clock() - t0)
+        req.first_token_s = self._now()
         req.tokens.append(tok0)
         if req.done:                       # max_new == 1 (or instant EOS):
             req.finish_s = req.first_token_s   # never occupies a slot
@@ -229,13 +283,53 @@ class ContinuousScheduler:
         self._tok[slot] = tok0
         self._active[slot] = req
 
-    def _admit(self, now: float) -> None:
+    def _admit_one(self, req: Request) -> None:
+        req.admit_s = self._now()
+        t0 = self._clock()
+        logits, st = self._prefill(self.plan.params,
+                                   self._pad_prompt_batch(req.prompt))
+        tok0 = int(jax.block_until_ready(greedy(logits[:, -1]))[0])
+        self.prefill_s += self._clock() - t0
+        self._seat(req, st, tok0)
+
+    def _advance_partial(self) -> None:
+        """Chunked admission: advance the in-flight prompt by ONE resumable
+        prefill chunk (starting a new one from the queue if the slot budget
+        allows), then return to decode -- the decode stall per tick is
+        bounded by a single chunk's latency, whatever the prompt length."""
+        if self._partial is None:
+            if not (self._free and len(self.queue)):
+                return
+            req = self.queue.pop()
+            req.admit_s = self._now()
+            st = engine.decode_state_init(self.plan.meta, self.data_par)
+            self._partial = [req, st, 0]
+        req, st, off = self._partial
+        tokens = req.prompt[off:off + self.prefill_chunk]
+        t0 = self._clock()
+        logits, st = self._prefill_chunk(self.plan.params, st,
+                                         self._pad_prompt_batch(tokens))
+        jax.block_until_ready(st.kv)       # honest per-chunk stall timing
+        self.prefill_s += self._clock() - t0
+        self.prefill_chunks += 1
+        off += int(np.shape(tokens)[0])
+        if off < req.prompt_len:
+            self._partial = [req, st, off]
+            return
+        self._partial = None
+        tok0 = int(jax.block_until_ready(greedy(logits[:, -1]))[0])
+        self._seat(req, st, tok0)
+
+    def _admit(self) -> None:
+        if self.prefill_chunk is not None:
+            self._advance_partial()        # at most ONE chunk per tick
+            return
         while self._free and len(self.queue):
-            self._admit_one(self.queue.pop(), now)
+            self._admit_one(self.queue.pop())
 
     # -- decode ---------------------------------------------------------------
 
-    def _decode_tick(self, now: float) -> None:
+    def _decode_tick(self) -> None:
         """One batched decode step + harvest: every ACTIVE slot appends its
         greedy token; finished requests retire and free their slot (ragged
         eviction -- the batch keeps stepping without them)."""
@@ -243,10 +337,10 @@ class ContinuousScheduler:
         logits, self.state = self._step(self.plan.params, self.state,
                                         jnp.asarray(self._tok))
         nxt = np.asarray(jax.block_until_ready(greedy(logits)))
-        dt = self._clock() - t0
-        self.decode_s += dt
+        self.decode_s += self._clock() - t0
         self.steps += 1
         self.active_slot_steps += self.num_active
+        done_s = self._now()
         for slot, req in enumerate(self._active):
             if req is None:
                 continue
@@ -254,7 +348,7 @@ class ContinuousScheduler:
             req.tokens.append(tok)
             self._tok[slot] = tok
             if req.done:
-                req.finish_s = now + dt
+                req.finish_s = done_s
                 self._active[slot] = None
                 self._free.append(slot)
                 self.completed.append(req)
@@ -271,9 +365,10 @@ class ContinuousScheduler:
         as live traffic would drive them.  Returns the completed requests
         (rejected ones accumulate on ``self.rejected``)."""
         arrivals = deque(sorted(requests, key=lambda r: (r.arrival_s, r.rid)))
-        t0 = self._clock()
-        while arrivals or len(self.queue) or self.num_active:
-            now = self._clock() - t0
+        self._t0 = self._clock()
+        while (arrivals or len(self.queue) or self.num_active
+               or self._partial is not None):
+            now = self._now()
             while arrivals and (not open_loop
                                 or arrivals[0].arrival_s <= now):
                 req = arrivals[0]
@@ -283,11 +378,15 @@ class ContinuousScheduler:
                     arrivals.popleft()        # dropped: counted on .rejected
                 else:
                     break                     # defer: retry after the tick
-            self._admit(now)
+            p0 = self.prefill_s
+            self._admit()
+            if self.prefill_s > p0:           # this tick's admission stall
+                self.stall_s.append(self.prefill_s - p0)
             if self.num_active:
-                self._decode_tick(self._clock() - t0)
-            elif arrivals and open_loop and not len(self.queue):
-                wait = arrivals[0].arrival_s - (self._clock() - t0)
+                self._decode_tick()
+            elif (arrivals and open_loop and not len(self.queue)
+                  and self._partial is None):
+                wait = arrivals[0].arrival_s - self._now()
                 if wait > 0:
                     time.sleep(min(wait, 1e-3))
         return self.completed
@@ -308,4 +407,6 @@ class ContinuousScheduler:
             "prefill_s": self.prefill_s,
             "decode_s": self.decode_s,
             "new_tokens": sum(len(r.tokens) for r in self.completed),
+            "prefill_chunk": self.prefill_chunk,
+            "prefill_chunks": self.prefill_chunks,
         }

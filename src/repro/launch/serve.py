@@ -404,6 +404,7 @@ def serve_spiking_lm_continuous(arch: str, *, num_requests: int,
                                 seed: int = 0, prompt_lens=None,
                                 max_new_spread: int = 0,
                                 max_pending: int | None = None,
+                                prefill_chunk: int | None = None,
                                 verbose: bool = True,
                                 return_stats: bool = False):
     """Serve a spiking LM with CONTINUOUS batching (greedy decode).
@@ -417,8 +418,12 @@ def serve_spiking_lm_continuous(arch: str, *, num_requests: int,
     outputs are bit-exact per request vs the synchronous-slots path.
 
     ``prompt_lens`` (defaults to ``[prompt_len]``) cycles mixed prompt-length
-    buckets across requests; ``max_new_spread`` staggers per-request decode
-    lengths to force ragged completion.
+    buckets across requests -- the MULTISET as given, so repeated lengths
+    keep their requested mixture ratio (dedup happens only for shape
+    warming); ``max_new_spread`` staggers per-request decode lengths to
+    force ragged completion.  ``prefill_chunk`` switches admission to
+    decode-interleaved chunked prefill (one resumable chunk per scheduler
+    tick -- bounds the decode stall of a long-prompt admission).
     """
     from repro import engine
     from repro.launch.scheduler import ContinuousScheduler
@@ -426,7 +431,9 @@ def serve_spiking_lm_continuous(arch: str, *, num_requests: int,
     cfg, plan, data_par, slots = _compile_lm_serving(
         arch, backend=backend, ordering=ordering, mesh=mesh, slots=slots,
         seed=seed, verbose=verbose)
-    lens = sorted({int(s) for s in (prompt_lens or [prompt_len])})
+    # the requested mixture, verbatim -- sorted({...}) here would collapse
+    # "32,32,64" (a 2:1 mix) into a 1:1 cycle
+    lens = [int(s) for s in (prompt_lens or [prompt_len])]
     dcfg = DataConfig(seed=seed, vocab_size=cfg.vocab_size, seq_len=max(lens),
                       global_batch=num_requests)
     prompts = make_batch(dcfg, 0)["tokens"]
@@ -436,8 +443,9 @@ def serve_spiking_lm_continuous(arch: str, *, num_requests: int,
     sched = ContinuousScheduler(
         plan, slots=slots,
         max_pending=max_pending if max_pending is not None
-        else max(num_requests, 1))
-    warmed = sched.warm(lens)
+        else max(num_requests, 1),
+        prefill_chunk=prefill_chunk)
+    warmed = sched.warm(sorted(set(lens)))
     t0 = time.perf_counter()
     completed = sched.run(reqs)
     dt = time.perf_counter() - t0
@@ -486,6 +494,12 @@ def main():
     ap.add_argument("--max-pending", type=int, default=None,
                     help="admission-queue bound for --continuous "
                          "(backpressure; default: no practical bound)")
+    ap.add_argument("--prefill-chunk", type=int, default=None, metavar="C",
+                    help="decode-interleaved chunked admission for "
+                         "--continuous: prefill advances one resumable "
+                         "C-token chunk per scheduler tick, bounding the "
+                         "decode stall of a long-prompt admission (memory "
+                         "flat in prompt length; default: one-shot prefill)")
     ap.add_argument("--backend", default="jnp",
                     choices=("jnp", "pallas", "jnp+packed", "pallas+packed",
                              "jnp+packed+sparse", "pallas+packed+sparse"),
@@ -518,7 +532,8 @@ def main():
                 slots=args.slots, backend=args.backend,
                 ordering=args.ordering, mesh=args.mesh, prompt_lens=lens,
                 max_new_spread=args.max_new_spread,
-                max_pending=args.max_pending)
+                max_pending=args.max_pending,
+                prefill_chunk=args.prefill_chunk)
             return
         serve_spiking_lm(args.arch, num_requests=args.requests,
                          prompt_len=args.prompt_len, max_new=args.max_new,

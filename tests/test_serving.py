@@ -55,10 +55,11 @@ def _small_cfg(t=4):
 
 
 @functools.lru_cache(maxsize=None)
-def _small_plan(t=4, ordering="linear"):
+def _small_plan(t=4, ordering="linear", backend=None):
     cfg = _small_cfg(t)
     params = slm.init_spiking_lm(KEY, cfg)
-    return engine.compile_plan(params, None, cfg, ordering=ordering)
+    return engine.compile_plan(params, None, cfg, ordering=ordering,
+                               backend=backend)
 
 
 def _prompt(rid, s):
@@ -294,15 +295,17 @@ def test_scheduler_property_no_loss_no_dup_bit_exact():
         max_news=st.lists(st.integers(1, 5), min_size=6, max_size=6),
         order=st.permutations(list(range(6))),
         max_pending=st.integers(1, 6),
+        chunk=st.one_of(st.none(), st.integers(1, 6)),
     )
-    def check(slots, n, lens, max_news, order, max_pending):
+    def check(slots, n, lens, max_news, order, max_pending, chunk):
         reqs = [Request(rid=i, prompt=_prompt(i, lens[i % len(lens)]),
                         max_new=max_news[i],
                         arrival_s=float(order[i]))    # admission order
                 for i in range(n)]
         sched = ContinuousScheduler(plan, slots=slots,
                                     max_pending=max_pending,
-                                    admission="defer")
+                                    admission="defer",
+                                    prefill_chunk=chunk)
         done = sched.run(reqs)
         assert sorted(r.rid for r in done) == list(range(n))
         assert len(sched._free) == slots
@@ -500,3 +503,237 @@ def test_max_slots_exact():
     assert entry.max_slots(per - 1) == 0
     assert entry.max_slots(per) == 1
     assert entry.max_slots(7 * per + per - 1) == 7
+
+
+# -- chunked resumable prefill (ISSUE 10) --------------------------------------
+
+def _chunked_prefill(plan, prompt, chunk):
+    """Reference driver: feed ``prompt`` (B, S) through ``engine.prefill_chunk``
+    in C-token pieces (ragged tail included), concatenating the logits."""
+    st = engine.decode_state_init(plan.meta, prompt.shape[0])
+    outs = []
+    for lo in range(0, prompt.shape[1], chunk):
+        logits, st = engine.prefill_chunk(plan, st, prompt[:, lo:lo + chunk])
+        outs.append(logits)
+    return jnp.concatenate(outs, axis=1), st
+
+
+@pytest.mark.parametrize("backend", [None, "jnp+packed", "pallas+packed",
+                                     "pallas+packed+sparse"])
+@pytest.mark.parametrize("ordering", ["linear", "quadratic"])
+def test_prefill_chunk_bit_exact(backend, ordering):
+    """THE resumability lockdown: chunked prefill (ragged tail included)
+    concatenates to one-shot prefill's logits and reproduces its DecodeState
+    bit-for-bit -- on every backend and both orderings, because the chunk
+    carry is exact integer arithmetic on binary spikes."""
+    plan = _small_plan(4, ordering, backend)
+    prompt = jnp.asarray(np.stack([_prompt(0, 13), _prompt(1, 13)]))
+    want_logits, want = engine.prefill(plan, prompt)
+    got_logits, got = _chunked_prefill(plan, prompt, 5)      # 5+5+3 ragged
+    np.testing.assert_array_equal(np.asarray(got_logits),
+                                  np.asarray(want_logits))
+    for a, b in zip(got.kv, want.kv):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(got.pos) == int(want.pos) == 13
+
+
+def test_prefill_chunk_property_bit_exact():
+    """Hypothesis property: ``chunked_prefill(p, C) == prefill(p)`` (logits
+    AND DecodeState, bit-exact) over random prompt lengths, chunk sizes
+    including C=1, ragged tails, C >= S, and multi-word packed trains
+    (T=40 spans two uint32 bitplane words)."""
+    pytest.importorskip("hypothesis")
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        t=st.sampled_from([1, 8, 32, 40]),
+        ordering=st.sampled_from(["linear", "quadratic"]),
+        backend=st.sampled_from([None, "pallas+packed"]),
+        s=st.integers(1, 40),
+        c=st.sampled_from(["1", "4", "13", "512", "S", "S+7"]),
+    )
+    def check(t, ordering, backend, s, c):
+        chunk = {"S": s, "S+7": s + 7}.get(c) or int(c)
+        plan = _small_plan(t, ordering, backend)
+        prompt = jnp.asarray(_prompt(s, s))[None]
+        want_logits, want = engine.prefill(plan, prompt)
+        got_logits, got = _chunked_prefill(plan, prompt, chunk)
+        np.testing.assert_array_equal(np.asarray(got_logits),
+                                      np.asarray(want_logits))
+        for a, b in zip(got.kv, want.kv):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert int(got.pos) == int(want.pos) == s
+
+    check()
+
+
+def test_prefill_chunk_jaxpr_flat_in_prompt_len():
+    """Structural flatness (the PR-5 check, prefill edition): the chunk
+    step's jaxpr -- traced AFTER a long prefix has been consumed -- mentions
+    the CHUNK length but never the full prompt length, so a 500k prompt's
+    memory is set by C, not S."""
+    plan = _small_plan()
+    long_s, chunk = 37, 5          # 37 collides with no model/chunk dim
+    _, st = engine.prefill(plan, jnp.asarray(_prompt(0, long_s))[None])
+    fn = engine.make_prefill_chunk_fn(plan)
+    tokens = jnp.zeros((1, chunk), jnp.int32)
+    dims = analysis.jaxpr_dims(fn, plan.params, st, tokens)
+    assert chunk in dims
+    assert long_s not in dims
+    assert int(st.pos) == long_s
+
+
+def test_scheduler_chunked_interleaves_with_decode():
+    """Decode-interleaved admission: with a decode in flight, a long-prompt
+    admission advances AT MOST ONE prefill chunk per scheduler tick (decode
+    steps strictly interleave the chunks), and every request's tokens still
+    equal the single-stream reference."""
+    plan = _small_plan()
+    reqs = [Request(rid=0, prompt=_prompt(0, 3), max_new=12),
+            Request(rid=1, prompt=_prompt(1, 11), max_new=4)]  # 3+3+3+2 chunks
+    sched = ContinuousScheduler(plan, slots=2, max_pending=8, prefill_chunk=3)
+    chunk_steps = []
+    orig = sched._prefill_chunk
+
+    def counting(params, st, tokens):
+        chunk_steps.append(sched.steps)
+        return orig(params, st, tokens)
+
+    sched._prefill_chunk = counting
+    done = {r.rid: r for r in sched.run(reqs)}
+    assert sorted(done) == [0, 1]
+    for rid, r in done.items():
+        assert r.tokens == _reference_decode(plan, r.prompt, r.max_new), rid
+    # request 0 admits on tick 1 (one chunk); request 1's four chunks then
+    # land on four DISTINCT decode ticks -- never two chunks between steps
+    assert len(chunk_steps) == 5
+    assert chunk_steps == sorted(set(chunk_steps))
+    assert sched.stats()["prefill_chunks"] == 5
+    # TTFT ordering survives interleaving: rid 0 seats before rid 1
+    assert done[0].first_token_s < done[1].first_token_s
+
+
+def test_scheduler_chunked_warm_buckets():
+    """Chunked warming bills one shape per CHUNK bucket (C plus each ragged
+    tail), not per prompt length -- 5 and 7 at C=3 share the full-chunk
+    shape and add tails 2 and 1."""
+    plan = _small_plan()
+    sched = ContinuousScheduler(plan, slots=2, prefill_chunk=3)
+    assert sched.warm([5, 7, 5]) == 3            # shapes {3, 2, 1}
+    sched2 = ContinuousScheduler(plan, slots=2, prefill_chunk=4)
+    assert sched2.warm([8, 12]) == 1             # all chunks full: {4}
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ContinuousScheduler(plan, slots=2, prefill_chunk=0)
+
+
+def test_admit_ttft_monotone_across_drain():
+    """Satellite regression (stale-``now`` TTFT): requests admitted in ONE
+    drain must each read a fresh clock -- ``admit_s``/``first_token_s``
+    strictly increase across the drain and TTFT includes the preceding
+    prefills' time.  The old code stamped every admission with the loop-entry
+    ``now``, so a drain's requests all reported identical timestamps."""
+    plan = _small_plan()
+
+    ticks = [0.0]
+
+    def clock():
+        ticks[0] += 1.0
+        return ticks[0]
+
+    reqs = [Request(rid=i, prompt=_prompt(i, 4), max_new=2) for i in range(3)]
+    sched = ContinuousScheduler(plan, slots=4, max_pending=8, clock=clock)
+    done = sorted(sched.run(reqs), key=lambda r: r.rid)
+    admits = [r.admit_s for r in done]
+    firsts = [r.first_token_s for r in done]
+    assert admits == sorted(admits) and len(set(admits)) == 3
+    assert firsts == sorted(firsts) and len(set(firsts)) == 3
+    for r in done:
+        assert r.first_token_s > r.admit_s       # prefill time is visible
+
+
+def test_continuous_prompt_lens_multiset_preserved(monkeypatch):
+    """Satellite regression (prompt-length mixture corruption):
+    ``--prompt-lens 4,4,7`` is a 2:1 mixture and must reach
+    ``serving_requests`` as the full multiset (the old ``sorted({...})``
+    collapsed it to a 1:1 cycle); dedup applies only to shape warming."""
+    import collections
+
+    seen = {}
+    orig = serve_mod.serving_requests
+
+    def spy(prompts, *, prompt_lens, **kw):
+        seen["lens"] = list(prompt_lens)
+        reqs = orig(prompts, prompt_lens=prompt_lens, **kw)
+        seen["hist"] = collections.Counter(r.prompt_len for r in reqs)
+        return reqs
+
+    monkeypatch.setattr(serve_mod, "serving_requests", spy)
+    done, stats = serve_mod.serve_spiking_lm_continuous(
+        "llama3.2-1b_smoke", num_requests=6, prompt_len=8,
+        prompt_lens=[4, 4, 7], max_new=2, slots=2, backend="jnp",
+        ordering="linear", verbose=False, return_stats=True)
+    assert seen["lens"] == [4, 4, 7]             # multiset, order preserved
+    assert seen["hist"] == {4: 4, 7: 2}          # the requested 2:1 mixture
+    assert stats["warm_prefill_shapes"] == 2     # warming deduped to {4, 7}
+    assert len(done) == 6
+
+
+def test_serve_continuous_chunked_matches_oneshot():
+    """Serve-entry-point equivalence: ``--prefill-chunk`` changes scheduling
+    only -- token streams are bit-exact vs one-shot admission, and the warm
+    bill shrinks to the chunk buckets."""
+    kw = dict(num_requests=5, prompt_len=8, prompt_lens=[4, 8], max_new=3,
+              slots=2, backend="jnp", ordering="linear", verbose=False)
+    base = dict(serve_mod.serve_spiking_lm_continuous(
+        "llama3.2-1b_smoke", **kw))
+    chunked, stats = serve_mod.serve_spiking_lm_continuous(
+        "llama3.2-1b_smoke", prefill_chunk=3, return_stats=True, **kw)
+    chunked = dict(chunked)
+    assert sorted(chunked) == sorted(base)
+    for rid in base:
+        np.testing.assert_array_equal(chunked[rid], np.asarray(base[rid]),
+                                      err_msg=f"rid={rid}")
+    assert stats["prefill_chunk"] == 3
+    assert stats["prefill_chunks"] > 0
+    assert stats["warm_prefill_shapes"] == 3     # buckets {3, 2, 1}
+
+
+def test_continuous_mesh_chunked_matches_single_device():
+    """Chunked admission composes with a data-parallel mesh: same tokens per
+    request as the single-device one-shot continuous path."""
+    _skip_under(2)
+    kw = dict(num_requests=3, prompt_len=5, max_new=3, slots=2,
+              backend="jnp", ordering="linear", verbose=False)
+    single = dict(serve_mod.serve_spiking_lm_continuous(
+        "llama3.2-1b_smoke", **kw))
+    meshed = dict(serve_mod.serve_spiking_lm_continuous(
+        "llama3.2-1b_smoke", mesh="2x1", prefill_chunk=2, **kw))
+    assert sorted(meshed) == sorted(single)
+    for rid in single:
+        np.testing.assert_array_equal(meshed[rid], single[rid],
+                                      err_msg=f"rid={rid}")
+
+
+def test_prefill_chunk_report():
+    plan = _small_plan()
+    rep = analysis.prefill_chunk_report(plan, seq_len=11, chunk=4)
+    assert rep["num_chunks"] == 3
+    assert rep["chunk_buckets"] == [4, 3]
+    assert rep["state_bytes"] == plan.meta.decode.state_bytes(1)
+    # residency flat in S: growing the prompt 64x leaves the chunked bytes
+    # unchanged while one-shot residency scales with it
+    long = analysis.prefill_chunk_report(plan, seq_len=4096, chunk=64)
+    assert long["chunked_plane_bytes"] == analysis.prefill_chunk_report(
+        plan, seq_len=64 * 4096, chunk=64)["chunked_plane_bytes"]
+    assert long["oneshot_plane_bytes"] > long["chunked_plane_bytes"]
+    assert long["plane_reduction"] > 1.0
+    exact = analysis.prefill_chunk_report(plan, seq_len=8, chunk=4)
+    assert exact["num_chunks"] == 2 and exact["chunk_buckets"] == [4]
+    from repro.core import spikformer as sf
+    vcfg = sf.SpikformerConfig(embed_dim=32, num_layers=1, num_heads=2, t=2)
+    vp, vs = sf.init(KEY, vcfg)
+    with pytest.raises(ValueError, match="LM-plan"):
+        analysis.prefill_chunk_report(engine.compile_plan(vp, vs, vcfg),
+                                      seq_len=8, chunk=4)
